@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: datasets, metrics, timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import training
+from repro.data.synthetic import make_splits
+
+
+def bench_data(name="bigann", *, dim=24, n_train=6000, n_db=4000,
+               n_query=128, seed=0):
+    """Reduced-dim stand-in splits, z-normalized with the train stats."""
+    xt, xb, xq, _ = make_splits(name, n_train=n_train, n_db=n_db,
+                                n_query=n_query, seed=seed)
+    xt = xt[:, :dim]
+    xb = xb[:, :dim]
+    xq = xq[:, :dim]
+    xt, (mu, sd) = training.normalize_dataset(xt)
+    xb = ((xb - mu) / sd).astype(np.float32)
+    xq = ((xq - mu) / sd).astype(np.float32)
+    gt = np.argmin(((xq[:, None] - xb[None]) ** 2).sum(-1), axis=1)
+    return xt, xb, xq, gt
+
+
+def mse(x, xhat) -> float:
+    return float(jnp.mean(jnp.sum((jnp.asarray(x) - xhat) ** 2, -1)))
+
+
+def recall_at(ids, gt, k=1) -> float:
+    ids = np.asarray(ids)[:, :k]
+    return float((ids == np.asarray(gt)[:, None]).any(1).mean())
+
+
+def timeit_us(fn, *args, reps=3, warmup=1) -> float:
+    """Median wall time in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)

@@ -1,0 +1,73 @@
+"""Fig. 4/5: Pareto front of MSE vs encoding time over (L, d_e/d_h, A, B),
+and Fig. S3 dynamic rates (--rates): MSE after m <= M steps."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, mse, timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import qinco, training
+
+
+def run_pareto(dim=24, M=4, K=16, epochs=2, seed=0):
+    xt, xb, xq, gt = bench_data("bigann", dim=dim, seed=seed)
+    xbj = jnp.asarray(xb)
+    rows = []
+    for (L, de, dh) in [(1, 24, 32), (2, 32, 48), (4, 48, 64)]:
+        cfg = tiny(d=dim, M=M, K=K, de=de, dh=dh, L=L, A_train=4, B_train=8,
+                   A_eval=8, B_eval=8, epochs=epochs, batch_size=512,
+                   name=f"pareto-L{L}")
+        params, _ = training.train(jax.random.key(seed), xt, cfg,
+                                   verbose=False)
+        for (A, B) in [(2, 2), (4, 4), (8, 8), (8, 16)]:
+            t_us = timeit_us(
+                lambda x: enc.encode(params, x, cfg, A, B)[0], xbj) / len(xb)
+            _, xhat, _ = enc.encode(params, xbj, cfg, A, B)
+            rows.append({"L": L, "de": de, "dh": dh, "A": A, "B": B,
+                         "enc_us": t_us, "mse": mse(xb, xhat)})
+    return rows
+
+
+def run_rates(dim=24, K=16, epochs=2, seed=0):
+    """Fig S3: a model trained at M=6 evaluated truncated to m<=6 vs models
+    trained at smaller M."""
+    xt, xb, xq, gt = bench_data("bigann", dim=dim, seed=seed)
+    xbj = jnp.asarray(xb)
+    out = {}
+    for M in (2, 4, 6):
+        cfg = tiny(d=dim, M=M, K=K, de=32, dh=48, L=2, A_train=4, B_train=8,
+                   A_eval=8, B_eval=8, epochs=epochs, batch_size=512,
+                   name=f"rates-M{M}")
+        params, _ = training.train(jax.random.key(seed), xt, cfg,
+                                   verbose=False)
+        codes, _, _ = enc.encode(params, xbj, cfg, 8, 8)
+        traj = qinco.decode_partial(params, codes, cfg)
+        out[M] = [float(jnp.mean(jnp.sum((xbj[:, None] - traj) ** 2, -1)
+                                 [:, m])) for m in range(M)]
+    return out
+
+
+def main(fast=True, rates=False):
+    if rates:
+        out = run_rates(epochs=1 if fast else 3)
+        print("trained_M,m,mse")
+        for M, arr in out.items():
+            for m, v in enumerate(arr):
+                print(f"{M},{m + 1},{v:.5f}")
+        return out
+    rows = run_pareto(epochs=1 if fast else 3)
+    print("L,de,dh,A,B,enc_us_per_vec,mse")
+    for r in rows:
+        print(f"{r['L']},{r['de']},{r['dh']},{r['A']},{r['B']},"
+              f"{r['enc_us']:.2f},{r['mse']:.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast=False, rates="--rates" in sys.argv)

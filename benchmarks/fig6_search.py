@@ -1,0 +1,76 @@
+"""Fig. 6: search speed (QPS) vs recall trade-off for IVF-RQ vs
+IVF-QINCo2 (cascade), sweeping n_probe and shortlist sizes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, recall_at, timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import ivf as ivf_mod
+from repro.core import rq as rq_mod
+from repro.core import search, training
+from repro.core.kmeans import pairwise_sqdist
+
+
+def run(dim=24, M=4, K=16, epochs=2, n_db=6000, seed=0):
+    xt, xb, xq, gt = bench_data("bigann", dim=dim, n_db=n_db, n_query=64,
+                                seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, de=32, dh=48, L=2, A_train=4, B_train=8,
+               A_eval=8, B_eval=16, epochs=epochs, batch_size=512)
+    params, _ = training.train(jax.random.key(seed), xt, cfg, verbose=False)
+    idx = search.build_index(jax.random.key(seed + 1), jnp.asarray(xb),
+                             params, cfg, k_ivf=64, m_tilde=2,
+                             n_pair_books=2 * M)
+    q = jnp.asarray(xq)
+    rows = []
+
+    # ---- IVF-RQ baseline ----------------------------------------------------
+    rcbs = rq_mod.rq_train(jax.random.key(0), jnp.asarray(xt), M, K)
+    resid = ivf_mod.residual_to_centroid(idx.ivf, jnp.asarray(xb),
+                                         idx.ivf.assignments)
+    rq_codes, _ = rq_mod.rq_encode(rcbs, resid, B=4)
+    rq_recon = (rq_mod.rq_decode(rcbs, rq_codes)
+                + idx.ivf.centroids[idx.ivf.assignments])
+
+    def rq_search(q, n_probe):
+        _, cand, mask = ivf_mod.probe(idx.ivf, q, n_probe)
+        d2 = jnp.sum((q[:, None] - rq_recon[cand]) ** 2, -1)
+        d2 = jnp.where(mask, d2, jnp.inf)
+        top = jnp.argmin(d2, 1)
+        return jnp.take_along_axis(cand, top[:, None], 1)
+
+    for n_probe in (1, 2, 4, 8, 16):
+        fn = jax.jit(lambda qq: rq_search(qq, n_probe))
+        t = timeit_us(fn, q) / len(xq)
+        r1 = recall_at(np.asarray(fn(q)), gt, 1)
+        rows.append({"method": "IVF-RQ", "n_probe": n_probe, "short": "-",
+                     "qps": 1e6 / t, "r@1": r1})
+
+    # ---- IVF-QINCo2 cascade --------------------------------------------------
+    for n_probe, ns_aq, ns_pw in [(1, 16, 4), (2, 32, 8), (4, 32, 8),
+                                  (8, 64, 16), (16, 64, 16)]:
+        fn = jax.jit(lambda qq: search.search(
+            idx, qq, n_probe=n_probe, n_short_aq=ns_aq, n_short_pw=ns_pw,
+            topk=1, cfg=cfg)[0])
+        t = timeit_us(fn, q) / len(xq)
+        r1 = recall_at(np.asarray(fn(q)), gt, 1)
+        rows.append({"method": "IVF-QINCo2", "n_probe": n_probe,
+                     "short": f"{ns_aq}/{ns_pw}", "qps": 1e6 / t, "r@1": r1})
+    return rows
+
+
+def main(fast=True):
+    rows = run(epochs=1 if fast else 3, n_db=4000 if fast else 8000)
+    print("method,n_probe,shortlists,qps,r@1")
+    for r in rows:
+        print(f"{r['method']},{r['n_probe']},{r['short']},"
+              f"{r['qps']:.0f},{r['r@1']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

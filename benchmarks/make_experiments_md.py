@@ -1,0 +1,242 @@
+"""Assemble EXPERIMENTS.md from the dry-run / perf JSON artifacts plus the
+paper-claims validation results. Re-run after refreshing any artifacts:
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HW
+
+DRY = Path("experiments/dryrun")
+PERF = Path("experiments/perf")
+
+
+def _load(p: Path):
+    return json.loads(p.read_text())
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def dryrun_section():
+    lines = [
+        "## §Dry-run — 40 (arch x shape) cells x {16x16, 2x16x16} meshes",
+        "",
+        "Every cell is `jax.jit(step, in_shardings, out_shardings)"
+        ".lower(ShapeDtypeStructs).compile()` on placeholder CPU devices "
+        "(`--xla_force_host_platform_device_count=512`). `train` lowers "
+        "train_step (fwd+bwd+AdamW), `prefill` lowers serve-prefill, "
+        "`decode`/`long` lower serve_step (1 new token over a seq_len KV "
+        "cache). Collective bytes are parsed from the compiled per-device "
+        "HLO with while-loop trip-count weighting "
+        "(launch/hlo_analysis.py); byte models in that module's docstring.",
+        "",
+        "| arch | shape | mesh | status | params/dev | opt/dev | cache/dev |"
+        " HLO flops/dev | wire GB/dev | collectives (count) | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_skip = 0
+    for p in sorted(DRY.glob("*.json")):
+        r = _load(p)
+        if r["arch"].startswith("qinco"):
+            continue
+        if "+" in r["arch"]:
+            continue                      # perf variants live in §Perf
+        if not r.get("runnable", True):
+            n_skip += 1
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"SKIP ({r.get('skip_reason', '')[:48]}…) | — | — | — | — "
+                f"| — | — | — |")
+            continue
+        if r.get("error"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR "
+                f"{r['error'][:40]} | — | — | — | — | — | — | — |")
+            continue
+        n_ok += 1
+        colls = ", ".join(f"{k}x{int(v['count'])}"
+                          for k, v in sorted(r["collectives"].items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{_gb(r.get('param_bytes_per_device', 0))} | "
+            f"{_gb(r.get('opt_bytes_per_device', 0))} | "
+            f"{_gb(r.get('cache_bytes_per_device', 0))} | "
+            f"{r['cost'].get('flops', 0):.3e} | "
+            f"{_gb(r['collective_wire_bytes'])} | {colls} | "
+            f"{r.get('compile_s', 0):.0f} |")
+    lines.append("")
+    lines.append(f"**{n_ok} cells compiled, {n_skip} recorded skips** "
+                 "(long_500k on pure full-attention archs, DESIGN.md §5). "
+                 "HLO flops/dev counts while-loop bodies once (XLA CPU "
+                 "cost-analysis limitation) — the roofline section uses the "
+                 "analytic model; wire bytes ARE trip-count corrected.")
+    # paper's own workloads
+    lines.append("")
+    lines.append("### The paper's own workloads at the mesh (full-manual "
+                 "shard_map; see §Perf Q-cell)")
+    lines.append("")
+    lines.append("| workload | mesh | t_compute | t_memory | t_collective |"
+                 " bottleneck | collectives |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for p in sorted(DRY.glob("qinco2*.json")):
+        r = _load(p)
+        if r.get("error"):
+            continue
+        colls = ", ".join(f"{k}x{int(v['count'])}={_gb(v['wire_bytes'])}GB"
+                          for k, v in sorted(r["collectives"].items()))
+        lines.append(
+            f"| {r['arch']} {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.6f} | "
+            f"{r['t_collective_s']:.4f} | {r['bottleneck']} | {colls} |")
+    return "\n".join(lines)
+
+
+def roofline_section():
+    lines = [
+        "## §Roofline — per (arch x shape), single-pod 16x16 mesh",
+        "",
+        "Terms from the analytic per-device model (launch/analytic.py — "
+        "mirrors the exact einsums; XLA-CPU cost analysis undercounts "
+        "scanned loops and promotes bf16 collectives, so compiled numbers "
+        "serve as structural cross-checks). Constants: "
+        f"{HW['peak_flops_bf16']/1e12:.0f} TF/s bf16, "
+        f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, {HW['ici_bw']/1e9:.0f} GB/s ICI, "
+        f"{HW['dcn_bw']/1e9:.2f} GB/s DCN.",
+        "",
+        "roofline_frac = t_compute / max(terms) (1.0 = compute-bound at "
+        "perfect overlap). mf_ratio = MODEL_FLOPS(6ND | 6N_aD) / analytic "
+        "HLO-equivalent flops — the useful-compute fraction; <1 from remat "
+        "recompute, full-context masked attention, and head-padding waste.",
+        "",
+        "| arch | shape | t_compute s | t_memory s | t_collective s | "
+        "bottleneck | frac | mf_ratio | HBM fit | one-line fix |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    fixes = {
+        ("train", "collective"): "fewer TP ARs (parallel block) / DP-only "
+                                 "for small archs — see §Perf",
+        ("train", "compute"): "near roofline; overlap AG w/ compute",
+        ("prefill", "collective"): "same TP-AR levers as train",
+        ("decode", "memory"): "RQ KV-cache compression (paper technique, "
+                              "§Perf C-cell) + bf16 weights",
+        ("decode", "collective"): "serving layout (params TP-sharded, no "
+                                  "FSDP at decode) then KV-quant — §Perf C",
+    }
+    for p in sorted(DRY.glob("*.json")):
+        r = _load(p)
+        if r["arch"].startswith("qinco") or "+" in r["arch"]:
+            continue
+        if r["mesh"] != "16x16":
+            continue
+        if not r.get("runnable", True):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip "
+                         f"| — | — | — | {r.get('skip_reason','')[:44]} |")
+            continue
+        if r.get("error"):
+            continue
+        am = r["analytic"]
+        fit = am.get("note_hbm_fit_bytes", 0) <= HW["hbm_bytes"]
+        kind = ("decode" if r["shape"].startswith(("decode", "long"))
+                else ("prefill" if r["shape"].startswith("prefill")
+                      else "train"))
+        fix = fixes.get((kind, r["bottleneck"]), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['bottleneck']} | {r.get('roofline_fraction', 0):.2f} | "
+            f"{r.get('model_hlo_ratio', 0):.2f} | "
+            f"{'Y' if fit else 'N'} | {fix} |")
+    return "\n".join(lines)
+
+
+def perf_section():
+    lines = [
+        "## §Perf — hypothesis -> change -> re-lower -> re-analyse",
+        "",
+        "Three cells picked per the brief (worst roofline fraction, most "
+        "collective-bound, most paper-representative) + the multi-pod DCN "
+        "cell. Every variant is a real config change re-compiled at the "
+        "production mesh; records in experiments/perf/.",
+        "",
+    ]
+    from repro.launch import perf as perf_mod
+    titles = {
+        "mamba2_train": "A. mamba2-1.3b x train_4k — worst roofline "
+                        "fraction (0.10): wrong parallelism for a 1.3B",
+        "kimi_train": "B. kimi-k2-1t-a32b x train_4k — most "
+                      "collective-bound (t_coll 16.4 s)",
+        "kimi_train_pod2": "D. kimi-k2-1t-a32b x train_4k @ 2x16x16 — "
+                           "cross-pod DCN gradient exchange",
+        "deepseek_decode": "C. deepseek-coder-33b x decode_32k — the "
+                           "paper's technique (RQ KV cache)",
+        "chameleon_prefill": "E. chameleon-34b x prefill_32k — bonus "
+                             "ladder: prefill has the same TP/FSDP levers",
+    }
+    for cell in ("mamba2_train", "kimi_train", "deepseek_decode",
+                 "kimi_train_pod2", "chameleon_prefill"):
+        shape = perf_mod.CELL_SHAPES[cell]
+        mp = perf_mod.CELL_PODS.get(cell, False)
+        rows = []
+        for name, hypothesis, arch_fn, kvq in perf_mod._variants()[cell]:
+            tag = (f"{arch_fn().name}+{name}__{shape}__"
+                   f"{'pod2' if mp else 'pod1'}")
+            if kvq:
+                tag += "__kvq"
+            p = PERF / f"{tag}.json"
+            if not p.exists():
+                continue
+            r = _load(p)
+            r["variant"] = name
+            r["hypothesis"] = hypothesis
+            rows.append(r)
+        lines.append(f"### {titles[cell]}")
+        lines.append("")
+        lines.append("| variant | hypothesis | t_comp | t_mem | t_coll | "
+                     "frac | verdict |")
+        lines.append("|---|---|---|---|---|---|---|")
+        prev = None
+        for r in rows:
+            if r.get("error"):
+                lines.append(f"| {r.get('variant','?')} | "
+                             f"{r.get('hypothesis','')[:90]} | — | — | — | "
+                             f"— | ERROR |")
+                continue
+            frac = r.get("roofline_fraction", 0)
+            verdict = "baseline"
+            if prev is not None:
+                bound_prev = max(prev["t_compute_s"], prev["t_memory_s"],
+                                 prev["t_collective_s"])
+                bound = max(r["t_compute_s"], r["t_memory_s"],
+                            r["t_collective_s"])
+                if bound < bound_prev * 0.95:
+                    verdict = (f"CONFIRMED: step bound "
+                               f"{bound_prev:.3f}->{bound:.3f}s "
+                               f"({bound_prev/bound:.1f}x)")
+                elif abs(bound - bound_prev) <= bound_prev * 0.05:
+                    verdict = "REFUTED: bound unchanged (see notes)"
+                else:
+                    verdict = "REGRESSION"
+            lines.append(
+                f"| {r.get('variant','?')} | "
+                f"{r.get('hypothesis','')[:90]} | "
+                f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | "
+                f"{r['t_collective_s']:.4f} | {frac:.2f} | {verdict} |")
+            prev = r
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    parts = [dryrun_section(), "", roofline_section(), "", perf_section()]
+    out = "\n".join(parts)
+    print(out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Roofline report: reads experiments/dryrun/*.json, prints the per-cell
+three-term table (compute / memory / collective seconds per device), the
+dominant bottleneck, MODEL_FLOPS ratio, and HBM fit — the §Roofline source.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HW
+
+
+def load(dry_dir: Path):
+    recs = []
+    for p in sorted(dry_dir.glob("*.json")):
+        r = json.loads(p.read_text())
+        r["_file"] = p.name
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    if not r.get("runnable", True):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skip | — | {r.get('skip_reason', '')[:40]} |")
+    if r.get("error"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | {r['error'][:40]} |")
+    am = r["analytic"]
+    fit = am.get("note_hbm_fit_bytes", 0) <= HW["hbm_bytes"]
+    frac = r.get("roofline_fraction", 0.0)
+    mf = r.get("model_hlo_ratio", 0.0)
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | "
+            f"{r['t_collective_s']:.4f} | {r['bottleneck']} | "
+            f"{frac:.2f} | fit={'Y' if fit else 'N'} "
+            f"mf_ratio={mf:.2f} |")
+
+
+def report(dry_dir, *, single_pod_only=False, as_markdown=True):
+    recs = load(Path(dry_dir))
+    if single_pod_only:
+        recs = [r for r in recs if r.get("mesh") == "16x16"]
+    lines = [
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | "
+        "bottleneck | roofline_frac | notes |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(fmt_row(r))
+    ok = [r for r in recs if r.get("runnable", True) and not r.get("error")]
+    doms = {}
+    for r in ok:
+        doms[r["bottleneck"]] = doms.get(r["bottleneck"], 0) + 1
+    lines.append("")
+    lines.append(f"cells: {len(ok)} ok / {len(recs)} total; "
+                 f"bottlenecks: {doms}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+    print(report(args.dir, single_pod_only=args.single_pod))
+
+
+if __name__ == "__main__":
+    main()

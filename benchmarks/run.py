@@ -1,0 +1,96 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+``python -m benchmarks.run``            fast mode (CPU-budget sizes)
+``python -m benchmarks.run --full``     larger sizes
+``python -m benchmarks.run --only t3``  single section
+
+Prints ``name,us_per_call,derived`` CSV lines per section plus each
+section's own table."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "t3", "t4", "s2", "f5", "f6", "roofline"])
+    args = ap.parse_args()
+    fast = not args.full
+    sections = {
+        "t3": _t3, "t4": _t4, "s2": _s2, "f5": _f5, "f6": _f6,
+        "roofline": _roof,
+    }
+    todo = [args.only] if args.only else list(sections)
+    print("name,us_per_call,derived")
+    for name in todo:
+        t0 = time.time()
+        try:
+            derived = sections[name](fast)
+            emit(f"bench/{name}", (time.time() - t0) * 1e6, derived)
+        except Exception as e:  # keep the harness running
+            emit(f"bench/{name}", (time.time() - t0) * 1e6,
+                 f"ERROR:{type(e).__name__}:{e}")
+            raise
+
+
+def _t3(fast):
+    from benchmarks import table3_compression as t3
+    print("\n== Table 3: compression ladder ==")
+    rows = t3.main(fast=fast)
+    qinco2 = rows[-1]["mse"]
+    rqm = [r for r in rows if r["method"] == "RQ"][0]["mse"]
+    return f"qinco2_mse={qinco2:.5f};rq_mse={rqm:.5f};gain={1-qinco2/rqm:.2%}"
+
+
+def _t4(fast):
+    from benchmarks import table4_decoders as t4
+    print("\n== Table 4: approximate decoders ==")
+    rows = t4.main(fast=fast)
+    opt = rows[-1]
+    return (f"opt_pairs_r1={opt['r@1']:.4f};"
+            f"short10={opt['r@1_short10']:.4f}")
+
+
+def _s2(fast):
+    from benchmarks import tableS2_complexity as s2
+    print("\n== Table S2: complexity ==")
+    rows = s2.main(fast=fast)
+    return ";".join(f"{n}={te:.1f}us" for n, te, _ in rows[:3])
+
+
+def _f5(fast):
+    from benchmarks import fig5_pareto as f5
+    print("\n== Fig 5: Pareto front ==")
+    rows = f5.main(fast=fast)
+    best = min(rows, key=lambda r: r["mse"])
+    return f"best_mse={best['mse']:.5f}@L{best['L']}A{best['A']}B{best['B']}"
+
+
+def _f6(fast):
+    from benchmarks import fig6_search as f6
+    print("\n== Fig 6: search QPS vs recall ==")
+    rows = f6.main(fast=fast)
+    q2 = [r for r in rows if r["method"] == "IVF-QINCo2"]
+    best = max(q2, key=lambda r: r["r@1"])
+    return f"best_r1={best['r@1']:.4f}@qps={best['qps']:.0f}"
+
+
+def _roof(fast):
+    from benchmarks import roofline as rf
+    from pathlib import Path
+    print("\n== Roofline (from dry-run artifacts) ==")
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        return "no-dryrun-artifacts"
+    print(rf.report(d, single_pod_only=True))
+    return f"cells={len(list(d.glob('*.json')))}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Table 3: compression MSE + R@1 ladder — baselines (OPQ/RQ/LSQ) and the
+QINCo -> QINCo2 ablation path (improved training/arch, pre-selection,
+beam search, larger eval beam). Synthetic stand-in data (DESIGN.md §7):
+the paper's ORDERING claims are the reproduction target, not absolute MSE.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, emit, mse, recall_at
+from repro.configs.qinco2 import QincoConfig, tiny
+from repro.core import encode as enc
+from repro.core import lsq, rq, training
+
+
+def _recall(xq, gt, recon_db):
+    d2 = ((np.asarray(xq)[:, None] - np.asarray(recon_db)[None]) ** 2).sum(-1)
+    return float((np.argmin(d2, 1) == np.asarray(gt)).mean())
+
+
+def run(dataset="bigann", M=4, K=16, epochs=4, dim=24, seed=0, verbose=False):
+    xt, xb, xq, gt = bench_data(dataset, dim=dim, seed=seed)
+    rows = []
+    key = jax.random.key(seed)
+
+    def row(name, recon, train_s=None):
+        rows.append({"method": name, "mse": mse(xb, recon),
+                     "r@1": _recall(xq, gt, recon),
+                     "train_s": train_s})
+
+    # ---- classic baselines --------------------------------------------------
+    t0 = time.time()
+    cbs = rq.pq_train(key, jnp.asarray(xt), M, K)
+    row("OPQ/PQ", rq.pq_decode(cbs, rq.pq_encode(cbs, jnp.asarray(xb))),
+        time.time() - t0)
+    t0 = time.time()
+    opq = rq.opq_train(key, jnp.asarray(xt), M, K, outer=3)
+    row("OPQ", rq.opq_decode(opq, rq.opq_encode(opq, jnp.asarray(xb))),
+        time.time() - t0)
+    t0 = time.time()
+    rcbs = rq.rq_train(key, jnp.asarray(xt), M, K)
+    _, xh = rq.rq_encode(rcbs, jnp.asarray(xb), B=1)
+    row("RQ", xh, time.time() - t0)
+    t0 = time.time()
+    lcbs = lsq.lsq_train(key, jnp.asarray(xt), M, K)
+    lcodes = lsq.lsq_encode(lcbs, jnp.asarray(xb))
+    row("LSQ", lsq.lsq_decode(lcbs, lcodes), time.time() - t0)
+
+    # ---- QINCo ladder -------------------------------------------------------
+    def train_variant(name, cfg, A_eval=None, B_eval=None):
+        t0 = time.time()
+        params, _ = training.train(jax.random.key(seed + 1), xt, cfg,
+                                   verbose=False)
+        ts = time.time() - t0
+        codes, xhat, _ = enc.encode(params, jnp.asarray(xb), cfg,
+                                    A_eval or cfg.A_eval,
+                                    B_eval or cfg.B_eval)
+        row(name, xhat, ts)
+        return params
+
+    base = dict(d=dim, M=M, K=K, epochs=epochs, batch_size=512)
+    # QINCo (reproduction): d_e = d, greedy exhaustive
+    train_variant("QINCo (reproduction)",
+                  tiny(**base, de=dim, dh=32, L=1, A_train=K, B_train=1,
+                       A_eval=K, B_eval=1, qinco1_mode=True,
+                       name="qinco1-repro"))
+    # + improved architecture (d_e decouple + residuals)
+    train_variant("+ improved arch/training",
+                  tiny(**base, de=32, dh=48, L=2, A_train=K, B_train=1,
+                       A_eval=K, B_eval=1, name="qinco2-arch"))
+    # + candidate pre-selection
+    train_variant("+ pre-selection (A=8,B=1)",
+                  tiny(**base, de=32, dh=48, L=2, A_train=8, B_train=1,
+                       A_eval=8, B_eval=1, name="qinco2-pre"))
+    # + beam search
+    params = train_variant("+ beam (A=4,B=8)",
+                           tiny(**base, de=32, dh=48, L=2, A_train=4,
+                                B_train=8, A_eval=4, B_eval=8,
+                                name="qinco2-beam"))
+    # + larger eval beam (no retrain)
+    cfg = tiny(**base, de=32, dh=48, L=2, A_train=4, B_train=8,
+               A_eval=8, B_eval=16, name="qinco2-beam")
+    codes, xhat, _ = enc.encode(params, jnp.asarray(xb), cfg, 8, 16)
+    rows.append({"method": "+ larger eval beam (QINCo2)",
+                 "mse": mse(xb, xhat), "r@1": _recall(xq, gt, xhat),
+                 "train_s": None})
+    return rows
+
+
+def main(fast=True):
+    rows = run(epochs=2 if fast else 6)
+    print("method,mse,r@1,train_s")
+    for r in rows:
+        ts = f"{r['train_s']:.1f}" if r["train_s"] else "-"
+        print(f"{r['method']},{r['mse']:.5f},{r['r@1']:.4f},{ts}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,108 @@
+"""Table 4: approximate decoders for QINCo2 codes — direct R@1 and the
+recall of QINCo2 re-ranking a 10-element shortlist built by each method.
+Also prints the greedy pair-selection trace (Table S3) with --pairs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, mse
+from repro.configs.qinco2 import tiny
+from repro.core import aq, encode as enc, ivf as ivf_mod, pairwise as pw
+from repro.core import qinco, search, training
+
+
+def run(dataset="bigann", M=4, K=16, epochs=3, dim=24, seed=0,
+        show_pairs=False):
+    xt, xb, xq, gt = bench_data(dataset, dim=dim, seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, epochs=epochs, batch_size=512, de=32,
+               dh=48, L=2, A_train=4, B_train=8, A_eval=8, B_eval=16)
+    params, _ = training.train(jax.random.key(seed), xt, cfg, verbose=False)
+    idx = search.build_index(jax.random.key(seed + 1), jnp.asarray(xb),
+                             params, cfg, k_ivf=32, m_tilde=2,
+                             n_pair_books=2 * M, verbose=show_pairs)
+    q = jnp.asarray(xq)
+    rows = []
+
+    def eval_decoder(name, scores):
+        """scores: (Q, N) higher=closer; direct R@1 + shortlist-10 rerank."""
+        direct = np.asarray(jnp.argmax(scores, 1))
+        r1 = float((direct == gt).mean())
+        _, short = jax.lax.top_k(scores, 10)
+        flat = short.reshape(-1)
+        recon = (qinco.decode(params, idx.codes[flat], cfg)
+                 + idx.ivf.centroids[idx.ivf.assignments[flat]])
+        recon = recon.reshape(q.shape[0], 10, dim)
+        d2 = jnp.sum((q[:, None] - recon) ** 2, -1)
+        rr = np.asarray(jnp.take_along_axis(short, jnp.argmin(d2, 1)[:, None],
+                                            1))[:, 0]
+        rows.append({"decoder": name, "r@1": r1,
+                     "r@1_short10": float((rr == gt).mean())})
+
+    # QINCo2 decoder, exhaustive (the ceiling; 'no shortlist' row)
+    recon = (qinco.decode(params, idx.codes, cfg)
+             + idx.ivf.centroids[idx.ivf.assignments])
+    d2 = ((np.asarray(q)[:, None] - np.asarray(recon)[None]) ** 2).sum(-1)
+    rows.append({"decoder": "QINCo2 (no shortlist)",
+                 "r@1": float((np.argmin(d2, 1) == gt).mean()),
+                 "r@1_short10": None})
+
+    # AQ (joint least-squares) — includes centroid term
+    lut = aq.adc_lut(idx.aq_books, q)
+    clut = jnp.einsum("qd,kd->qk", q, idx.ivf.centroids)
+    ip = jnp.sum(jnp.take_along_axis(
+        lut[:, None], idx.codes[None, ..., None], axis=3)[..., 0], axis=2)
+    ip = ip + clut[:, idx.ivf.assignments]
+    eval_decoder("AQ", 2 * ip - idx.aq_norms[None])
+
+    # RQ-style sequential decoder
+    resid = ivf_mod.residual_to_centroid(idx.ivf, jnp.asarray(xb),
+                                         idx.ivf.assignments)
+    rq_books = aq.fit_rq_decoder(idx.codes, resid, M, K)
+    rq_recon = aq.aq_decode(rq_books, idx.codes) + idx.ivf.centroids[
+        idx.ivf.assignments]
+    rq_norms = jnp.sum(rq_recon ** 2, -1)
+    lut2 = aq.adc_lut(rq_books, q)
+    ip2 = jnp.sum(jnp.take_along_axis(
+        lut2[:, None], idx.codes[None, ..., None], axis=3)[..., 0], axis=2)
+    ip2 = ip2 + clut[:, idx.ivf.assignments]
+    eval_decoder("RQ", 2 * ip2 - rq_norms[None])
+
+    # consecutive pairs
+    ext = idx.ext_codes
+    cons = pw.consecutive_pairs_decoder(ext, jnp.asarray(xb), K)
+    cons_norms = jnp.sum(cons.decode(ext) ** 2, -1)
+    sc = pw.pairwise_scores(pw.pairwise_lut(cons.codebooks, q), ext,
+                            cons.pairs, K, cons_norms)
+    eval_decoder(f"RQ w/ M/2={len(cons.pairs)} consecutive pairs", sc)
+
+    # optimized pairs (the paper's contribution)
+    sc = pw.pairwise_scores(pw.pairwise_lut(idx.pw.codebooks, q), ext,
+                            idx.pw.pairs, K, idx.pw_norms)
+    eval_decoder(f"RQ w/ 2M={len(idx.pw.pairs)} optimized pairs", sc)
+
+    if show_pairs:   # Table S3 trace
+        r = jnp.asarray(xb).astype(jnp.float32)
+        print("pair-selection trace (Table S3):")
+        for t, (i, j) in enumerate(idx.pw.pairs):
+            r = r - idx.pw.codebooks[t, ext[:, i] * K + ext[:, j]]
+            tag = (f"I{i}" if i < M else f"I~{i - M}",
+                   f"I{j}" if j < M else f"I~{j - M}")
+            print(f"  step {t}: pair={tag} mse={mse(jnp.zeros_like(r), r):.5f}")
+    return rows
+
+
+def main(fast=True, show_pairs=False):
+    rows = run(epochs=2 if fast else 4, show_pairs=show_pairs)
+    print("decoder,r@1,r@1_short10")
+    for r in rows:
+        s10 = f"{r['r@1_short10']:.4f}" if r["r@1_short10"] is not None else "-"
+        print(f"{r['decoder']},{r['r@1']:.4f},{s10}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast=False, show_pairs="--pairs" in sys.argv)

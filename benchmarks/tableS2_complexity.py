@@ -1,0 +1,75 @@
+"""Table S2: encoding/decoding complexity — analytic FLOPs per vector from
+the paper's big-O formulas with our configs, plus measured per-vector CPU
+timings (indicative only; the paper's table is also CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, emit, timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import qinco, rq, training
+from repro.kernels import ops
+
+
+def flops_formulas(d, K, M, L, de, dh, A, B):
+    return {
+        "OPQ": {"enc": d * d + K * d, "dec": d * (d + 1)},
+        "RQ(B=4)": {"enc": K * M * d * 4, "dec": M * d},
+        "QINCo": {"enc": K * M * d * (d + L * dh), "dec": M * d * (d + L * dh)},
+        "QINCo2": {"enc": A * B * M * de * (d + L * dh) + B * K * d,
+                   "dec": M * de * (d + L * dh)},
+    }
+
+
+def run(dim=24, M=4, K=16, seed=0, n=2048):
+    xt, xb, xq, gt = bench_data("bigann", dim=dim, n_db=n, seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, de=32, dh=48, L=2, A_train=4, B_train=8,
+               A_eval=8, B_eval=8, epochs=1, batch_size=512)
+    params, _ = training.train(jax.random.key(seed), xt[:1024], cfg,
+                               verbose=False)
+    xbj = jnp.asarray(xb)
+    rows = []
+
+    # RQ
+    cbs = rq.rq_train(jax.random.key(0), jnp.asarray(xt[:1024]), M, K)
+    t_enc = timeit_us(lambda x: rq.rq_encode(cbs, x, B=4)[0], xbj) / n
+    codes, _ = rq.rq_encode(cbs, xbj, B=4)
+    t_dec = timeit_us(lambda c: rq.rq_decode(cbs, c), codes) / n
+    rows.append(("RQ(B=4)", t_enc, t_dec))
+
+    # QINCo (greedy exhaustive on same params)
+    t_enc = timeit_us(lambda x: enc.encode(params, x, cfg, K, 1)[0], xbj) / n
+    qcodes, _, _ = enc.encode(params, xbj, cfg, cfg.A_eval, cfg.B_eval)
+    t_dec = timeit_us(lambda c: qinco.decode(params, c, cfg), qcodes) / n
+    rows.append(("QINCo(A=K,B=1)", t_enc, t_dec))
+
+    # QINCo2 (pre-selection + beam)
+    t_enc = timeit_us(lambda x: enc.encode(params, x, cfg, 8, 8)[0], xbj) / n
+    rows.append(("QINCo2(A=8,B=8)", t_enc, t_dec))
+
+    # Pallas kernel path for the pre-selection distance scan
+    r = xbj
+    cb0 = params["pre_codebooks"][0]
+    t_pre = timeit_us(lambda x: ops.l2_topk(x, cb0, 8)[0], r) / n
+    rows.append(("l2_topk kernel (per step)", t_pre, 0.0))
+
+    f = flops_formulas(dim, K, M, cfg.L, cfg.de, cfg.dh, 8, 8)
+    return rows, f
+
+
+def main(fast=True):
+    rows, f = run(n=1024 if fast else 4096)
+    print("method,encode_us_per_vec,decode_us_per_vec")
+    for name, te, td in rows:
+        print(f"{name},{te:.2f},{td:.2f}")
+    print("method,flops_encode,flops_decode")
+    for k, v in f.items():
+        print(f"{k},{v['enc']:.0f},{v['dec']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,44 @@
+"""BEYOND-PAPER example: the paper's RQ machinery compressing an LM KV
+cache. Fits per-(head) residual codebooks on prefill K/V, decodes with the
+quantized cache, and compares logits + memory against the bf16 cache.
+
+    PYTHONPATH=src python examples/kv_cache_compression.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import kv_quant
+from repro.launch.serve import generate
+from repro.models import lm
+from repro.models.common import ShardCtx, init_params
+
+arch = get_arch("qwen2.5-32b").reduced()
+params = init_params(lm.param_specs(arch), jax.random.key(0))
+prompts = jax.random.randint(jax.random.key(1), (2, 24), 0, arch.vocab_size)
+
+full = generate(arch, params, prompts, gen_len=12, kv_quant_on=False)
+quant = generate(arch, params, prompts, gen_len=12, kv_quant_on=True)
+agree = float((np.asarray(full) == np.asarray(quant)).mean())
+print(f"token agreement quantized vs full cache: {agree:.2%}")
+
+# memory math for the real configs (the dry-run §Perf numbers)
+for name in ("deepseek-coder-33b", "mistral-large-123b"):
+    a = get_arch(name)
+    hd = a.attn.head_dim
+    ratio = kv_quant.compression_ratio(hd, a.kv_quant.m_bytes)
+    cache_gb = (a.n_layers * 128 * 32768 * 2 * a.attn.num_kv_heads * hd * 2
+                / 16 / 1e9)
+    print(f"{name}: decode_32k cache {cache_gb:.1f} GB/device bf16 -> "
+          f"{cache_gb / ratio:.2f} GB at m={a.kv_quant.m_bytes} "
+          f"({ratio:.0f}x)")
+
+# quantization error falls with more bytes (rate-distortion, paper Fig. S1)
+rng = np.random.default_rng(0)
+kv = jnp.asarray(rng.normal(size=(2048, 2, 32)).astype(np.float32))
+for m in (1, 2, 4, 8):
+    cb = kv_quant.fit_kv_codebooks(jax.random.key(2), kv, m, 32)
+    mse = float(kv_quant.quantization_mse(kv[None], cb))
+    print(f"  m={m} bytes/vector: K/V quantization MSE {mse:.4f}")
+print("kv_cache_compression OK")

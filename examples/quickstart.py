@@ -1,0 +1,47 @@
+"""Quickstart: train a QINCo2 codec on synthetic vectors, encode a small
+database, and run the full search cascade — the whole paper in ~2 minutes
+on one CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import rq, search, training
+from repro.data.synthetic import make_splits
+
+# ---- data (synthetic BigANN-like; DESIGN.md §7) -----------------------------
+xt, xb, xq, gt = make_splits("bigann", n_train=6000, n_db=4000, n_query=64,
+                             seed=0)
+dim = 24
+xt, xb, xq = xt[:, :dim], xb[:, :dim], xq[:, :dim]
+xt, (mu, sd) = training.normalize_dataset(xt)
+xb = ((xb - mu) / sd).astype(np.float32)
+xq = ((xq - mu) / sd).astype(np.float32)
+gt = np.argmin(((xq[:, None] - xb[None]) ** 2).sum(-1), axis=1)
+
+# ---- train QINCo2 (pre-selection + beam search, App. A.2 recipe) ------------
+cfg = tiny(d=dim, M=4, K=16, de=32, dh=48, L=2, A_train=4, B_train=8,
+           A_eval=8, B_eval=16, epochs=3, batch_size=512)
+params, hist = training.train(jax.random.key(0), xt, cfg, x_val=xb[:512])
+
+# ---- compare with RQ on held-out MSE ----------------------------------------
+cbs = rq.rq_train(jax.random.key(1), jnp.asarray(xt), cfg.M, cfg.K)
+_, xhat_rq = rq.rq_encode(cbs, jnp.asarray(xb), B=1)
+mse_rq = float(jnp.mean(jnp.sum((jnp.asarray(xb) - xhat_rq) ** 2, -1)))
+mse_q2 = float(enc.reconstruction_mse(params, jnp.asarray(xb), cfg))
+print(f"\nheld-out MSE   RQ: {mse_rq:.4f}   QINCo2: {mse_q2:.4f} "
+      f"({(1 - mse_q2 / mse_rq):.1%} better)")
+
+# ---- build the search index (IVF -> AQ -> pairwise -> neural rerank) --------
+idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params, cfg,
+                         k_ivf=32, m_tilde=2, n_pair_books=8)
+ids, dists = search.search(idx, jnp.asarray(xq), n_probe=8, n_short_aq=48,
+                           n_short_pw=12, topk=1, cfg=cfg)
+r1 = float((np.asarray(ids[:, 0]) == gt).mean())
+print(f"cascade R@1: {r1:.3f}  (IVF probe -> ADC -> pairwise -> QINCo2)")
+assert mse_q2 < mse_rq
+print("quickstart OK")

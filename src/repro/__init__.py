@@ -1,0 +1,3 @@
+"""repro: QINCo2 (ICLR'25) vector compression + search, and a multi-pod
+JAX training/serving substrate for the assigned architecture pool."""
+__version__ = "1.0.0"

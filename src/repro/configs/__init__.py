@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, AttnConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES, SHAPE_BY_NAME, shape_applicable
+from repro.configs.registry import get_arch, list_archs

@@ -1,0 +1,126 @@
+"""The 10 assigned architectures (exact public-literature configs).
+
+Each also exists as ``configs/<id>.py`` exporting ``CONFIG`` for the
+``--arch <id>`` CLI convention; this module is the single source of truth.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ArchConfig, AttnConfig, KVQuantConfig, MoEConfig, ParallelPolicy, SSMConfig,
+)
+
+# -- [ssm] SSD (state-space duality)  [arXiv:2405.21060] ---------------------
+MAMBA2_1_3B = ArchConfig(
+    name="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, d_ff=0, vocab_size=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=256),
+    parallel=ParallelPolicy(fsdp=False, remat_policy="dots",
+                            grad_compress_pods=True),
+)
+
+# -- [vlm] early-fusion, VQ image tokens  [arXiv:2405.09818] -----------------
+CHAMELEON_34B = ArchConfig(
+    name="chameleon-34b", family="dense",
+    n_layers=48, d_model=8192, d_ff=22016, vocab_size=65536,
+    attn=AttnConfig(num_heads=64, num_kv_heads=8, head_dim=128),
+    frontend_stub=True,   # VQ image tokenizer stub: input_specs gives embeds
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(fsdp=True, grad_compress_pods=True),
+)
+
+# -- [moe] Kimi K2 trillion-param MoE  [arXiv:2501.kimi2] --------------------
+KIMI_K2_1T = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, d_ff=18432, vocab_size=163840,
+    attn=AttnConfig(num_heads=64, num_kv_heads=8, head_dim=112),
+    moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048,
+                  num_shared_experts=1, d_ff_shared=2048),
+    moe_first_dense=1,
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(
+        fsdp=True, expert_parallel=True, remat_policy="full",
+        param_dtype="bfloat16", opt_state_dtype="bfloat16",
+        grad_compress_pods=True),
+)
+
+# -- [moe] DBRX 16 experts top-4  [hf:databricks/dbrx-base] ------------------
+DBRX_132B = ArchConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, d_ff=10752, vocab_size=100352,
+    attn=AttnConfig(num_heads=48, num_kv_heads=8, head_dim=128),
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff_expert=10752),
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(fsdp=True, expert_parallel=True,
+                            remat_policy="full", grad_compress_pods=True),
+)
+
+# -- [dense] llama-arch  [arXiv:2401.14196] ----------------------------------
+DEEPSEEK_CODER_33B = ArchConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, d_ff=19200, vocab_size=32256,
+    attn=AttnConfig(num_heads=56, num_kv_heads=8, head_dim=128),
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(fsdp=True, grad_compress_pods=True),
+)
+
+# -- [dense]  [hf:mistralai/Mistral-Large-Instruct-2407] ---------------------
+MISTRAL_LARGE_123B = ArchConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, d_ff=28672, vocab_size=32768,
+    attn=AttnConfig(num_heads=96, num_kv_heads=8, head_dim=128),
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(fsdp=True, remat_policy="full",
+                            param_dtype="bfloat16",
+                            opt_state_dtype="bfloat16",
+                            grad_compress_pods=True),
+)
+
+# -- [dense] 5:1 local:global, 128k ctx  [hf:google/gemma-3] -----------------
+GEMMA3_12B = ArchConfig(
+    name="gemma3-12b", family="dense",
+    n_layers=48, d_model=3840, d_ff=15360, vocab_size=262144,
+    attn=AttnConfig(num_heads=16, num_kv_heads=8, head_dim=256,
+                    window=1024, global_every=6, rope_theta=1_000_000.0),
+    tie_embeddings=True,
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(fsdp=True, grad_compress_pods=True),
+)
+
+# -- [dense] GQA, QKV bias  [hf:Qwen/Qwen2.5] --------------------------------
+QWEN2_5_32B = ArchConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, d_ff=27648, vocab_size=152064,
+    attn=AttnConfig(num_heads=40, num_kv_heads=8, head_dim=128,
+                    qkv_bias=True),
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=4),
+    parallel=ParallelPolicy(fsdp=True, grad_compress_pods=True),
+)
+
+# -- [audio] enc-dec, conv frontend (stub)  [arXiv:2212.04356] ---------------
+WHISPER_TINY = ArchConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, n_encoder_layers=4, encoder_context=1500,
+    d_model=384, d_ff=1536, vocab_size=51865,
+    attn=AttnConfig(num_heads=6, num_kv_heads=6, head_dim=64),
+    frontend_stub=True,   # conv frontend stub: inputs are frame embeddings
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=2),
+    parallel=ParallelPolicy(fsdp=False),
+)
+
+# -- [hybrid] Mamba2 + shared attn blocks  [arXiv:2411.15242] ----------------
+ZAMBA2_1_2B = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, d_ff=8192, vocab_size=32000,
+    attn=AttnConfig(num_heads=32, num_kv_heads=32, head_dim=64),
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=256),
+    shared_attn_every=6,   # one *shared-weight* attn+MLP block per 6 layers
+    kv_quant=KVQuantConfig(enabled=True, m_bytes=2),
+    parallel=ParallelPolicy(fsdp=False, grad_compress_pods=True),
+)
+
+ALL_ARCHS = (
+    MAMBA2_1_3B, CHAMELEON_34B, KIMI_K2_1T, DBRX_132B, DEEPSEEK_CODER_33B,
+    MISTRAL_LARGE_123B, GEMMA3_12B, QWEN2_5_32B, WHISPER_TINY, ZAMBA2_1_2B,
+)

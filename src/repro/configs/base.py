@@ -1,0 +1,195 @@
+"""Config dataclasses for architectures, shapes, and parallelism policies.
+
+Every assigned architecture gets one module in this package exporting a
+single ``CONFIG: ArchConfig``. The registry maps ``--arch`` ids to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int           # per-expert hidden dim
+    capacity_factor: float = 1.25
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int              # N (per-head SSM state)
+    head_dim: int = 64          # P (channels per SSD head)
+    expand: int = 2             # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256       # SSD block size for the dual (quadratic) form
+    ngroups: int = 1            # B/C groups (GVA-style)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    # sliding-window pattern: window size for "local" layers; a layer is
+    # global every `global_every` layers (gemma3: window=1024, global_every=6).
+    window: Optional[int] = None
+    global_every: int = 1       # 1 => every layer global (no local layers)
+    logit_softcap: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantConfig:
+    """BEYOND-PAPER: residual-quantized KV cache (core/kv_quant.py)."""
+    enabled: bool = False
+    m_bytes: int = 4            # RQ codebooks per K/V head vector
+    codebook_size: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPolicy:
+    """How the arch maps onto the (pod, data, model) mesh."""
+    fsdp: bool = False          # shard params/opt-state over `data` too
+    expert_parallel: bool = False
+    pipeline_stages: int = 1    # >1 => GPipe over the pod axis
+    remat_policy: str = "dots"  # nothing | dots | full
+    param_dtype: str = "float32"
+    opt_state_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    grad_compress_pods: bool = False  # int8 cross-pod gradient exchange
+    attn_chunk: int = 512       # query-block size for chunked flash attention
+    # --- perf-iteration knobs (EXPERIMENTS.md §Perf) ---
+    dp_only: bool = False       # no TP: model axis joins data (small archs)
+    parallel_block: bool = False  # PaLM-style fused attn+MLP: 1 TP AR/layer
+    moe_2d: bool = False        # experts over model x expert-FFN over data:
+                                # expert weights never all-gathered (FSDP
+                                # applies to the attention/dense 3% only)
+    grad_compress_in_graph: bool = False  # shard_map int8 pod-axis exchange
+                                # inside train_step (perf variant; the
+                                # collective itself lives in core/grad_compress)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    kv_quant: KVQuantConfig = dataclasses.field(default_factory=KVQuantConfig)
+    parallel: ParallelPolicy = dataclasses.field(default_factory=ParallelPolicy)
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # hybrid (zamba2): shared attention block applied every N backbone layers
+    shared_attn_every: int = 0
+    # encdec (whisper): encoder layers; n_layers counts decoder layers
+    n_encoder_layers: int = 0
+    encoder_context: int = 1500   # whisper 30s window frames
+    # dense first-k layers for MoE models (kimi-k2 layer 0 is dense)
+    moe_first_dense: int = 0
+    # modality frontend stub: inputs are precomputed embeddings, not ids
+    frontend_stub: bool = False
+    max_seq_len: int = 1 << 20
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        attn = self.attn
+        if attn is not None:
+            attn = dataclasses.replace(
+                attn,
+                num_heads=max(2, min(4, attn.num_heads)),
+                num_kv_heads=2 if attn.num_kv_heads > 1 else 1,
+                head_dim=16,
+                window=64 if attn.window else None,
+                global_every=attn.global_every if attn.global_every <= 3 else 3,
+            )
+        moe = self.moe
+        if moe is not None:
+            moe = dataclasses.replace(
+                moe, num_experts=4, top_k=2, d_ff_expert=64,
+                num_shared_experts=min(1, moe.num_shared_experts),
+                d_ff_shared=64 if moe.num_shared_experts else 0)
+        ssm = self.ssm
+        if ssm is not None:
+            ssm = dataclasses.replace(
+                ssm, state_dim=16, head_dim=16, conv_width=4, chunk_size=32)
+        n_layers = min(self.n_layers, 4 if self.family != "hybrid" else 7)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=64,
+            d_ff=128,
+            vocab_size=256,
+            attn=attn,
+            moe=moe,
+            ssm=ssm,
+            kv_quant=dataclasses.replace(self.kv_quant, m_bytes=2,
+                                         codebook_size=16),
+            shared_attn_every=3 if self.shared_attn_every else 0,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            encoder_context=32,
+            moe_first_dense=min(self.moe_first_dense, 1),
+            parallel=dataclasses.replace(
+                self.parallel, param_dtype="float32",
+                opt_state_dtype="float32", compute_dtype="float32",
+                attn_chunk=64),
+        )
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_pure_full_attention(self) -> bool:
+        """True if every token-mixing layer is unwindowed full attention."""
+        if self.family in ("ssm", "hybrid"):
+            return False
+        if self.attn is not None and self.attn.window is not None:
+            return False
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned; identical across the 10 LM archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason). long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and arch.is_pure_full_attention:
+        return False, ("skip: pure full-attention arch; 524k decode context "
+                       "requires sub-quadratic attention (DESIGN.md §5)")
+    return True, ""

@@ -1,0 +1,3 @@
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("kimi_k2_1t_a32b")

@@ -1,0 +1,68 @@
+"""QINCo2 model configs (the paper's own architecture, Table 2)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class QincoConfig:
+    name: str
+    d: int = 128                 # data dimension (BigANN default)
+    de: int = 384                # embedding (backbone) dim
+    dh: int = 384                # hidden dim of residual MLPs
+    L: int = 16                  # residual blocks in f_theta
+    Ls: int = 0                  # residual blocks in g_phi (0 = plain codebook)
+    M: int = 8                   # quantization steps (bytes at K=256)
+    K: int = 256                 # codebook size per step
+    A_train: int = 16            # pre-selected candidates during training
+    B_train: int = 32            # beam size during training
+    A_eval: int = 32
+    B_eval: int = 64
+    # training recipe (paper App. A.2)
+    lr: float = 8e-4
+    min_lr_ratio: float = 1e-3
+    weight_decay: float = 0.1
+    grad_clip: float = 0.1
+    batch_size: int = 8192
+    epochs: int = 70
+    codebook_init_noise: float = 0.025
+    kmeans_init_iters: int = 10
+    qinco1_mode: bool = False    # original QINCo: de=d, no extra projections
+
+
+def qinco2_s(**kw) -> QincoConfig:
+    return QincoConfig(name="qinco2-s", L=2, de=128, dh=256, **kw)
+
+
+def qinco2_m(**kw) -> QincoConfig:
+    return QincoConfig(name="qinco2-m", L=4, de=384, dh=384, **kw)
+
+
+def qinco2_l(**kw) -> QincoConfig:
+    return QincoConfig(name="qinco2-l", L=16, de=384, dh=384, **kw)
+
+
+def qinco1(**kw) -> QincoConfig:
+    """QINCo baseline (Huijben et al. 2024): greedy, d_e = d, Adam-era arch."""
+    d = kw.pop("d", 128)
+    return QincoConfig(name="qinco1", L=2, de=d, dh=256, d=d,
+                       A_train=256, B_train=1, A_eval=256, B_eval=1,
+                       qinco1_mode=True, **kw)
+
+
+def tiny(**kw) -> QincoConfig:
+    """CPU-budget config for tests/benches."""
+    defaults = dict(name="qinco2-tiny", d=16, de=24, dh=32, L=1, M=4, K=16,
+                    A_train=4, B_train=4, A_eval=8, B_eval=8,
+                    batch_size=256, epochs=3)
+    defaults.update(kw)
+    return QincoConfig(**defaults)
+
+
+PRESETS = {
+    "qinco2-s": qinco2_s,
+    "qinco2-m": qinco2_m,
+    "qinco2-l": qinco2_l,
+    "qinco1": qinco1,
+    "qinco2-tiny": tiny,
+}

@@ -1,0 +1,3 @@
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("qwen2_5_32b")

@@ -1,0 +1,35 @@
+"""--arch id -> ArchConfig registry + per-arch config modules."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import archs
+from repro.configs.base import ArchConfig
+
+_REGISTRY: Dict[str, ArchConfig] = {a.name: a for a in archs.ALL_ARCHS}
+
+# also accept filesystem-friendly ids (dots/dashes)
+_ALIASES = {
+    "mamba2_1_3b": "mamba2-1.3b",
+    "chameleon_34b": "chameleon-34b",
+    "kimi_k2_1t_a32b": "kimi-k2-1t-a32b",
+    "dbrx_132b": "dbrx-132b",
+    "deepseek_coder_33b": "deepseek-coder-33b",
+    "mistral_large_123b": "mistral-large-123b",
+    "gemma3_12b": "gemma3-12b",
+    "qwen2_5_32b": "qwen2.5-32b",
+    "whisper_tiny": "whisper-tiny",
+    "zamba2_1_2b": "zamba2-1.2b",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    return sorted(_REGISTRY)

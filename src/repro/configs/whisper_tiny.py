@@ -1,0 +1,3 @@
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("whisper_tiny")

@@ -1,0 +1,70 @@
+"""Additive-quantizer decoder fit on fixed codes (paper §3.3 / Table 4).
+
+Given codes (N, M) produced by QINCo2 and their source vectors x, find
+codebooks {C^m} minimizing ||x - sum_m C^m[i_m]||^2 — one large ridge
+least-squares solved via the normal equations, assembled on device with
+scatter-adds (the one-hot design matrix is never materialized).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("M", "K"))
+def fit_aq(codes, x, M: int, K: int, ridge: float = 1e-4):
+    """codes: (N, M) int32; x: (N, d) -> codebooks (M, K, d)."""
+    N, d = x.shape
+    MK = M * K
+    flat = codes + (jnp.arange(M) * K)[None, :]           # (N, M)
+    # G[a, b] = #(vectors using code-slot a and b)
+    G = jnp.zeros((MK, MK), jnp.float32)
+    G = G.at[flat[:, :, None], flat[:, None, :]].add(1.0)
+    b = jnp.zeros((MK, d), jnp.float32).at[flat].add(x[:, None, :])
+    G = G + ridge * N / MK * jnp.eye(MK)
+    C = jnp.linalg.solve(G, b)
+    return C.reshape(M, K, d)
+
+
+def aq_decode(codebooks, codes):
+    M = codebooks.shape[0]
+    return jnp.sum(codebooks[jnp.arange(M)[None], codes], axis=1)
+
+
+@partial(jax.jit, static_argnames=("M", "K"))
+def fit_rq_decoder(codes, x, M: int, K: int, ridge: float = 1.0):
+    """Sequential (RQ-style) decoder fit: each codebook is the per-bucket
+    mean of the residual left by previous steps — the paper's cheaper
+    alternative to the joint AQ solve (Table 4, 'RQ' row)."""
+    N, d = x.shape
+    r = x
+    cbs = []
+    for m in range(M):
+        idx = codes[:, m]
+        sums = jnp.zeros((K, d), jnp.float32).at[idx].add(r)
+        cnts = jnp.zeros((K,), jnp.float32).at[idx].add(1.0)
+        cb = sums / (cnts[:, None] + ridge)
+        cbs.append(cb)
+        r = r - cb[idx]
+    return jnp.stack(cbs)
+
+
+def adc_lut(codebooks, q):
+    """Asymmetric-distance LUT: (M, K) inner products <q, C^m_k>.
+
+    codebooks: (M, K, d); q: (Q, d) -> (Q, M, K)."""
+    return jnp.einsum("qd,mkd->qmk", q, codebooks)
+
+
+def adc_scores(lut, codes, norms):
+    """Approx -||q - xhat||^2 up to a ||q||^2 constant.
+
+    lut: (Q, M, K); codes: (N, M); norms: (N,) = ||xhat||^2.
+    Returns (Q, N) scores (higher = closer)."""
+    M = lut.shape[1]
+    ip = jnp.sum(jnp.take_along_axis(
+        lut[:, None, :, :],
+        codes[None, :, :, None], axis=3)[..., 0], axis=2)   # (Q, N)
+    return 2.0 * ip - norms[None, :]

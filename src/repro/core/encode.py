@@ -1,0 +1,121 @@
+"""QINCo2 encoding: candidate pre-selection + beam search (paper §3.2).
+
+One code path covers the whole family:
+    Q_RQ    (QINCo greedy): A = K, B = 1
+    Q_QI-A  (pre-selection): A < K, B = 1
+    Q_QI-B  (beam search):   A < K, B > 1
+
+Shapes are static: (N, B, ...) tensors, lax.top_k selection, no raggedness.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.qinco2 import QincoConfig
+from repro.core import qinco
+
+
+def _sqdist_to_codebook(r, cb):
+    """r: (N, B, d); cb: (K, d) -> (N, B, K)."""
+    r2 = jnp.sum(r * r, axis=-1, keepdims=True)
+    c2 = jnp.sum(cb * cb, axis=-1)
+    return r2 - 2.0 * jnp.einsum("nbd,kd->nbk", r, cb) + c2
+
+
+def preselect(params, m_g, r, xhat, pre_cb, A: int, cfg: QincoConfig):
+    """Top-A candidate indices (N, B, A) by distance to C~ (Eq. 6)."""
+    if cfg.Ls >= 1 and "g" in params:
+        cand = qinco.f_apply(m_g, pre_cb, xhat[..., None, :], cfg)  # (N,B,K,d)
+        d2 = jnp.sum(jnp.square(r[..., None, :] - cand), axis=-1)
+    else:
+        d2 = _sqdist_to_codebook(r, pre_cb)
+    if A >= cfg.K:
+        idx = jnp.broadcast_to(jnp.arange(cfg.K), d2.shape[:-1] + (cfg.K,))
+        return idx, d2
+    _, idx = lax.top_k(-d2, A)
+    return idx, d2
+
+
+@partial(jax.jit, static_argnames=("cfg", "A", "B"))
+def encode(params, x, cfg: QincoConfig, A: Optional[int] = None,
+           B: Optional[int] = None):
+    """Beam-search encode. x: (N, d) -> (codes (N, M), xhat (N, d), mse).
+
+    Maintains B hypotheses; step m expands each with its top-A pre-selected
+    candidates, evaluates f_theta on the A*B expansions and keeps the best B
+    (Fig. 2). Also returns the per-beam per-step selected pre-codebook index
+    trace needed for the C~ auxiliary loss.
+    """
+    A = A or cfg.A_eval
+    B = B or cfg.B_eval
+    A = min(A, cfg.K)
+    N, d = x.shape
+
+    xhat = jnp.zeros((N, 1, d), x.dtype)          # beams start identical
+    err = jnp.zeros((N, 1), x.dtype)
+    codes = jnp.zeros((N, 1, cfg.M), jnp.int32)
+
+    for m in range(cfg.M):
+        fm = jax.tree.map(lambda a: a[m], params["f"])
+        gm = (jax.tree.map(lambda a: a[m], params["g"])
+              if "g" in params else None)
+        cb = params["codebooks"][m]               # (K, d)
+        pre_cb = params["pre_codebooks"][m]
+        Bcur = xhat.shape[1]
+        r = x[:, None, :] - xhat                  # (N, Bcur, d)
+        idx, _ = preselect(params, gm, r, xhat, pre_cb, A, cfg)  # (N,Bcur,A)
+        cand = cb[idx]                            # (N, Bcur, A, d)
+        f_out = qinco.f_apply(fm, cand, xhat[..., None, :], cfg)
+        new_xhat = xhat[..., None, :] + f_out     # (N, Bcur, A, d)
+        new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
+
+        k = min(B, Bcur * A)
+        flat_err = new_err.reshape(N, Bcur * A)
+        top_err, flat_idx = lax.top_k(-flat_err, k)
+        b_idx = flat_idx // A                     # (N, k)
+        a_idx = flat_idx % A
+        take = lambda t, bi: jnp.take_along_axis(t, bi, axis=1)
+        xhat = jnp.take_along_axis(
+            new_xhat.reshape(N, Bcur * A, d), flat_idx[..., None], axis=1)
+        sel_code = jnp.take_along_axis(
+            idx.reshape(N, Bcur * A), flat_idx, axis=1)    # (N, k)
+        codes = take(codes, b_idx[..., None])
+        codes = codes.at[:, :, m].set(sel_code)
+        err = -top_err
+
+    best = jnp.argmin(err, axis=1)
+    codes_best = jnp.take_along_axis(codes, best[:, None, None], 1)[:, 0]
+    xhat_best = jnp.take_along_axis(xhat, best[:, None, None], 1)[:, 0]
+    mse = jnp.mean(jnp.min(err, axis=1))
+    return codes_best, xhat_best, mse
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_forward(params, x, codes, cfg: QincoConfig):
+    """Differentiable teacher-forced pass on the selected codes.
+
+    loss = sum_m ||x - xhat^m||^2 (per-step reconstruction, as in QINCo)
+         + aux: pre-codebook C~ regression toward the step residuals.
+    """
+    traj = qinco.decode_partial(params, codes, cfg)       # (N, M, d)
+    errs = jnp.sum(jnp.square(x[:, None, :] - traj), axis=-1)   # (N, M)
+    main = jnp.mean(jnp.sum(errs, axis=1))
+
+    # residual targets r^m = x - xhat^{m-1} (stop-grad), pre-codebook entries
+    prev = jnp.concatenate([jnp.zeros_like(traj[:, :1]), traj[:, :-1]], 1)
+    resid = lax.stop_gradient(x[:, None, :] - prev)       # (N, M, d)
+    pre = params["pre_codebooks"]                         # (M, K, d)
+    # gather C~[m, codes[n, m]] -> (N, M, d)
+    sel = pre[jnp.arange(cfg.M)[None, :], codes]          # (N, M, d)
+    aux = jnp.mean(jnp.sum(jnp.square(resid - sel), axis=-1))
+    return main + aux, (main, aux, jnp.mean(errs[:, -1]))
+
+
+def reconstruction_mse(params, x, cfg: QincoConfig, A=None, B=None):
+    _, xhat, _ = encode(params, x, cfg, A, B)
+    return jnp.mean(jnp.sum(jnp.square(x - xhat), axis=-1))

@@ -1,0 +1,79 @@
+"""IVF coarse quantizer (paper §3.3, Fig. 3).
+
+TPU adaptation: the HNSW graph walk over IVF centroids is replaced by a
+brute-force centroid matmul + top_k (MXU-friendly; DESIGN.md §3). Buckets
+are laid out as a padded dense (K_ivf, bucket_cap) table so that gathering
+N_probe buckets is a static-shape operation.
+
+Also provides the RQ quantization of IVF centroids (codes I~) consumed by
+the pairwise decoder (integration of pairwise decoding with IVF).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rq as rq_mod
+from repro.core.kmeans import kmeans, pairwise_sqdist
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    centroids: jnp.ndarray        # (K_ivf, d)
+    buckets: jnp.ndarray          # (K_ivf, cap) int32 ids into the database
+    bucket_mask: jnp.ndarray      # (K_ivf, cap) bool (False = padding)
+    assignments: jnp.ndarray      # (N,) bucket of each db vector
+    centroid_codes: Optional[jnp.ndarray] = None   # (K_ivf, M~) I~ codes
+    centroid_rq_books: Optional[jnp.ndarray] = None  # (M~, K, d)
+
+
+jax.tree_util.register_dataclass(
+    IVFIndex,
+    data_fields=("centroids", "buckets", "bucket_mask", "assignments",
+                 "centroid_codes", "centroid_rq_books"),
+    meta_fields=())
+
+
+def build_ivf(key, xb, k_ivf: int, *, kmeans_iters: int = 10,
+              cap_factor: float = 2.0, m_tilde: int = 0, K: int = 256):
+    """Train coarse centroids on xb and bucket the database."""
+    n = xb.shape[0]
+    cent, assign = kmeans(key, xb, k_ivf, kmeans_iters)
+    cap = int(np.ceil(n / k_ivf * cap_factor))
+    assign_np = np.asarray(assign)
+    buckets = np.full((k_ivf, cap), 0, np.int32)
+    mask = np.zeros((k_ivf, cap), bool)
+    fill = np.zeros(k_ivf, np.int32)
+    for i, b in enumerate(assign_np):
+        if fill[b] < cap:
+            buckets[b, fill[b]] = i
+            mask[b, fill[b]] = True
+            fill[b] += 1
+    idx = IVFIndex(centroids=cent, buckets=jnp.asarray(buckets),
+                   bucket_mask=jnp.asarray(mask),
+                   assignments=jnp.asarray(assign_np))
+    if m_tilde > 0:
+        key, sub = jax.random.split(key)
+        books = rq_mod.rq_train(sub, cent, m_tilde, K)
+        codes, _ = rq_mod.rq_encode(books, cent, B=4)
+        idx.centroid_codes = codes
+        idx.centroid_rq_books = books
+    return idx
+
+
+def probe(index: IVFIndex, q, n_probe: int):
+    """q: (Q, d) -> (bucket ids (Q, n_probe), candidate ids (Q, n_probe*cap),
+    candidate mask)."""
+    d2 = pairwise_sqdist(q, index.centroids)
+    _, top = jax.lax.top_k(-d2, n_probe)                  # (Q, n_probe)
+    cand = index.buckets[top].reshape(q.shape[0], -1)
+    mask = index.bucket_mask[top].reshape(q.shape[0], -1)
+    return top, cand, mask
+
+
+def residual_to_centroid(index: IVFIndex, x, assignment):
+    return x - index.centroids[assignment]

@@ -1,0 +1,49 @@
+"""Batched Lloyd k-means in JAX (used for RQ/IVF/KV-cache codebooks)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pairwise_sqdist(x, c):
+    """x: (N, d), c: (K, d) -> (N, K) squared L2."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    return x2 - 2.0 * x @ c.T + c2
+
+
+def assign(x, c):
+    return jnp.argmin(pairwise_sqdist(x, c), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key, x, k: int, iters: int = 10):
+    """Returns (centroids (k, d), assignments (N,)).
+
+    Init: random data points. Empty clusters keep their previous centroid
+    (the training loop separately resets dead codewords, paper App. A.2).
+    """
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, (k,), replace=n < k)
+    c0 = x[idx]
+    if n < k:   # de-duplicate by noise so clusters can separate
+        c0 = c0 + 1e-3 * jax.random.normal(key, c0.shape, c0.dtype)
+
+    def step(c, _):
+        a = assign(x, c)
+        onehot = jax.nn.one_hot(a, k, dtype=x.dtype)         # (N, K)
+        counts = jnp.sum(onehot, axis=0)                     # (K,)
+        sums = onehot.T @ x                                  # (K, d)
+        new_c = jnp.where(counts[:, None] > 0,
+                          sums / jnp.maximum(counts[:, None], 1), c)
+        return new_c, None
+
+    c, _ = lax.scan(step, c0, None, length=iters)
+    return c, assign(x, c)
+
+
+def kmeans_cost(x, c):
+    return jnp.mean(jnp.min(pairwise_sqdist(x, c), axis=-1))

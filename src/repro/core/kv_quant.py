@@ -1,0 +1,65 @@
+"""BEYOND-PAPER: residual-quantized KV caches for LM decode.
+
+Applies the paper's RQ machinery to per-head key/value vectors: each
+(head_dim,) vector is encoded to `m_bytes` codes against per-(layer, head)
+codebooks fitted offline with k-means on sampled K/V activations. Decode
+attention dequantizes cache tiles with the one-hot MXU trick
+(`kernels/kv_dequant_attn.py` fuses this with the attention math).
+
+Compression: head_dim * 2 bytes (bf16) -> m_bytes, e.g. 128-dim head at
+4 bytes = 64x. The decode-roofline memory term scales down accordingly
+(EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans
+from repro.models.dense import _dequant_chunk, _rq_encode_vec
+
+
+def fit_kv_codebooks(key, kv_samples, m_bytes: int, codebook_size: int,
+                     iters: int = 8):
+    """kv_samples: (S, KVH, D) -> codebooks (KVH, m_bytes, K, D).
+
+    Residual k-means per head: codebook m fits the residual left by
+    codebooks < m (exactly RQ training on the K/V vector stream)."""
+    S, KVH, D = kv_samples.shape
+    books = []
+    r = jnp.moveaxis(kv_samples, 1, 0).astype(jnp.float32)   # (KVH, S, D)
+    for m in range(m_bytes):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, KVH)
+        cb, asn = jax.vmap(lambda k, x: kmeans(k, x, codebook_size, iters)
+                           )(keys, r)
+        books.append(cb)
+        r = r - jax.vmap(lambda c, a: c[a])(cb, asn)
+    return jnp.stack(books, axis=1)                          # (KVH, M, K, D)
+
+
+def encode_kv(x, codebooks):
+    """x: (..., KVH, D) -> codes (..., KVH, m_bytes) uint8."""
+    return _rq_encode_vec(x, codebooks)
+
+
+def decode_kv(codes, codebooks):
+    """codes: (B, T, KVH, m) -> (B, T, KVH, D)."""
+    return _dequant_chunk(codes, codebooks)
+
+
+def quantization_mse(x, codebooks):
+    codes = encode_kv(x, codebooks)
+    xhat = decode_kv(codes[None] if codes.ndim == 3 else codes,
+                     codebooks)
+    if x.ndim == 3:
+        xhat = xhat[0]
+    return jnp.mean(jnp.sum(jnp.square(x - xhat), axis=-1))
+
+
+def compression_ratio(head_dim: int, m_bytes: int,
+                      act_bytes: float = 2.0) -> float:
+    return head_dim * act_bytes / m_bytes

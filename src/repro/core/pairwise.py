@@ -1,0 +1,118 @@
+"""Pairwise additive decoding (paper §3.3, Eq. 8-9).
+
+Combined codes I^{i,j} = I^i * K + I^j index codebooks of size K^2, chosen
+greedily RQ-style over all pairs of available code columns (QINCo2 codes
+plus the RQ-quantized IVF-centroid codes I~). Each codebook is the ridge
+per-bucket mean of the current residual — the least-squares solution for a
+one-hot design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PairwiseDecoder:
+    pairs: Tuple[Tuple[int, int], ...]  # column indices into the code matrix
+    codebooks: jnp.ndarray              # (M', K^2, d)
+    K: int
+
+    def __post_init__(self):
+        self.pairs = tuple(tuple(p) for p in self.pairs)
+
+    def decode(self, codes):
+        return pairwise_decode(self.codebooks, codes, self.pairs, self.K)
+
+
+jax.tree_util.register_dataclass(
+    PairwiseDecoder, data_fields=("codebooks",), meta_fields=("pairs", "K"))
+
+
+@partial(jax.jit, static_argnames=("K",))
+def _bucket_fit(codes_i, codes_j, r, K: int, ridge: float = 1.0):
+    """Per-bucket ridge means + achieved SSE reduction for one pair."""
+    bucket = codes_i * K + codes_j                       # (N,)
+    d = r.shape[1]
+    sums = jnp.zeros((K * K, d), jnp.float32).at[bucket].add(r)
+    cnts = jnp.zeros((K * K,), jnp.float32).at[bucket].add(1.0)
+    cb = sums / (cnts[:, None] + ridge)
+    # SSE reduction = sum_b <cb_b, sums_b> (exact for ridge=0)
+    gain = jnp.sum(cb * sums)
+    return cb, gain
+
+
+def fit_pairwise(codes, x, K: int, n_books: int, *,
+                 candidate_pairs: Sequence[Tuple[int, int]] = None,
+                 ridge: float = 1.0, verbose: bool = False):
+    """Greedy pair selection (Eq. 8). codes: (N, M_all) int32; x: (N, d).
+
+    Returns a PairwiseDecoder with n_books codebooks. Columns may repeat
+    across selected pairs (paper: 'some input codes can be used several
+    times, or not at all')."""
+    N, M_all = codes.shape
+    if candidate_pairs is None:
+        candidate_pairs = [(i, j) for i in range(M_all)
+                           for j in range(i + 1, M_all)]
+    r = jnp.asarray(x, jnp.float32)
+    sel_pairs: List[Tuple[int, int]] = []
+    books = []
+    for t in range(n_books):
+        best = None
+        for (i, j) in candidate_pairs:
+            cb, gain = _bucket_fit(codes[:, i], codes[:, j], r, K, ridge)
+            if best is None or float(gain) > best[0]:
+                best = (float(gain), (i, j), cb)
+        gain, (i, j), cb = best
+        sel_pairs.append((i, j))
+        books.append(cb)
+        r = r - cb[codes[:, i] * K + codes[:, j]]
+        if verbose:
+            mse = float(jnp.mean(jnp.sum(r * r, -1)))
+            print(f"[pairwise] step {t}: pair=({i},{j}) mse={mse:.6g}")
+    return PairwiseDecoder(sel_pairs, jnp.stack(books), K)
+
+
+def consecutive_pairs_decoder(codes, x, K: int, *, ridge: float = 1.0):
+    """Baseline: fixed consecutive pairs (1,2),(3,4),... (Table 4)."""
+    M_all = codes.shape[1]
+    pairs = [(i, i + 1) for i in range(0, M_all - 1, 2)]
+    return _fixed_fit(codes, x, K, pairs, ridge)
+
+
+def _fixed_fit(codes, x, K, pairs, ridge):
+    r = jnp.asarray(x, jnp.float32)
+    books = []
+    for (i, j) in pairs:
+        cb, _ = _bucket_fit(codes[:, i], codes[:, j], r, K, ridge)
+        books.append(cb)
+        r = r - cb[codes[:, i] * K + codes[:, j]]
+    return PairwiseDecoder(list(pairs), jnp.stack(books), K)
+
+
+def pairwise_decode(codebooks, codes, pairs, K: int):
+    """codebooks: (M', K^2, d); codes: (N, M_all) -> (N, d)."""
+    out = jnp.zeros((codes.shape[0], codebooks.shape[-1]), jnp.float32)
+    for t, (i, j) in enumerate(pairs):
+        out = out + codebooks[t, codes[:, i] * K + codes[:, j]]
+    return out
+
+
+def pairwise_lut(codebooks, q):
+    """(Q, M', K^2) inner-product LUTs for the search cascade."""
+    return jnp.einsum("qd,tkd->qtk", q, codebooks)
+
+
+def pairwise_scores(lut, codes, pairs, K: int, norms):
+    """lut: (Q, M', K^2); codes: (N, M_all); norms ||xhat_pair||^2 -> (Q,N)."""
+    buckets = jnp.stack([codes[:, i] * K + codes[:, j] for i, j in pairs],
+                        axis=1)                           # (N, M')
+    ip = jnp.sum(jnp.take_along_axis(
+        lut[:, None, :, :], buckets[None, :, :, None], axis=3)[..., 0],
+        axis=2)                                           # (Q, N)
+    return 2.0 * ip - norms[None, :]

@@ -1,0 +1,155 @@
+"""QINCo2 model: implicit neural codebooks (paper §3, App. A.1).
+
+f_theta (Eq. 10-13), per step m:
+    c_emb = P_d^de(c)
+    v_0   = c_emb + L_{d+de}^{de}(concat[c_emb ; xhat])     (bias)
+    v_i   = v_{i-1} + L_dh^de(relu(L_de^dh(v_{i-1})))       (no bias)
+    f     = c + P_de^d(v_L)
+
+Pre-selection g_phi (Eq. 6): with L_s = 0 (paper's Pareto-optimal choice)
+g(c|x) = c, i.e. a plain learned codebook C~. L_s >= 1 uses the same
+residual architecture with hidden dim 128.
+
+`qinco1_mode` reproduces the QINCo baseline: d_e = d (identity outer
+projections) and greedy encoding (A=K, B=1) — used for the Table 3 ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.qinco2 import QincoConfig
+from repro.models.common import ParamSpec, init_params, is_spec
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _step_specs(cfg: QincoConfig, L: int, de: int, dh: int) -> Dict[str, Any]:
+    d = cfg.d
+    p: Dict[str, Any] = {
+        "concat_w": ParamSpec((d + de, de), (None, None)),
+        "concat_b": ParamSpec((de,), (None,), init="zeros"),
+        "blocks_w1": ParamSpec((L, de, dh), (None, None, None)),
+        "blocks_w2": ParamSpec((L, dh, de), (None, None, None),
+                               init="zeros"),     # paper: zero-init down-proj
+    }
+    if de != d:
+        p["in_proj"] = ParamSpec((d, de), (None, None))
+        p["out_proj"] = ParamSpec((de, d), (None, None))
+    return p
+
+
+def param_specs(cfg: QincoConfig) -> Dict[str, Any]:
+    """All step networks stacked over M (scanned at apply time)."""
+    f = _step_specs(cfg, cfg.L, cfg.de, cfg.dh)
+    stacked = {k: ParamSpec((cfg.M,) + v.shape, ("steps",) + v.axes, v.dtype,
+                            v.init, v.scale) for k, v in f.items()}
+    out = {
+        "codebooks": ParamSpec((cfg.M, cfg.K, cfg.d), ("steps", None, None),
+                               init="normal", scale=0.1),
+        "pre_codebooks": ParamSpec((cfg.M, cfg.K, cfg.d),
+                                   ("steps", None, None),
+                                   init="normal", scale=0.1),
+        "f": stacked,
+    }
+    if cfg.Ls >= 1:
+        g = _step_specs(cfg, cfg.Ls, 128, 128)
+        out["g"] = {k: ParamSpec((cfg.M,) + v.shape, ("steps",) + v.axes,
+                                 v.dtype, v.init, v.scale)
+                    for k, v in g.items()}
+    return out
+
+
+def init_from_rq(params, rq_codebooks, key, noise: float = 0.025):
+    """Paper init: noisy RQ codebooks (sigma = noise * per-feature std of the
+    RQ codebooks), shared by C and C~."""
+    s = jnp.std(rq_codebooks)
+    eps = noise * s * jax.random.normal(key, rq_codebooks.shape)
+    cb = rq_codebooks + eps
+    return dict(params, codebooks=cb, pre_codebooks=jnp.array(rq_codebooks))
+
+
+# ---------------------------------------------------------------------------
+# Step network
+# ---------------------------------------------------------------------------
+
+
+def f_apply(step_params, c, xhat, cfg: QincoConfig):
+    """f_theta^m. c: (..., d); xhat: (..., d) -> (..., d).
+
+    Batch dims of c and xhat broadcast jointly (the encoder passes
+    c=(N,B,A,d) against xhat=(N,B,1,d); the L_s>=1 pre-selector passes
+    c=(1,1,K,d))."""
+    p = step_params
+    if "in_proj" in p:
+        c_emb = c @ p["in_proj"]
+    else:
+        c_emb = c
+    bshape = jnp.broadcast_shapes(c_emb.shape[:-1], xhat.shape[:-1])
+    c_emb = jnp.broadcast_to(c_emb, bshape + c_emb.shape[-1:])
+    xb = jnp.broadcast_to(xhat, bshape + (cfg.d,))
+    v = c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ p["concat_w"] \
+        + p["concat_b"]
+
+    def block(v, wb):
+        w1, w2 = wb
+        return v + jax.nn.relu(v @ w1) @ w2, None
+
+    v, _ = lax.scan(block, v, (p["blocks_w1"], p["blocks_w2"]))
+    if "out_proj" in p:
+        return c + v @ p["out_proj"]
+    return c + v
+
+
+def g_apply(params, m_params_g, c, xhat, cfg: QincoConfig):
+    """g_phi^m (only for L_s >= 1)."""
+    return f_apply(m_params_g, c, xhat, cfg)
+
+
+def step_params_at(params, m):
+    """Slice the stacked step params at step m (trace-safe)."""
+    return jax.tree.map(lambda a: a[m], params["f"])
+
+
+# ---------------------------------------------------------------------------
+# Decoding (Eq. 4): xhat = sum_m f_theta^m(C^m[i_m] | xhat^{m-1})
+# ---------------------------------------------------------------------------
+
+
+def decode(params, codes, cfg: QincoConfig):
+    """codes: (N, M) int32 -> (N, d) reconstruction."""
+    N = codes.shape[0]
+    xhat0 = jnp.zeros((N, cfg.d), jnp.float32)
+
+    def step(xhat, xs):
+        fm, cb, idx = xs
+        c = cb[idx]                               # (N, d)
+        return xhat + f_apply(fm, c, xhat, cfg), None
+
+    xhat, _ = lax.scan(step, xhat0,
+                       (params["f"], params["codebooks"], codes.T))
+    return xhat
+
+
+def decode_partial(params, codes, cfg: QincoConfig):
+    """Per-step reconstructions (N, M, d) — used for training loss and the
+    dynamic-rate evaluation (paper Fig. S3)."""
+    N = codes.shape[0]
+    xhat0 = jnp.zeros((N, cfg.d), jnp.float32)
+
+    def step(xhat, xs):
+        fm, cb, idx = xs
+        new = xhat + f_apply(fm, cb[idx], xhat, cfg)
+        return new, new
+
+    _, traj = lax.scan(step, xhat0,
+                       (params["f"], params["codebooks"], codes.T))
+    return jnp.moveaxis(traj, 0, 1)               # (N, M, d)

@@ -1,0 +1,129 @@
+"""Classic MCQ baselines: RQ (greedy + beam), PQ, OPQ.
+
+These are both Table-3 baselines and the initialization path for QINCo2
+(noisy RQ codebooks, paper App. A.2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kmeans import kmeans, pairwise_sqdist
+
+
+# ---------------------------------------------------------------------------
+# Residual Quantization
+# ---------------------------------------------------------------------------
+
+
+def rq_train(key, x, M: int, K: int, iters: int = 10):
+    """Sequential k-means on residuals -> codebooks (M, K, d)."""
+    cbs = []
+    r = x
+    for m in range(M):
+        key, sub = jax.random.split(key)
+        c, a = kmeans(sub, r, K, iters)
+        cbs.append(c)
+        r = r - c[a]
+    return jnp.stack(cbs)
+
+
+@partial(jax.jit, static_argnames=("B",))
+def rq_encode(codebooks, x, B: int = 1):
+    """Beam-search RQ encode. codebooks: (M, K, d); x: (N, d).
+
+    Returns (codes (N, M), xhat (N, d))."""
+    M, K, d = codebooks.shape
+    N = x.shape[0]
+    xhat = jnp.zeros((N, 1, d), x.dtype)
+    codes = jnp.zeros((N, 1, M), jnp.int32)
+    err = jnp.zeros((N, 1), x.dtype)
+
+    for m in range(M):
+        cb = codebooks[m]
+        Bcur = xhat.shape[1]
+        r = x[:, None, :] - xhat
+        d2 = (jnp.sum(r * r, -1, keepdims=True)
+              - 2.0 * jnp.einsum("nbd,kd->nbk", r, cb)
+              + jnp.sum(cb * cb, -1))                    # (N, Bcur, K)
+        total = err[..., None] + d2
+        k = min(B, Bcur * K)
+        top, flat = lax.top_k(-total.reshape(N, Bcur * K), k)
+        b_idx, k_idx = flat // K, flat % K
+        xhat = (jnp.take_along_axis(xhat, b_idx[..., None], 1)
+                + cb[k_idx])
+        codes = jnp.take_along_axis(codes, b_idx[..., None], 1)
+        codes = codes.at[:, :, m].set(k_idx)
+        err = -top
+
+    best = jnp.argmin(err, 1)
+    return (jnp.take_along_axis(codes, best[:, None, None], 1)[:, 0],
+            jnp.take_along_axis(xhat, best[:, None, None], 1)[:, 0])
+
+
+def rq_decode(codebooks, codes):
+    M = codebooks.shape[0]
+    return jnp.sum(codebooks[jnp.arange(M)[None], codes], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Product Quantization / OPQ
+# ---------------------------------------------------------------------------
+
+
+def pq_train(key, x, M: int, K: int, iters: int = 10):
+    """x: (N, d), d % M == 0 -> codebooks (M, K, d//M)."""
+    N, d = x.shape
+    ds = d // M
+    xs = x.reshape(N, M, ds)
+    cbs = []
+    for m in range(M):
+        key, sub = jax.random.split(key)
+        c, _ = kmeans(sub, xs[:, m], K, iters)
+        cbs.append(c)
+    return jnp.stack(cbs)
+
+
+def pq_encode(codebooks, x):
+    M, K, ds = codebooks.shape
+    xs = x.reshape(x.shape[0], M, ds)
+    d2 = jnp.stack([pairwise_sqdist(xs[:, m], codebooks[m])
+                    for m in range(M)], axis=1)          # (N, M, K)
+    return jnp.argmin(d2, axis=-1)
+
+
+def pq_decode(codebooks, codes):
+    M = codebooks.shape[0]
+    parts = codebooks[jnp.arange(M)[None], codes]        # (N, M, ds)
+    return parts.reshape(codes.shape[0], -1)
+
+
+def opq_train(key, x, M: int, K: int, iters: int = 10, outer: int = 5):
+    """OPQ (Ge et al. 2013): alternate PQ fit and Procrustes rotation."""
+    d = x.shape[1]
+    R = jnp.eye(d)
+    cbs = pq_train(key, x, M, K, iters)
+    for _ in range(outer):
+        xr = x @ R
+        codes = pq_encode(cbs, xr)
+        xhat = pq_decode(cbs, codes)
+        # R = argmin ||xR - xhat||: Procrustes on x^T xhat
+        u, _, vt = jnp.linalg.svd(x.T @ xhat, full_matrices=False)
+        R = u @ vt
+        key, sub = jax.random.split(key)
+        cbs = pq_train(sub, x @ R, M, K, iters)
+    return cbs, R
+
+
+def opq_encode(cbs_R, x):
+    cbs, R = cbs_R
+    return pq_encode(cbs, x @ R)
+
+
+def opq_decode(cbs_R, codes):
+    cbs, R = cbs_R
+    return pq_decode(cbs, codes) @ R.T

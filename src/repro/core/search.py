@@ -1,0 +1,166 @@
+"""Large-scale nearest-neighbor search cascade (paper §3.3, Fig. 3):
+
+    IVF probe -> ADC (unitary AQ/RQ LUT) shortlist S_AQ
+              -> pairwise-decoder shortlist S_pairs
+              -> full QINCo2 neural re-ranking.
+
+Plus the distributed variant: database sharded over the `model` mesh axis,
+per-shard ADC top-k, all-gather + global top-k merge
+(`distributed_search`), expressed with shard_map — the billion-scale
+layout exercised by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.qinco2 import QincoConfig
+from repro.core import aq as aq_mod
+from repro.core import ivf as ivf_mod
+from repro.core import pairwise as pw_mod
+from repro.core import qinco
+
+
+@dataclasses.dataclass
+class SearchIndex:
+    """Everything needed at query time (built by `build_index`)."""
+    ivf: ivf_mod.IVFIndex
+    codes: jnp.ndarray                 # (N, M) QINCo2 codes (of residuals)
+    aq_books: jnp.ndarray              # (M, K, d) unitary look-up decoder
+    aq_norms: jnp.ndarray              # (N,) ||xhat_aq||^2 (w/ centroid)
+    pw: pw_mod.PairwiseDecoder         # pairwise decoder over [codes, I~]
+    pw_norms: jnp.ndarray              # (N,)
+    qinco_params: dict
+    cfg: QincoConfig
+
+    @property
+    def ext_codes(self):
+        """codes ++ centroid RQ codes I~ per vector: (N, M + M~)."""
+        tilde = self.ivf.centroid_codes[self.ivf.assignments]
+        return jnp.concatenate([self.codes, tilde], axis=1)
+
+
+jax.tree_util.register_dataclass(
+    SearchIndex,
+    data_fields=("ivf", "codes", "aq_books", "aq_norms", "pw", "pw_norms",
+                 "qinco_params"),
+    meta_fields=("cfg",))
+
+
+def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
+                m_tilde: int = 2, n_pair_books: int = None,
+                encode_fn=None, verbose: bool = False) -> SearchIndex:
+    """Encode the database and fit the cascade decoders."""
+    from repro.core import encode as enc
+    n_pair_books = n_pair_books or 2 * cfg.M
+    k1, k2 = jax.random.split(key)
+    ivf = ivf_mod.build_ivf(k1, xb, k_ivf, m_tilde=m_tilde, K=cfg.K)
+    resid = ivf_mod.residual_to_centroid(ivf, xb, ivf.assignments)
+    encode_fn = encode_fn or (lambda v: enc.encode(
+        qinco_params, v, cfg, cfg.A_eval, cfg.B_eval)[0])
+    codes = encode_fn(resid)
+
+    # unitary AQ decoder on the residual codes
+    aq_books = aq_mod.fit_aq(codes, resid, cfg.M, cfg.K)
+    recon_aq = aq_mod.aq_decode(aq_books, codes) + ivf.centroids[
+        ivf.assignments]
+    aq_norms = jnp.sum(recon_aq * recon_aq, axis=-1)
+
+    # pairwise decoder over [QINCo2 codes ++ centroid RQ codes]
+    tilde = ivf.centroid_codes[ivf.assignments]
+    ext = jnp.concatenate([codes, tilde], axis=1)
+    pw = pw_mod.fit_pairwise(ext, xb, cfg.K, n_pair_books, verbose=verbose)
+    recon_pw = pw.decode(ext)
+    pw_norms = jnp.sum(recon_pw * recon_pw, axis=-1)
+
+    return SearchIndex(ivf=ivf, codes=codes, aq_books=aq_books,
+                       aq_norms=aq_norms, pw=pw, pw_norms=pw_norms,
+                       qinco_params=qinco_params, cfg=cfg)
+
+
+@partial(jax.jit, static_argnames=("n_probe", "n_short_aq", "n_short_pw",
+                                   "topk", "cfg"))
+def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
+           n_short_pw: int = 16, topk: int = 1, cfg: QincoConfig = None):
+    """Full cascade. q: (Q, d) -> (ids (Q, topk), dists (Q, topk))."""
+    cfg = cfg or index.cfg
+    Q = q.shape[0]
+    # 1. IVF probe ----------------------------------------------------------
+    top_b, cand, cmask = ivf_mod.probe(index.ivf, q, n_probe)
+    # 2. ADC over candidates (unitary AQ LUT) --------------------------------
+    lut = aq_mod.adc_lut(index.aq_books, q)               # (Q, M, K)
+    clut = jnp.einsum("qd,kd->qk", q, index.ivf.centroids)
+    cand_codes = index.codes[cand]                        # (Q, C, M)
+    ip = jnp.sum(jnp.take_along_axis(
+        lut[:, None], cand_codes[..., None], axis=3)[..., 0], axis=2)
+    ip = ip + jnp.take_along_axis(
+        clut, index.ivf.assignments[cand], axis=1)
+    score = 2.0 * ip - index.aq_norms[cand]
+    score = jnp.where(cmask, score, -jnp.inf)
+    s1, keep1 = jax.lax.top_k(score, n_short_aq)          # (Q, n_short_aq)
+    ids1 = jnp.take_along_axis(cand, keep1, axis=1)
+    # 3. pairwise decoder re-rank --------------------------------------------
+    plut = pw_mod.pairwise_lut(index.pw.codebooks, q)     # (Q, M', K^2)
+    ext1 = index.ext_codes[ids1]                          # (Q, S1, M_all)
+    buckets = jnp.stack([ext1[..., i] * cfg.K + ext1[..., j]
+                         for i, j in index.pw.pairs], axis=-1)
+    ipp = jnp.sum(jnp.take_along_axis(
+        plut[:, None], buckets[..., None], axis=3)[..., 0], axis=2)
+    score2 = 2.0 * ipp - index.pw_norms[ids1]
+    score2 = jnp.where(s1 > -jnp.inf, score2, -jnp.inf)
+    _, keep2 = jax.lax.top_k(score2, n_short_pw)
+    ids2 = jnp.take_along_axis(ids1, keep2, axis=1)       # (Q, n_short_pw)
+    # 4. full QINCo2 decode + exact distance ---------------------------------
+    flat = ids2.reshape(-1)
+    recon = qinco.decode(index.qinco_params, index.codes[flat], cfg)
+    recon = recon + index.ivf.centroids[index.ivf.assignments[flat]]
+    recon = recon.reshape(Q, n_short_pw, -1)
+    d2 = jnp.sum(jnp.square(q[:, None, :] - recon), axis=-1)
+    dtop, ktop = jax.lax.top_k(-d2, topk)
+    return jnp.take_along_axis(ids2, ktop, axis=1), -dtop
+
+
+# ---------------------------------------------------------------------------
+# Distributed search: database sharded across the mesh `model` axis
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_adc(mesh, model_axis: str = "model"):
+    """Per-shard ADC top-k + all-gather merge, as a shard_map collective.
+
+    db_codes: (N, M) sharded over model; lut: (Q, M, K) replicated;
+    norms: (N,) sharded. Returns (Q, k) global ids + scores."""
+    from jax.sharding import PartitionSpec as P
+
+    def local_topk(lut, codes, norms, base, k):
+        ip = jnp.sum(jnp.take_along_axis(
+            lut[:, None], codes[None, ..., None], axis=3)[..., 0], axis=2)
+        score = 2.0 * ip - norms[None]
+        s, i = jax.lax.top_k(score, k)                    # local top-k
+        gid = base + i
+        # gather all shards' candidates and reduce to a global top-k
+        s_all = jax.lax.all_gather(s, model_axis, axis=1, tiled=True)
+        g_all = jax.lax.all_gather(gid, model_axis, axis=1, tiled=True)
+        s2, i2 = jax.lax.top_k(s_all, k)
+        return jnp.take_along_axis(g_all, i2, axis=1), s2
+
+    def fn(lut, db_codes, norms, k: int):
+        nshard = mesh.shape[model_axis]
+        nloc = db_codes.shape[0] // nshard
+
+        def inner(lut, codes, norms):
+            idx = jax.lax.axis_index(model_axis)
+            return local_topk(lut, codes, norms, idx * nloc, k)
+
+        return jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(model_axis), P(model_axis)),
+            out_specs=(P(), P()), check_vma=False,
+        )(lut, db_codes, norms)
+
+    return fn

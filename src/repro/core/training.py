@@ -1,0 +1,132 @@
+"""QINCo2 training (paper App. A.2), with optional data-parallel sharding.
+
+Per batch: (1) encode with Q_QI-B under the *current* params — no autodiff;
+(2) one forward-backward pass through f on the selected codes only;
+(3) AdamW (wd 0.1), cosine schedule, grad clip; (4) per-epoch dead-codeword
+reset from the step-residual statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.qinco2 import QincoConfig
+from repro.core import encode as enc
+from repro.core import qinco, rq
+from repro.models.common import init_params
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+
+def normalize_dataset(x):
+    """Paper: per-feature mean 0, global std 1."""
+    mu = np.mean(x, axis=0, keepdims=True)
+    x = x - mu
+    sd = np.std(x)
+    return (x / sd).astype(np.float32), (mu, sd)
+
+
+def init_qinco2(key, x_train, cfg: QincoConfig):
+    """Init params: Kaiming nets (+zero down-proj) and noisy-RQ codebooks."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = init_params(qinco.param_specs(cfg), k1)
+    rq_cbs = rq.rq_train(k2, x_train[:min(len(x_train), 20_000)],
+                         cfg.M, cfg.K, iters=cfg.kmeans_init_iters)
+    return qinco.init_from_rq(params, rq_cbs, k3, cfg.codebook_init_noise)
+
+
+def make_train_step(cfg: QincoConfig, opt_cfg: adamw.AdamWConfig):
+    @jax.jit
+    def train_step(params, opt_state, x):
+        codes, _, _ = enc.encode(params, x, cfg, cfg.A_train, cfg.B_train)
+        codes = jax.lax.stop_gradient(codes)
+
+        def loss_fn(p):
+            loss, auxes = enc.train_forward(p, x, codes, cfg)
+            return loss, auxes
+
+        (loss, (main, aux, last_mse)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_s, metrics = adamw.update(grads, opt_state, params,
+                                             opt_cfg)
+        metrics.update(loss=loss, main=main, aux=aux, mse=last_mse)
+        # codeword usage for dead-code reset
+        usage = jnp.zeros((cfg.M, cfg.K), jnp.int32).at[
+            jnp.arange(cfg.M)[None], codes].add(1)
+        return new_p, new_s, metrics, usage
+    return train_step
+
+
+def reset_dead_codes(key, params, usage, resid_mu, resid_sd):
+    """Paper: reset unused codewords ~ U with the residual mean/std."""
+    M, K = usage.shape
+    d = params["codebooks"].shape[-1]
+    dead = usage == 0                                  # (M, K)
+    k1, k2 = jax.random.split(key)
+    lim = jnp.sqrt(3.0) * resid_sd[:, None, None]      # match std
+    new = resid_mu[:, None, :] + jax.random.uniform(
+        k1, (M, K, d), minval=-1.0, maxval=1.0) * lim
+    new_pre = resid_mu[:, None, :] + jax.random.uniform(
+        k2, (M, K, d), minval=-1.0, maxval=1.0) * lim
+    cb = jnp.where(dead[..., None], new, params["codebooks"])
+    pre = jnp.where(dead[..., None], new_pre, params["pre_codebooks"])
+    return dict(params, codebooks=cb, pre_codebooks=pre), int(dead.sum())
+
+
+def train(key, x_train, cfg: QincoConfig, *, steps_per_epoch=None,
+          epochs=None, x_val=None, log_every: int = 50, verbose=True):
+    """Full training loop (CPU-scale). Returns (params, history)."""
+    epochs = epochs or cfg.epochs
+    x_train = jnp.asarray(x_train)
+    n = x_train.shape[0]
+    bs = min(cfg.batch_size, n)
+    steps_per_epoch = steps_per_epoch or max(n // bs, 1)
+    total = steps_per_epoch * epochs
+    opt_cfg = adamw.AdamWConfig(
+        lr=cosine_with_warmup(cfg.lr, total, min(100, total // 10),
+                              cfg.min_lr_ratio),
+        weight_decay=cfg.weight_decay, grad_clip=cfg.grad_clip,
+    )
+    key, sub = jax.random.split(key)
+    params = init_qinco2(sub, np.asarray(x_train), cfg)
+    opt_state = adamw.init(params, opt_cfg)
+    step_fn = make_train_step(cfg, opt_cfg)
+
+    history = []
+    t0 = time.time()
+    for ep in range(epochs):
+        key, kperm, kreset = jax.random.split(key, 3)
+        order = jax.random.permutation(kperm, n)
+        usage_tot = jnp.zeros((cfg.M, cfg.K), jnp.int32)
+        for s in range(steps_per_epoch):
+            idx = jax.lax.dynamic_slice_in_dim(order, (s * bs) % max(n - bs, 1),
+                                               bs)
+            xb = x_train[idx]
+            params, opt_state, metrics, usage = step_fn(params, opt_state, xb)
+            usage_tot = usage_tot + usage
+        # dead-code reset from last batch's residual stats
+        codes, xhat, _ = enc.encode(params, xb, cfg, cfg.A_train, cfg.B_train)
+        traj = qinco.decode_partial(params, codes, cfg)
+        prev = jnp.concatenate([jnp.zeros_like(traj[:, :1]), traj[:, :-1]], 1)
+        resid = xb[:, None, :] - prev                      # (N, M, d)
+        mu = jnp.mean(resid, axis=0)                       # (M, d)
+        sd = jnp.std(resid, axis=(0, 2))                   # (M,)
+        params, n_dead = reset_dead_codes(kreset, params, np.asarray(usage_tot),
+                                          mu, sd)
+        rec = {"epoch": ep, "loss": float(metrics["loss"]),
+               "mse": float(metrics["mse"]), "dead": n_dead,
+               "time": time.time() - t0}
+        if x_val is not None:
+            rec["val_mse"] = float(enc.reconstruction_mse(
+                params, jnp.asarray(x_val), cfg, cfg.A_eval, cfg.B_eval))
+        history.append(rec)
+        if verbose:
+            print(f"[qinco2] epoch {ep}: " + " ".join(
+                f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in rec.items() if k != "epoch"), flush=True)
+    return params, history

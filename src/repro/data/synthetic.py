@@ -1,0 +1,84 @@
+"""Synthetic datasets standing in for the paper's four benchmarks.
+
+The real sets (Deep1B, BigANN, FB-ssnpp, Contriever) are unavailable
+offline; we match dimensionality and generate anisotropic Gaussian-mixture
+data (clustered like CNN/SIFT embeddings) so *relative* claims are testable
+(DESIGN.md §7). Also provides LM token streams for the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+DATASET_DIMS = {
+    "bigann": 128,     # SIFT descriptors
+    "deep1b": 96,      # CNN image embeddings
+    "fb-ssnpp": 256,   # SSCD image embeddings
+    "contriever": 768, # text embeddings
+}
+
+
+def make_vectors(name: str, n: int, *, seed: int = 0,
+                 n_clusters: Optional[int] = None,
+                 dim: Optional[int] = None) -> np.ndarray:
+    """Clustered anisotropic GMM matching the named dataset's dim."""
+    d = dim or DATASET_DIMS[name]
+    n_clusters = n_clusters or max(32, d // 2)
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32) * 2.0
+    # anisotropic per-cluster covariances (low-rank + diag, like real emb.)
+    ranks = 8
+    lows = rng.normal(size=(n_clusters, d, ranks)).astype(np.float32) * 0.5
+    assign = rng.integers(0, n_clusters, size=n)
+    z = rng.normal(size=(n, ranks)).astype(np.float32)
+    eps = rng.normal(size=(n, d)).astype(np.float32) * 0.3
+    x = centers[assign] + np.einsum("ndr,nr->nd", lows[assign], z) + eps
+    return x.astype(np.float32)
+
+
+def make_splits(name: str, *, n_train: int, n_db: int, n_query: int,
+                seed: int = 0):
+    """(train, database, queries, ground-truth nn ids)."""
+    x = make_vectors(name, n_train + n_db + n_query, seed=seed)
+    xt, xb, xq = (x[:n_train], x[n_train:n_train + n_db],
+                  x[n_train + n_db:])
+    # queries perturbed toward db points for non-trivial recall
+    rng = np.random.default_rng(seed + 1)
+    pick = rng.integers(0, n_db, size=n_query)
+    xq = 0.7 * xq + 0.3 * xb[pick]
+    gt = np.argmin(((xq[:, None] - xb[None]) ** 2).sum(-1), axis=1)
+    return xt, xb, xq, gt
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+
+def batch_at(vocab: int, seq_len: int, batch: int, step: int, *,
+             seed: int = 0) -> dict:
+    """Random-access deterministic LM batch (noisy Markov chain, learnable):
+    restart-safe by construction — batch(step) depends only on (args)."""
+    rng = np.random.default_rng(seed)
+    nxt = rng.integers(0, vocab, size=(vocab, 4))    # transition structure
+    srng = np.random.default_rng((seed + 1) * 1_000_003 + step)
+    toks = np.empty((batch, seq_len + 1), np.int32)
+    toks[:, 0] = srng.integers(0, vocab, size=batch)
+    choice = srng.integers(0, 4, size=(batch, seq_len))
+    noise = srng.random((batch, seq_len)) < 0.1
+    rand = srng.integers(0, vocab, size=(batch, seq_len))
+    for t in range(seq_len):
+        nexts = nxt[toks[:, t], choice[:, t]]
+        toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nexts)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def token_stream(vocab: int, seq_len: int, batch: int, *, seed: int = 0
+                 ) -> Iterator[dict]:
+    """Iterator view over batch_at."""
+    step = 0
+    while True:
+        yield batch_at(vocab, seq_len, batch, step, seed=seed)
+        step += 1

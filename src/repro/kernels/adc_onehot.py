@@ -1,0 +1,62 @@
+"""ADC shortlist scan as a one-hot MXU matmul (paper Fig. 3, 'Faiss search').
+
+CPU Faiss computes additive-decoder distances with per-byte table lookups;
+TPU gathers are slow, so the TPU-native form is:
+
+    scores[q, n] = sum_m lut[q, m, codes[n, m]]
+                 = lut_flat[q] . onehot_flat[n]          (MK-dim dot)
+
+i.e. a (TQ, M*K) x (M*K, TN) matmul on the systolic array. The one-hot
+expansion is built in VMEM from an iota comparison (broadcast + reshape:
+no gather anywhere). This is the billion-scale search hot loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]                                # (TN, M) int32
+    lut = lut_ref[...].astype(jnp.float32)                # (TQ, M*K)
+    tn, M = codes.shape
+    MK = lut.shape[1]
+    K = MK // M
+    codes_b = jnp.broadcast_to(codes[:, :, None], (tn, M, K))
+    kio = jax.lax.broadcasted_iota(jnp.int32, (tn, M, K), 2)
+    onehot = (codes_b == kio).astype(jnp.float32).reshape(tn, MK)
+    out_ref[...] = jax.lax.dot_general(
+        lut, onehot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (TQ, TN)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_q", "tile_n", "interpret"))
+def adc_scores(codes, lut, *, tile_q: int = 64, tile_n: int = 256,
+               interpret: bool = True):
+    """codes: (N, M) int32; lut: (Q, M, K) -> (Q, N) scores."""
+    N, M = codes.shape
+    Q, _, K = lut.shape
+    tile_q = min(tile_q, Q)
+    tile_n = min(tile_n, N)
+    pq, pn = (-Q) % tile_q, (-N) % tile_n
+    if pq:
+        lut = jnp.pad(lut, ((0, pq), (0, 0), (0, 0)))
+    if pn:
+        codes = jnp.pad(codes, ((0, pn), (0, 0)))
+    lut_flat = lut.reshape(Q + pq, M * K)
+    out = pl.pallas_call(
+        _kernel,
+        grid=((Q + pq) // tile_q, (N + pn) // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_n, M), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((tile_q, M * K), lambda qi, ni: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_n), lambda qi, ni: (qi, ni)),
+        out_shape=jax.ShapeDtypeStruct((Q + pq, N + pn), jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), lut_flat)
+    return out[:Q, :N]

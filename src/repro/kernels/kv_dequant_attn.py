@@ -1,0 +1,121 @@
+"""Fused dequantize + flash-decode attention over an RQ-compressed KV cache
+(BEYOND-PAPER; pairs with core/kv_quant.py).
+
+One query step attends a cache stored as uint8 RQ codes. Per (batch, kv-head)
+program, the grid walks T in tiles; each tile:
+    1. dequantizes K and V codes with the one-hot MXU trick
+       (codes (TT, Mq) -> onehot (TT, Mq*Kq) @ cb_flat (Mq*Kq, D)),
+    2. scores q . k^T and updates an online-softmax accumulator
+       (running max / denominator / weighted V in VMEM scratch).
+The dequantized cache tile lives only in VMEM: HBM traffic is the *codes*
+(64x smaller than bf16 K/V at Mq=4, D=128), which is the whole point — the
+decode roofline is HBM-bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant(codes, cb_flat, Kq: int):
+    """codes: (TT, Mq) int32; cb_flat: (Mq*Kq, D) -> (TT, D).
+
+    One-hot over the flattened (Mq*Kq) axis, built from an iota comparison
+    (no gather), then a single MXU matmul summing the Mq codeword reads."""
+    tt, Mq = codes.shape
+    kio = jax.lax.broadcasted_iota(jnp.int32, (tt, Mq, Kq), 2)
+    onehot = (jnp.broadcast_to(codes[:, :, None], (tt, Mq, Kq)) == kio)
+    onehot = onehot.astype(jnp.float32).reshape(tt, Mq * Kq)
+    return jax.lax.dot_general(onehot, cb_flat.astype(jnp.float32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _kernel(q_ref, ck_ref, cv_ref, cbk_ref, cbv_ref, mask_ref, out_ref,
+            m_scr, l_scr, acc_scr, *, Kq: int, nT: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    scale = q.shape[-1] ** -0.5
+    codes_k = ck_ref[0, :, 0].astype(jnp.int32)            # (TT, Mq)
+    codes_v = cv_ref[0, :, 0].astype(jnp.int32)
+    cbk = cbk_ref[0].reshape(-1, q.shape[-1])              # (Mq*Kq, D)
+    cbv = cbv_ref[0].reshape(-1, q.shape[-1])
+    k = _dequant(codes_k, cbk, Kq)                         # (TT, D)
+    v = _dequant(codes_v, cbv, Kq)
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, TT)
+    s = s + mask_ref[...]                                  # (1, TT) 0/-inf
+
+    m_prev = m_scr[...]                                    # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                 # (G, TT)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, D)
+    m_scr[...] = m_new
+
+    @pl.when(t == nT - 1)
+    def _fini():
+        out_ref[0, 0] = (acc_scr[...]
+                         / jnp.maximum(l_scr[...], 1e-30)).astype(
+            out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len, *,
+                    tile_t: int = 512, interpret: bool = True):
+    """q: (B, KVH, G, D); codes_*: (B, T, KVH, Mq); cb_*: (KVH, Mq, Kq, D);
+    valid_len: int32 scalar. Returns (B, KVH, G, D)."""
+    B, KVH, G, D = q.shape
+    _, T, _, Mq = codes_k.shape
+    Kq = cb_k.shape[2]
+    tile_t = min(tile_t, T)
+    pad = (-T) % tile_t
+    if pad:
+        codes_k = jnp.pad(codes_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        codes_v = jnp.pad(codes_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nT = Tp // tile_t
+    mask = jnp.where(jnp.arange(Tp) < valid_len, 0.0, NEG_INF)[None]  # (1,Tp)
+    grid = (B * KVH, nT)
+    out = pl.pallas_call(
+        functools.partial(_kernel, Kq=Kq, nT=nT),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda bh, t: (bh // KVH, bh % KVH, 0, 0)),
+            pl.BlockSpec((1, tile_t, 1, Mq),
+                         lambda bh, t: (bh // KVH, t, bh % KVH, 0)),
+            pl.BlockSpec((1, tile_t, 1, Mq),
+                         lambda bh, t: (bh // KVH, t, bh % KVH, 0)),
+            pl.BlockSpec((1, Mq, Kq, D), lambda bh, t: (bh % KVH, 0, 0, 0)),
+            pl.BlockSpec((1, Mq, Kq, D), lambda bh, t: (bh % KVH, 0, 0, 0)),
+            pl.BlockSpec((1, tile_t), lambda bh, t: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda bh, t: (bh // KVH, bh % KVH, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, codes_k.astype(jnp.int32), codes_v.astype(jnp.int32), cb_k, cb_v,
+      mask)
+    return out

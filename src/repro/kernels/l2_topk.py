@@ -1,0 +1,69 @@
+"""Fused L2-distance + top-A pre-selection kernel (paper Eq. 6, L_s = 0).
+
+The QINCo2 encoder calls this K->A shortlist once per (step x beam): it is
+the inner loop of Q_QI-A/Q_QI-B. Fusing the distance matmul with iterative
+top-A selection keeps the (TILE_N, K) distance block in VMEM — the (N, K)
+distance matrix never reaches HBM.
+
+Tiling: grid over N; per tile the codebook (K, d) and its squared norms are
+resident in VMEM (K=256, d<=768 -> <=0.8 MB), distances computed on the MXU
+via r @ cb^T, then A sequential masked argmins on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, cb_ref, cb2_ref, idx_ref, d2_ref, *, A: int):
+    r = r_ref[...].astype(jnp.float32)                   # (TN, d)
+    cb = cb_ref[...].astype(jnp.float32)                 # (K, d)
+    cb2 = cb2_ref[...].astype(jnp.float32)               # (1, K)
+    tn, K = r.shape[0], cb.shape[0]
+    d2 = (jnp.sum(r * r, axis=1, keepdims=True)
+          - 2.0 * jax.lax.dot_general(
+              r, cb, (((1,), (1,)), ((), ())),
+              preferred_element_type=jnp.float32)
+          + cb2)                                         # (TN, K)
+    kiota = jax.lax.broadcasted_iota(jnp.int32, (tn, K), 1)
+    for a in range(A):                                   # static unroll
+        val = jnp.min(d2, axis=1)
+        arg = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        idx_ref[:, a] = arg
+        d2_ref[:, a] = val
+        d2 = jnp.where(kiota == arg[:, None], jnp.inf, d2)
+
+
+@functools.partial(jax.jit, static_argnames=("A", "tile_n", "interpret"))
+def l2_topk(r, cb, A: int, *, tile_n: int = 256, interpret: bool = True):
+    """r: (N, d); cb: (K, d) -> (idx (N, A) int32, d2 (N, A)) ascending."""
+    N, d = r.shape
+    K = cb.shape[0]
+    tile_n = min(tile_n, N)
+    pad = (-N) % tile_n
+    if pad:
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+    Np = N + pad
+    cb2 = jnp.sum(cb.astype(jnp.float32) ** 2, -1)[None]  # (1, K)
+    idx, d2 = pl.pallas_call(
+        functools.partial(_kernel, A=A),
+        grid=(Np // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((K, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n, A), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, A), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, A), jnp.int32),
+            jax.ShapeDtypeStruct((Np, A), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, cb, cb2)
+    return idx[:N], d2[:N]

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else they run in
+interpret=True mode (the kernel body executed op-by-op on CPU), which is
+how the test suite validates them against the `ref.py` oracles.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import adc_onehot as _adc
+from repro.kernels import kv_dequant_attn as _kva
+from repro.kernels import l2_topk as _l2
+from repro.kernels import resmlp as _rm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def l2_topk(r, cb, A: int, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _l2.l2_topk(r, cb, A, **kw)
+
+
+def adc_scores(codes, lut, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _adc.adc_scores(codes, lut, **kw)
+
+
+def resmlp_chain(v, w1, w2, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _rm.resmlp_chain(v, w1, w2, **kw)
+
+
+def kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _kva.kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len,
+                                **kw)

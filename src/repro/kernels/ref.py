@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_topk_ref(r, cb, A: int):
+    """r: (N, d); cb: (K, d) -> (idx (N, A) int32, d2 (N, A)) ascending."""
+    d2 = (jnp.sum(r * r, -1, keepdims=True)
+          - 2.0 * r @ cb.T + jnp.sum(cb * cb, -1))
+    neg, idx = jax.lax.top_k(-d2, A)
+    return idx.astype(jnp.int32), -neg
+
+
+def adc_ref(codes, lut):
+    """codes: (N, M) int32; lut: (Q, M, K) -> scores (Q, N) = sum_m lut[q,m,codes[n,m]]."""
+    return jnp.sum(jnp.take_along_axis(
+        lut[:, None], codes[None, ..., None], axis=3)[..., 0], axis=2)
+
+
+def resmlp_ref(v, w1, w2):
+    """v: (N, de); w1: (L, de, dh); w2: (L, dh, de): chained residual MLPs."""
+    L = w1.shape[0]
+    for l in range(L):
+        v = v + jax.nn.relu(v @ w1[l]) @ w2[l]
+    return v
+
+
+def kv_dequant_attn_ref(q, codes_k, codes_v, cb_k, cb_v, valid_len):
+    """Decode attention over an RQ-compressed KV cache.
+
+    q: (B, KVH, G, D); codes_*: (B, T, KVH, Mq) int32;
+    cb_*: (KVH, Mq, Kq, D); valid_len: int.
+    Returns (B, KVH, G, D)."""
+    B, T, KVH, Mq = codes_k.shape
+    Kq = cb_k.shape[2]
+
+    def dequant(codes, cb):
+        onehot = jax.nn.one_hot(codes, Kq, dtype=jnp.float32)
+        return jnp.einsum("bthmk,hmkd->bthd", onehot, cb.astype(jnp.float32))
+
+    k = dequant(codes_k, cb_k)
+    v = dequant(codes_v, cb_v)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32) * scale, k)
+    mask = jnp.arange(T)[None] < valid_len
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", p, v).astype(q.dtype)

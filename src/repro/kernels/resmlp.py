@@ -1,0 +1,61 @@
+"""Fused QINCo residual-MLP chain (paper Eq. 12).
+
+Evaluates v <- v + relu(v @ w1_l) @ w2_l for l = 0..L-1 without writing the
+intermediate v to HBM between blocks: the grid is (N_tiles, L) with L as the
+innermost (sequential on TPU) dimension, the activation tile stays resident
+in the output VMEM block across the L iterations, and only the two (de, dh)
+weight slices stream in per step.
+
+This is the decoder hot loop: QINCo2 search re-ranking calls it n_short
+times per query, and encoding calls it A*B times per vector per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, w1_ref, w2_ref, out_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = v_ref[...]
+
+    v = out_ref[...].astype(jnp.float32)                  # (TN, de)
+    w1 = w1_ref[0].astype(jnp.float32)                    # (de, dh)
+    w2 = w2_ref[0].astype(jnp.float32)                    # (dh, de)
+    h = jnp.maximum(jax.lax.dot_general(
+        v, w1, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32), 0.0)
+    out_ref[...] = (v + jax.lax.dot_general(
+        h, w2, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def resmlp_chain(v, w1, w2, *, tile_n: int = 256, interpret: bool = True):
+    """v: (N, de); w1: (L, de, dh); w2: (L, dh, de) -> (N, de)."""
+    N, de = v.shape
+    L, _, dh = w1.shape
+    tile_n = min(tile_n, N)
+    pad = (-N) % tile_n
+    if pad:
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    Np = N + pad
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Np // tile_n, L),
+        in_specs=[
+            pl.BlockSpec((tile_n, de), lambda ni, li: (ni, 0)),
+            pl.BlockSpec((1, de, dh), lambda ni, li: (li, 0, 0)),
+            pl.BlockSpec((1, dh, de), lambda ni, li: (li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, de), lambda ni, li: (ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, de), v.dtype),
+        interpret=interpret,
+    )(v, w1, w2)
+    return out[:N]

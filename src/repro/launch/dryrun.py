@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first backend init. (Tests may shrink the placeholder count.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod AOT dry-run: .lower().compile() every (arch x shape x mesh)
+cell on placeholder devices, then record memory / cost / collective stats
+for the roofline analysis (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh prod --pods both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, SHAPE_BY_NAME, get_arch, list_archs, \
+    shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import analytic
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import HW, make_production_mesh, make_test_mesh
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step, prefill_kv_specs)
+from repro.models import lm
+from repro.models.common import ShardCtx, abstract_params, is_spec
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+from repro.parallel import sharding as shd
+
+
+def _abstract(tree):
+    return abstract_params(tree)
+
+
+def _opt_cfg(arch: ArchConfig):
+    return adamw.AdamWConfig(
+        lr=cosine_with_warmup(3e-4, 10_000, 500), weight_decay=0.1,
+        grad_clip=1.0,
+        state_dtype=jnp.dtype(arch.parallel.opt_state_dtype))
+
+
+def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh, *,
+               kv_quant: bool = False):
+    """Returns (jitted_fn, abstract_args, static_info)."""
+    rules, ctx = shd.make_rules(arch, mesh, shape)
+    pspecs = shd.sharding_tree(lm.param_specs(arch), rules, mesh)
+    aparams = _abstract(lm.param_specs(arch))
+    rep = shd.replicated(mesh)
+    info = {
+        "param_bytes_per_device":
+            shd.bytes_per_device(lm.param_specs(arch), rules, mesh),
+    }
+
+    if shape.kind == "train":
+        cfg = _opt_cfg(arch)
+        astate = adamw.abstract_state(aparams, cfg)
+        ostate_sh = adamw.AdamWState(
+            step=rep,
+            m=jax.tree.map(lambda _: None, astate.m),  # placeholder
+            v=jax.tree.map(lambda _: None, astate.v))
+        # m/v mirror params -> same shardings
+        mv_specs = jax.tree.map(
+            lambda s: dataclasses.replace(
+                s, dtype=jnp.dtype(arch.parallel.opt_state_dtype)),
+            lm.param_specs(arch), is_leaf=is_spec)
+        mv_sh = shd.sharding_tree(mv_specs, rules, mesh)
+        ostate_sh = adamw.AdamWState(step=rep, m=mv_sh, v=mv_sh)
+        info["opt_bytes_per_device"] = 2 * shd.bytes_per_device(
+            mv_specs, rules, mesh)
+        bspecs = lm.batch_specs(arch, shape.seq_len, shape.global_batch,
+                                "train")
+        bsh = shd.sharding_tree(bspecs, rules, mesh)
+        fn = make_train_step(arch, ctx, cfg, mesh=mesh)
+        metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+        jitted = jax.jit(fn, in_shardings=(pspecs, ostate_sh, bsh),
+                         out_shardings=(pspecs, ostate_sh, metrics_sh))
+        args = (aparams, astate, _abstract(bspecs))
+        return jitted, args, info
+
+    if shape.kind == "prefill":
+        bspecs = lm.batch_specs(arch, shape.seq_len, shape.global_batch,
+                                "prefill")
+        bsh = shd.sharding_tree(bspecs, rules, mesh)
+        fn = make_prefill_step(arch, ctx)
+        logits_sh = shd.sharding_tree(_logits_spec(arch, shape.global_batch),
+                                      rules, mesh)
+        kvs = prefill_kv_specs(arch, shape.global_batch, shape.seq_len)
+        if kvs is not None:
+            kv_sh = shd.sharding_tree(kvs, rules, mesh)
+            out_sh = (logits_sh, kv_sh)
+        else:
+            out_sh = logits_sh
+        jitted = jax.jit(fn, in_shardings=(pspecs, bsh), out_shardings=out_sh)
+        args = (aparams, _abstract(bspecs))
+        return jitted, args, info
+
+    # decode
+    bspecs = lm.batch_specs(arch, shape.seq_len, shape.global_batch,
+                            "decode", kv_quant=kv_quant)
+    cache_specs = bspecs.pop("cache")
+    tok_sh = shd.sharding_tree(bspecs, rules, mesh)["tokens"]
+    cache_sh = shd.sharding_tree(cache_specs, rules, mesh)
+    info["cache_bytes_per_device"] = shd.bytes_per_device(
+        cache_specs, rules, mesh)
+    fn = make_decode_step(arch, ctx, kv_quant=kv_quant)
+    logits_sh = shd.sharding_tree(_logits_spec(arch, shape.global_batch),
+                                  rules, mesh)
+    jitted = jax.jit(fn, in_shardings=(pspecs, cache_sh, tok_sh, rep),
+                     out_shardings=(logits_sh, cache_sh))
+    args = (aparams, _abstract(cache_specs),
+            jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args, info
+
+
+def _logits_spec(arch: ArchConfig, batch: int):
+    from repro.models.common import ParamSpec
+    return ParamSpec((batch, 1, arch.vocab_size), ("batch", None, "vocab"),
+                     jnp.float32)
+
+
+def model_flops(arch: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode: D = new tokens only."""
+    n = lm.active_params(arch)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch       # decode: one token per seq
+
+
+def roofline_terms(rec: dict, mesh_devices: int) -> dict:
+    """Roofline terms from the analytic model (TPU semantics); the raw
+    HLO-parsed numbers stay in the record as cross-checks."""
+    am = rec["analytic"]
+    t_compute = am["flops"] / HW["peak_flops_bf16"]
+    t_memory = am["hbm_bytes"] / HW["hbm_bw"]
+    t_coll = am["ici_bytes"] / HW["ici_bw"] + am["dcn_bytes"] / HW["dcn_bw"]
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    t_bound = max(t_compute, t_memory, t_coll)
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "bottleneck": dom,
+            "roofline_fraction": t_compute / t_bound if t_bound else 0.0}
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             mesh_kind: str = "prod", kv_quant: bool = False,
+             out_dir: Path = None, force: bool = False,
+             arch_override=None) -> dict:
+    arch = arch_override or get_arch(arch_name)
+    shape = SHAPE_BY_NAME[shape_name]
+    tag = f"{arch.name}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if kv_quant:
+        tag += "__kvq"
+    if mesh_kind == "test":
+        tag += "__testmesh"
+    out_path = (out_dir / f"{tag}.json") if out_dir else None
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+    if out_path and out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    ok, reason = shape_applicable(arch, shape)
+    rec = {"arch": arch.name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kv_quant": kv_quant, "runnable": ok}
+    if not ok:
+        rec["skip_reason"] = reason
+        if out_path:
+            out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = (make_test_mesh(multi_pod=multi_pod) if mesh_kind == "test"
+            else make_production_mesh(multi_pod=multi_pod))
+    ndev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            jitted, args, info = build_cell(arch, shape, mesh,
+                                            kv_quant=kv_quant)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if out_path:
+            out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    hlo = compiled.as_text()
+    coll = ha.collective_stats(hlo)
+    rec.update(info)
+    rec["devices"] = ndev
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["cost"] = ha.cost_analysis_dict(compiled)
+    rec["memory"] = ha.memory_analysis_dict(compiled)
+    rec["collectives"] = {k: {kk: (vv if isinstance(vv, int) else float(vv))
+                              for kk, vv in v.items()}
+                          for k, v in coll.items()}
+    rec["collective_wire_bytes"] = ha.total_collective_bytes(coll)
+    rec["collective_operand_bytes"] = ha.total_operand_bytes(coll)
+    rec["model_flops_global"] = model_flops(arch, shape)
+    rec["params_total"] = lm.count_params(arch)
+    rec["params_active"] = lm.active_params(arch)
+    am = analytic.model_cell(arch, shape, dict(mesh.shape),
+                             kv_quant=kv_quant)
+    rec["analytic"] = {"flops": am.flops, "hbm_bytes": am.hbm_bytes,
+                       "ici_bytes": am.ici_bytes, "dcn_bytes": am.dcn_bytes,
+                       **{f"note_{k}": v for k, v in am.notes.items()}}
+    rec["model_hlo_ratio"] = (
+        rec["model_flops_global"] / ndev / am.flops if am.flops else 0.0)
+    rec.update(roofline_terms(rec, ndev))
+    if out_path:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+QINCO_CELLS = [("qinco2-l", "train"), ("qinco2-l", "encode"),
+               ("qinco2-s", "search")]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--pods", default="both", choices=["1", "2", "both"])
+    ap.add_argument("--mesh", default="prod", choices=["prod", "test"])
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--qinco", action="store_true",
+                    help="also lower the paper's own workloads (train/"
+                         "encode/search) at the mesh")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.qinco:
+        from repro.launch.qinco_cells import run_qinco_cell
+        pods_l = {"1": [False], "2": [True], "both": [False, True]}[args.pods]
+        for preset, kind in QINCO_CELLS:
+            for mp in pods_l:
+                mesh = (make_test_mesh(multi_pod=mp) if args.mesh == "test"
+                        else make_production_mesh(multi_pod=mp))
+                t0 = time.time()
+                rec = run_qinco_cell(preset, kind, multi_pod=mp, mesh=mesh,
+                                     out_dir=Path(args.out),
+                                     force=args.force)
+                status = (f"ok dom={rec.get('bottleneck')}"
+                          if not rec.get("error")
+                          else "ERROR " + rec["error"][:100])
+                print(f"[{time.time()-t0:7.1f}s] {preset:22s} {kind:12s} "
+                      f"pods={2 if mp else 1} {status}", flush=True)
+        return
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    pods = {"1": [False], "2": [True], "both": [False, True]}[args.pods]
+    out_dir = Path(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for arch_name in archs:
+        for shape_name in shapes:
+            for multi_pod in pods:
+                t0 = time.time()
+                rec = run_cell(arch_name, shape_name, multi_pod=multi_pod,
+                               mesh_kind=args.mesh, kv_quant=args.kv_quant,
+                               out_dir=out_dir, force=args.force)
+                if rec.get("error"):
+                    n_err += 1
+                    status = "ERROR " + rec["error"][:120]
+                elif not rec.get("runnable", True):
+                    n_skip += 1
+                    status = "skip"
+                else:
+                    n_ok += 1
+                    status = (f"ok t_comp={rec['t_compute_s']:.4f}s "
+                              f"t_mem={rec['t_memory_s']:.4f}s "
+                              f"t_coll={rec['t_collective_s']:.4f}s "
+                              f"dom={rec['bottleneck']}")
+                print(f"[{time.time()-t0:7.1f}s] {arch_name:22s} "
+                      f"{shape_name:12s} pods={2 if multi_pod else 1} "
+                      f"{status}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Post-compile HLO analysis: collective bytes, flops, memory.
+
+The compiled module is the SPMD-partitioned per-device program, so parsed
+shapes are per-device. Wire-byte models (ring algorithms):
+
+    all-reduce          2 (n-1)/n * B      (B = operand bytes)
+    reduce-scatter      (n-1)   * B_out    (operand = n * result)
+    all-gather          (n-1)   * B_in     (result = n * operand)
+    all-to-all          (n-1)/n * B
+    collective-permute  B
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type (scalar or tuple) + collective op name. In post-optimization
+# HLO, operands are printed without shapes, so all byte accounting derives
+# from the result type and the op semantics.
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[^\s(]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shapes_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)"
+    r"|branch_computations=\{([%\w.\-,\s]+)\}")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into named computations -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMP_RE.match(raw.rstrip())
+        if m and ("->" in raw) and raw.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if raw.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None and line:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _multiplicities(comps, entry) -> Dict[str, float]:
+    """Execution count per computation, scaling while bodies by trip count."""
+    # edges: computation -> [(child, factor)]
+    edges: Dict[str, List] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            trip = 1.0
+            if _WHILE_RE.search(line):
+                t = _TRIP_RE.search(line)
+                if t:
+                    trip = float(t.group(1))
+            for m in _CALL_RE.finditer(line):
+                if m.group(1):
+                    children = [m.group(1)]
+                else:
+                    children = [c.strip() for c in m.group(2).split(",")]
+                body = _BODY_RE.search(line)
+                for ch in children:
+                    ch = ch.lstrip("%")
+                    if ch not in comps:
+                        continue
+                    factor = trip if (body and ch == body.group(1)) else 1.0
+                    edges[cname].append((ch, factor))
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    import functools
+    import sys
+    sys.setrecursionlimit(10000)
+
+    # propagate via DFS from entry (HLO call graphs are DAGs)
+    memo_children = edges
+    visiting = []
+
+    def visit(c, m):
+        for ch, f in memo_children.get(c, []):
+            mult[ch] += m * f
+            visit(ch, m * f)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind stats, weighted by enclosing while-loop trip counts.
+
+    Byte figures are per device; `wire_bytes` applies the ring models in the
+    module docstring. Collectives inside a scanned layer body are counted
+    trip_count times (XLA's own cost analysis counts loop bodies once).
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        comps = {"__all__": hlo_text.splitlines()}
+        mult = {"__all__": 1.0}
+    else:
+        mult = _multiplicities(comps, entry)
+    stats = defaultdict(lambda: {"count": 0.0, "operand_bytes": 0.0,
+                                 "wire_bytes": 0.0, "max_group": 1,
+                                 "static_count": 0})
+    for cname, lines in comps.items():
+        w = mult.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            op = m.group(2)
+            is_start = m.group(3) is not None
+            n = max(_group_size(line), 1)
+            res_b = _shapes_bytes(m.group(1))
+            if is_start and op in ("all-reduce", "collective-permute"):
+                res_b /= 2.0    # async start result is an (in, out) tuple
+            if op == "all-reduce":
+                wire = 2.0 * (n - 1) / n * res_b
+            elif op == "reduce-scatter":
+                wire = float(n - 1) * res_b      # operand = n * result
+            elif op == "all-gather":
+                wire = (n - 1) / n * res_b       # result is gathered (full)
+            elif op == "all-to-all":
+                wire = (n - 1) / n * res_b
+            else:  # collective-permute
+                wire = res_b
+            s = stats[op]
+            s["count"] += w
+            s["static_count"] += 1
+            s["operand_bytes"] += w * res_b
+            s["wire_bytes"] += w * wire
+            s["max_group"] = max(s["max_group"], n)
+    return dict(stats)
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["wire_bytes"] for s in stats.values())
+
+
+def total_operand_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["operand_bytes"] for s in stats.values())
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

@@ -1,0 +1,29 @@
+"""Production mesh builders. Functions, not module constants, so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; (pod=2, 16, 16) = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI-scale dry-run tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e-class hardware constants used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link (~per-direction)
+    "dcn_bw": 6.25e9,              # bytes/s per host across pods (50 Gb/s)
+    "hbm_bytes": 16e9,             # v5e HBM capacity
+}

@@ -1,0 +1,215 @@
+"""QINCo2's own workloads lowered at the production mesh (the paper's
+centerpiece at scale): DP training, database beam-encode, and distributed
+ADC search with the database sharded over `model`.
+
+Called from dryrun.py (same placeholder-device env)."""
+from __future__ import annotations
+
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.qinco2 import PRESETS, QincoConfig
+from repro.core import encode as enc
+from repro.core import qinco
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import HW
+from repro.models.common import abstract_params
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+
+def _qinco_flops(cfg: QincoConfig, n_vec: int, kind: str) -> float:
+    """Per Table S2: enc ~ A*B*M*de*(d+L*dh) + B*K*d; dec ~ M*de*(d+L*dh)."""
+    A, B = cfg.A_train, cfg.B_train
+    f_net = 2.0 * cfg.de * (cfg.d + cfg.L * cfg.dh)
+    enc_f = cfg.M * (A * B * f_net + B * cfg.K * cfg.d * 2.0)
+    dec_f = cfg.M * f_net
+    if kind == "encode":
+        return n_vec * enc_f
+    if kind == "train":            # encode + fwd/bwd on selected codes
+        return n_vec * (enc_f + 3.0 * dec_f)
+    return n_vec * dec_f
+
+
+def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
+                   out_dir: Path = None, force: bool = False) -> dict:
+    tag = f"{preset}__{kind}__{'pod2' if multi_pod else 'pod1'}"
+    out_path = (out_dir / f"{tag}.json") if out_dir else None
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+    if out_path and out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = PRESETS[preset]()
+    ndev = int(np.prod(list(mesh.shape.values())))
+    rep = NamedSharding(mesh, P())
+    all_axes = tuple(mesh.axis_names)
+    vec_sh = NamedSharding(mesh, P(all_axes))
+    rec = {"arch": preset, "shape": kind,
+           "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+           "runnable": True}
+    t0 = time.time()
+    # Everything below is FULL-MANUAL shard_map: beam-search encoding is
+    # per-vector (embarrassingly parallel over the batch), so GSPMD's
+    # propagation through the beam-reindex gathers would otherwise insert
+    # giant all-gathers. Manual mode = the paper's actual DDP layout.
+    try:
+        if kind == "train":
+            n_vec = 512 * ndev                 # paper batch scaled to mesh
+            opt_cfg = adamw.AdamWConfig(
+                lr=cosine_with_warmup(cfg.lr, 10_000, 100, cfg.min_lr_ratio),
+                weight_decay=cfg.weight_decay, grad_clip=cfg.grad_clip)
+            aparams = abstract_params(qinco.param_specs(cfg))
+            astate = adamw.abstract_state(aparams, opt_cfg)
+            psh = jax.tree.map(lambda _: rep, aparams)
+            osh = adamw.AdamWState(step=rep,
+                                   m=jax.tree.map(lambda _: rep, astate.m),
+                                   v=jax.tree.map(lambda _: rep, astate.v))
+
+            def step(params, opt_state, x):
+                def local(params, opt_state, x_loc):
+                    codes, _, _ = enc.encode(params, x_loc, cfg,
+                                             cfg.A_train, cfg.B_train)
+                    codes = jax.lax.stop_gradient(codes)
+                    (loss, _), grads = jax.value_and_grad(
+                        lambda p: enc.train_forward(p, x_loc, codes, cfg),
+                        has_aux=True)(params)
+                    # DDP: mean-reduce grads/loss over every mesh axis
+                    grads = jax.tree.map(
+                        lambda g: jax.lax.pmean(g, all_axes), grads)
+                    loss = jax.lax.pmean(loss, all_axes)
+                    np_, ns_, _ = adamw.update(grads, opt_state, params,
+                                               opt_cfg)
+                    return np_, ns_, loss
+
+                pspec = jax.tree.map(lambda _: P(), params)
+                ospec = jax.tree.map(lambda _: P(), opt_state)
+                return jax.shard_map(
+                    local, mesh=mesh,
+                    in_specs=(pspec, ospec, P(all_axes)),
+                    out_specs=(pspec, ospec, P()),
+                    check_vma=False)(params, opt_state, x)
+
+            jitted = jax.jit(step, in_shardings=(psh, osh, vec_sh),
+                             out_shardings=(psh, osh, rep))
+            args = (aparams, astate,
+                    jax.ShapeDtypeStruct((n_vec, cfg.d), jnp.float32))
+        elif kind == "encode":
+            n_vec = 4096 * ndev                # database encode throughput
+            aparams = abstract_params(qinco.param_specs(cfg))
+            psh = jax.tree.map(lambda _: rep, aparams)
+
+            def encode_db(params, x):
+                def local(params, x_loc):
+                    codes, _, mse = enc.encode(params, x_loc, cfg,
+                                               cfg.A_eval, cfg.B_eval)
+                    return codes, jax.lax.pmean(mse, all_axes)
+
+                pspec = jax.tree.map(lambda _: P(), params)
+                return jax.shard_map(
+                    local, mesh=mesh, in_specs=(pspec, P(all_axes)),
+                    out_specs=(P(all_axes), P()),
+                    check_vma=False)(params, x)
+
+            jitted = jax.jit(encode_db, in_shardings=(psh, vec_sh),
+                             out_shardings=(vec_sh, rep))
+            args = (aparams,
+                    jax.ShapeDtypeStruct((n_vec, cfg.d), jnp.float32))
+        elif kind == "search":
+            # database codes sharded over `model`: per-shard ADC + local
+            # top-k, all-gather of the tiny shortlists, global merge,
+            # neural re-rank of the merged candidates
+            n_db = 1_000_000 * mesh.shape["model"]
+            n_q, k = 4096, 64
+            n_loc = n_db // mesh.shape["model"]
+            db_sh = NamedSharding(mesh, P("model"))
+            aparams = abstract_params(qinco.param_specs(cfg))
+            psh = jax.tree.map(lambda _: rep, aparams)
+
+            def search_step(params, lut, db_codes, norms):
+                def local(params, lut, codes, norms):
+                    oh = jax.nn.one_hot(codes, cfg.K, dtype=jnp.float32)
+                    scores = (2.0 * jnp.einsum("qmk,nmk->qn", lut, oh)
+                              - norms[None])
+                    s, i = jax.lax.top_k(scores, k)      # local top-k
+                    base = jax.lax.axis_index("model") * n_loc
+                    gid = base + i
+                    s_all = jax.lax.all_gather(s, "model", axis=1,
+                                               tiled=True)
+                    g_all = jax.lax.all_gather(gid, "model", axis=1,
+                                               tiled=True)
+                    s2, i2 = jax.lax.top_k(s_all, k)     # global merge
+                    merged = jnp.take_along_axis(g_all, i2, axis=1)
+                    # neural re-rank: decode this shard's share of hits
+                    local_hits = jnp.where(
+                        (merged >= base) & (merged < base + n_loc),
+                        merged - base, 0)
+                    recon = qinco.decode(params,
+                                         codes[local_hits.reshape(-1)], cfg)
+                    return merged, s2, jax.lax.psum(
+                        jnp.sum(recon), "model")
+
+                pspec = jax.tree.map(lambda _: P(), params)
+                return jax.shard_map(
+                    local, mesh=mesh,
+                    in_specs=(pspec, P(), P("model"), P("model")),
+                    out_specs=(P(), P(), P()),
+                    check_vma=False)(params, lut, db_codes, norms)
+
+            jitted = jax.jit(
+                search_step,
+                in_shardings=(psh, rep, db_sh, db_sh),
+                out_shardings=(rep, rep, rep))
+            args = (aparams,
+                    jax.ShapeDtypeStruct((n_q, cfg.M, cfg.K), jnp.float32),
+                    jax.ShapeDtypeStruct((n_db, cfg.M), jnp.int32),
+                    jax.ShapeDtypeStruct((n_db,), jnp.float32))
+            n_vec = n_q
+        else:
+            raise ValueError(kind)
+
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-1500:]
+        if out_path:
+            out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    hlo = compiled.as_text()
+    coll = ha.collective_stats(hlo)
+    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["cost"] = ha.cost_analysis_dict(compiled)
+    rec["memory"] = ha.memory_analysis_dict(compiled)
+    rec["collectives"] = {kk: dict(v) for kk, v in coll.items()}
+    rec["collective_wire_bytes"] = ha.total_collective_bytes(coll)
+    flops_dev = _qinco_flops(PRESETS[preset](), n_vec, kind) / ndev
+    if kind == "search":
+        # ADC dominates: Q x N_local x M one-hot matmul on the MXU
+        flops_dev = 2.0 * 4096 * 1_000_000 * PRESETS[preset]().M \
+            * PRESETS[preset]().K
+    hbm = rec["memory"].get("argument_size_in_bytes", 0) / ndev
+    if kind == "search":
+        hbm = 1_000_000 * PRESETS[preset]().M  # codes stream, int8-packable
+    rec["analytic"] = {"flops": flops_dev, "hbm_bytes": float(hbm),
+                       "ici_bytes": rec["collective_wire_bytes"],
+                       "dcn_bytes": 0.0}
+    t_c = flops_dev / HW["peak_flops_bf16"]
+    t_m = hbm / HW["hbm_bw"]
+    t_x = rec["collective_wire_bytes"] / HW["ici_bw"]
+    rec.update(t_compute_s=t_c, t_memory_s=t_m, t_collective_s=t_x,
+               bottleneck=max((("compute", t_c), ("memory", t_m),
+                               ("collective", t_x)),
+                              key=lambda kv: kv[1])[0],
+               roofline_fraction=t_c / max(t_c, t_m, t_x, 1e-30))
+    if out_path:
+        out_path.write_text(json.dumps(rec, indent=1))
+    return rec

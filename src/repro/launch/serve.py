@@ -1,0 +1,151 @@
+"""Batched decode server: prefill -> (optionally RQ-quantized) KV cache ->
+autoregressive decode_step loop. CPU-scale demo of the same step the
+dry-run lowers at the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced \
+        --batch 4 --prompt-len 32 --gen 16 --kv-quant
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import kv_quant
+from repro.models import lm
+from repro.models.common import ShardCtx, abstract_params, init_params
+
+
+def build_cache_from_prefill(arch, params, batch_tokens, ctx, *, max_len,
+                             kv_quant_on=False, frames=None, key=None):
+    """Run prefill, fill a decode cache of capacity max_len."""
+    B, P = batch_tokens.shape
+    batch = {"tokens": batch_tokens}
+    if arch.family == "encdec":
+        batch["frames"] = frames
+    logits, extras = lm.prefill(params, batch, arch, ctx)
+    specs = lm.cache_specs(arch, B, max_len, kv_quant_on)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         abstract_params(specs))
+    kv = extras.get("kv")
+    if arch.family in ("dense", "moe") and kv is not None:
+        k, v = kv                                   # (L, B, P, KVH, hd)
+        if not kv_quant_on:
+            cache = {
+                "k": cache["k"].at[:, :, :P].set(k.astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, :, :P].set(v.astype(cache["v"].dtype)),
+            }
+        else:
+            # fit per-(layer,head) RQ codebooks on the prefill K/V stream
+            kq = arch.kv_quant
+            L = k.shape[0]
+            samp_k = k.reshape(L, -1, k.shape[-2], k.shape[-1])
+            cb_k = jnp.stack([kv_quant.fit_kv_codebooks(
+                jax.random.fold_in(key, i), samp_k[i], kq.m_bytes,
+                kq.codebook_size) for i in range(L)])
+            samp_v = v.reshape(L, -1, v.shape[-2], v.shape[-1])
+            cb_v = jnp.stack([kv_quant.fit_kv_codebooks(
+                jax.random.fold_in(key, 1000 + i), samp_v[i], kq.m_bytes,
+                kq.codebook_size) for i in range(L)])
+            codes_k = jax.vmap(kv_quant.encode_kv)(k, cb_k)
+            codes_v = jax.vmap(kv_quant.encode_kv)(v, cb_v)
+            cache = dict(
+                cache,
+                k_cb=cb_k.astype(cache["k_cb"].dtype),
+                v_cb=cb_v.astype(cache["v_cb"].dtype),
+                k_codes=cache["k_codes"].at[:, :, :P].set(
+                    codes_k.astype(jnp.uint8)),
+                v_codes=cache["v_codes"].at[:, :, :P].set(
+                    codes_v.astype(jnp.uint8)),
+            )
+    elif arch.family == "encdec" and kv is not None:
+        (k, v), (xk, xv) = kv
+        cache = dict(cache, cross_k=xk.astype(cache["cross_k"].dtype),
+                     cross_v=xv.astype(cache["cross_v"].dtype))
+        cache["self"] = {
+            "k": cache["self"]["k"].at[:, :, :P].set(
+                k.astype(cache["self"]["k"].dtype)),
+            "v": cache["self"]["v"].at[:, :, :P].set(
+                v.astype(cache["self"]["v"].dtype)),
+        }
+    # ssm/hybrid: decode re-walks the prompt below (constant-size state)
+    return logits, cache
+
+
+def generate(arch, params, prompts, *, gen_len: int, ctx=None,
+             kv_quant_on=False, temperature: float = 0.0, seed: int = 0,
+             frames=None):
+    ctx = ctx or ShardCtx(active=False)
+    B, P = prompts.shape
+    max_len = P + gen_len
+    key = jax.random.key(seed)
+    needs_replay = arch.family in ("ssm", "hybrid")
+    if needs_replay:
+        specs = lm.cache_specs(arch, B, max_len, kv_quant_on)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             abstract_params(specs))
+        logits = None
+    else:
+        logits, cache = build_cache_from_prefill(
+            arch, params, prompts, ctx, max_len=max_len,
+            kv_quant_on=kv_quant_on, frames=frames, key=key)
+
+    step = jax.jit(lambda p, c, t, pos: lm.decode_step(
+        p, c, t, pos, arch, ctx, kv_quant=kv_quant_on))
+
+    out = [prompts]
+    if needs_replay:                      # feed the prompt token by token
+        for i in range(P):
+            logits, cache = step(params, cache, prompts[:, i:i + 1], i)
+    tok = _sample(logits[:, -1] if logits.ndim == 3 else logits,
+                  temperature, key)
+    for g in range(gen_len):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, P + g)
+        key = jax.random.fold_in(key, g)
+        tok = _sample(logits[:, -1], temperature, key)
+    return jnp.concatenate(out, axis=1)
+
+
+def _sample(logits, temperature, key):
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return jax.random.categorical(key, logits / temperature
+                                  ).astype(jnp.int32)[:, None]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    params = init_params(lm.param_specs(arch), jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 arch.vocab_size)
+    frames = None
+    if arch.family == "encdec":
+        frames = jnp.zeros((args.batch, arch.encoder_context, arch.d_model),
+                           jnp.float32)
+    t0 = time.time()
+    toks = generate(arch, params, prompts, gen_len=args.gen,
+                    kv_quant_on=args.kv_quant, frames=frames)
+    dt = time.time() - t0
+    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s) kv_quant={args.kv_quant}")
+    print(np.asarray(toks[:2, args.prompt_len - 4:args.prompt_len + 8]))
+
+
+if __name__ == "__main__":
+    main()

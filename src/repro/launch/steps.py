@@ -1,0 +1,92 @@
+"""Step builders shared by the trainer, server, and the AOT dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.common import ParamSpec, ShardCtx
+from repro.optim import adamw
+
+
+def make_train_step(arch: ArchConfig, ctx: ShardCtx, opt_cfg, mesh=None):
+    compress = (arch.parallel.grad_compress_in_graph and mesh is not None
+                and "pod" in getattr(mesh, "axis_names", ()))
+
+    def train_step(params, opt_state, batch):
+        if compress:
+            # One shard_map over the pod axis (data/model stay under GSPMD
+            # via auto axes): per-pod partial gradients, then the int8
+            # exchange replaces the fp psum GSPMD would insert over DCN.
+            from repro.core.grad_compress import dequantize_int8, quantize_int8
+            from jax.sharding import PartitionSpec as P
+
+            def inner(p, b):
+                loss, g = jax.value_and_grad(
+                    lambda q: lm.loss_fn(q, b, arch, ctx))(p)
+                loss = jax.lax.pmean(loss, "pod")
+                npods = mesh.shape["pod"]
+
+                def reduce_one(x):
+                    q8, s = quantize_int8(x)
+                    qg = jax.lax.all_gather(q8, "pod")
+                    sg = jax.lax.all_gather(s, "pod")
+                    deq = jax.vmap(
+                        lambda qq, ss: dequantize_int8(qq, ss, x.shape))(
+                        qg, sg)
+                    return (jnp.sum(deq, 0) / npods).astype(x.dtype)
+
+                return loss, jax.tree.map(reduce_one, g)
+
+            pspec = jax.tree.map(lambda _: P(), params)
+            bspec = jax.tree.map(lambda _: P("pod"), batch)
+            loss, grads = jax.shard_map(
+                inner, mesh=mesh, in_specs=(pspec, bspec),
+                out_specs=(P(), pspec), check_vma=False,
+                axis_names={"pod"})(params, batch)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, batch, arch, ctx))(params)
+        new_p, new_s, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_p, new_s, metrics
+    return train_step
+
+
+def make_prefill_step(arch: ArchConfig, ctx: ShardCtx):
+    collect = arch.family in ("dense", "moe", "encdec")
+
+    def prefill_step(params, batch):
+        logits, extras = lm.prefill(params, batch, arch, ctx)
+        if collect:
+            return logits, extras["kv"]
+        return logits
+    return prefill_step
+
+
+def make_decode_step(arch: ArchConfig, ctx: ShardCtx, kv_quant: bool = False):
+    def decode_step(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, arch, ctx,
+                              kv_quant=kv_quant)
+    return decode_step
+
+
+def prefill_kv_specs(arch: ArchConfig, batch: int, seq: int):
+    """Axis-annotated specs for the prefill kv output (for out_shardings)."""
+    if arch.family not in ("dense", "moe", "encdec"):
+        return None
+    a = arch.attn
+    kv = ParamSpec((arch.n_layers, batch, seq, a.num_kv_heads, a.head_dim),
+                   ("layers", "batch", "seq", "kv_heads", None), jnp.float32)
+    if arch.family in ("dense", "moe"):
+        return (kv, kv)
+    if arch.family == "encdec":
+        xkv = ParamSpec(
+            (arch.n_layers, batch, arch.encoder_context, a.num_kv_heads,
+             a.head_dim),
+            ("layers", "batch", None, "kv_heads", None), jnp.float32)
+        return ((kv, kv), (xkv, xkv))
+    return None

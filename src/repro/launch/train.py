@@ -1,0 +1,131 @@
+"""End-to-end LM trainer: mesh + sharded step + checkpoint/restart +
+preemption handling + straggler monitoring.
+
+CPU-scale runs use reduced configs (`--reduced`); the identical step is the
+one AOT-compiled by the dry-run at the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+        --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import (CheckpointManager, PreemptionGuard,
+                                      StragglerMonitor)
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import ShardedLoader
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.models.common import ShardCtx, abstract_params, init_params
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+from repro.parallel import sharding as shd
+
+
+def train_loop(arch, *, steps: int, batch: int, seq: int, ckpt_dir=None,
+               ckpt_every: int = 50, mesh=None, seed: int = 0,
+               log_every: int = 10, lr: float = 3e-4, verbose=True,
+               total_steps=None):
+    """`steps` = stop point this invocation; `total_steps` = schedule
+    horizon (defaults to steps; pass the full-run length when a job will
+    be preempted/resumed so the LR schedule stays consistent)."""
+    total_steps = total_steps or steps
+    if mesh is not None:
+        shape = ShapeConfig("custom", seq, batch, "train")
+        rules, ctx = shd.make_rules(arch, mesh, shape)
+        pspecs = shd.sharding_tree(lm.param_specs(arch), rules, mesh)
+    else:
+        ctx = ShardCtx(active=False)
+        pspecs = None
+
+    opt_cfg = adamw.AdamWConfig(
+        lr=cosine_with_warmup(lr, total_steps, min(50, total_steps // 10)),
+        weight_decay=0.1, grad_clip=1.0,
+        state_dtype=jnp.dtype(arch.parallel.opt_state_dtype))
+    step_fn = jax.jit(make_train_step(arch, ctx, opt_cfg))
+
+    params = init_params(lm.param_specs(arch), jax.random.key(seed))
+    opt_state = adamw.init(params, opt_cfg)
+    if pspecs is not None:
+        params = jax.tree.map(jax.device_put, params, pspecs)
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if mgr is not None:
+        got = mgr.restore_latest((params, opt_state))
+        if got is not None:
+            start_step, (params, opt_state), extra = got
+            start_step += 1
+            if verbose:
+                print(f"[train] resumed from step {start_step - 1}")
+
+    from repro.data.synthetic import batch_at
+    loader = ShardedLoader(
+        lambda s: batch_at(arch.vocab_size, seq, batch, s, seed=seed),
+        start_step=start_step)
+    guard = PreemptionGuard()
+    monitor = StragglerMonitor()
+    losses = []
+    t_start = time.time()
+    for step, data in loader:
+        if step >= steps:
+            break
+        if arch.frontend_stub and arch.family == "encdec":
+            data = dict(data, frames=np.zeros(
+                (batch, arch.encoder_context, arch.d_model), np.float32))
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, data)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        straggle = monitor.record(step, time.time() - t0)
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"[train] step {step} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e}"
+                  + (" STRAGGLER" if straggle else ""), flush=True)
+        if mgr is not None and (
+                step % ckpt_every == 0 and step > start_step
+                or guard.should_checkpoint()):
+            mgr.save(step, (params, opt_state),
+                     extra={"loss": loss, "arch": arch.name})
+            if guard.should_checkpoint():
+                print(f"[train] preemption checkpoint at step {step}; "
+                      "exiting")
+                break
+    loader.close()
+    guard.restore_handlers()
+    if verbose:
+        print(f"[train] done in {time.time()-t_start:.1f}s; "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    train_loop(arch, steps=args.steps, batch=args.batch, seq=args.seq,
+               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+               lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

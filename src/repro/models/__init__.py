@@ -1,0 +1,3 @@
+from repro.models.common import (
+    ParamSpec, ShardCtx, abstract_params, init_params, shard, spec_map,
+)

@@ -1,0 +1,331 @@
+"""Shared model machinery: ParamSpec trees, norms, RoPE, attention, losses.
+
+Parameters are plain nested dicts. Every leaf is declared as a ``ParamSpec``
+carrying logical axis names so the same tree yields (a) materialized arrays
+for tests, (b) ShapeDtypeStructs for the AOT dry-run, and (c) NamedShardings
+via ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# ParamSpec trees
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis names per dim
+    dtype: Any = jnp.float32
+    init: str = "fan_in"                # fan_in | zeros | ones | normal | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_params(tree):
+    return spec_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def init_params(tree, key):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def _init(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "normal":
+            return (s.scale * jax.random.normal(k, s.shape)).astype(s.dtype)
+        if s.init == "embed":
+            return (jax.random.normal(k, s.shape) * s.scale).astype(s.dtype)
+        # fan_in (Kaiming-uniform flavour): fan = first input-like dim
+        fan = s.shape[0] if len(s.shape) == 1 else int(
+            math.prod(s.shape[:-1]) if s.init == "fan_in_all" else s.shape[-2]
+            if len(s.shape) >= 2 else s.shape[0])
+        if len(s.shape) >= 2:
+            fan = int(math.prod(s.shape[:-1]))
+        bound = s.scale / math.sqrt(max(fan, 1))
+        return jax.random.uniform(
+            k, s.shape, jnp.float32, -bound, bound).astype(s.dtype)
+
+    return treedef.unflatten([_init(s, k) for s, k in zip(leaves, keys)])
+
+
+def count_params(tree) -> int:
+    return sum(int(math.prod(s.shape))
+               for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-axis policy used by forward passes via with_sharding_constraint."""
+    data_axes: Tuple[str, ...] = ("data",)   # ('pod','data') on multi-pod DP
+    model_axis: Optional[str] = "model"
+    batch_sharded: bool = True               # False when global_batch < |data|
+    cache_seq_sharded: bool = False          # True for long_500k SP decode
+    active: bool = True                      # False: skip all constraints
+    moe_ffn_axis: Optional[str] = None       # 'data' under the moe_2d policy
+    # mesh axis sizes, used to drop non-divisible constraints (e.g. 56 heads
+    # over a 16-way model axis would force involuntary resharding in GSPMD)
+    axis_sizes: Any = None
+
+    def batch_spec(self):
+        return self.data_axes if self.batch_sharded else None
+
+    def seq_spec(self):
+        return self.data_axes if (not self.batch_sharded) else None
+
+    def _size(self, spec) -> int:
+        if spec is None or self.axis_sizes is None:
+            return 1
+        axes = (spec,) if isinstance(spec, str) else tuple(spec)
+        n = 1
+        for a in axes:
+            n *= self.axis_sizes.get(a, 1)
+        return n
+
+
+def shard(x, ctx: ShardCtx, *axes):
+    """Apply a sharding constraint with logical axes resolved against ctx.
+
+    axes entries: 'batch', 'seq', 'model', 'cache_seq', None. Constraints on
+    dims not divisible by the mesh-axis size are dropped.
+    """
+    if not ctx.active:
+        return x
+    from jax.sharding import PartitionSpec as P
+    resolved = []
+    for i, a in enumerate(axes):
+        if a == "batch":
+            r = ctx.batch_spec()
+        elif a == "seq":
+            r = ctx.seq_spec()
+        elif a == "cache_seq":
+            r = ctx.data_axes if ctx.cache_seq_sharded else None
+        elif a == "model":
+            r = ctx.model_axis
+        elif a == "moe_ffn":
+            r = ctx.moe_ffn_axis
+        else:
+            r = None
+        if r is not None and x.shape[i] % ctx._size(r) != 0:
+            r = None
+        resolved.append(r)
+    return lax.with_sharding_constraint(x, P(*resolved))
+
+
+# ---------------------------------------------------------------------------
+# Basic layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int, offset=0):
+    pos = jnp.arange(seq)[:, None] + offset
+    inv = 10_000 ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos * inv
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked-flash for train/prefill; flash-decoding for decode)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def attention(q, k, v, *, causal: bool, window: Optional[int],
+              q_offset: int = 0, chunk: int = 512,
+              softcap: Optional[float] = None):
+    """Chunked attention. q: (B,S,KVH,G,D); k,v: (B,T,KVH,D).
+
+    Scans over query chunks; each chunk attends to the full (masked) key
+    range, so peak memory is O(chunk * T) per head instead of O(S * T).
+    """
+    B, S, KVH, G, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    nq = -(-S // chunk)
+    pad = nq * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qb = q.reshape(B, nq, chunk, KVH, G, D)
+    kpos = jnp.arange(T)
+
+    def per_chunk(ci, qc):
+        # qc: (B, chunk, KVH, G, D)
+        qpos = ci * chunk + jnp.arange(chunk) + q_offset
+        s = jnp.einsum("bqhgd,bthd->bhgqt", qc.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        mask = jnp.ones((chunk, T), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqt,bthd->bqhgd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    out = lax.map(lambda args: per_chunk(*args),
+                  (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * chunk, KVH, G, D)
+    return out[:, :S]
+
+
+def decode_attention(q, k_chunks_fn, nchunks: int, chunk_len: int,
+                     valid_len, *, window: Optional[int] = None):
+    """Flash-decoding: one query step over a (possibly quantized/sharded)
+    KV cache exposed as a chunk generator.
+
+    q: (B, KVH, G, D). k_chunks_fn(i) -> (k, v) each (B, chunk_len, KVH, D).
+    valid_len: scalar count of valid cache positions. Returns (B, KVH, G, D).
+    """
+    B, KVH, G, D = q.shape
+    scale = D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    def step(carry, i):
+        m, denom, acc = carry
+        k, v = k_chunks_fn(i)
+        pos = i * chunk_len + jnp.arange(chunk_len)
+        s = jnp.einsum("bhgd,bthd->bhgt", qf, k.astype(jnp.float32))
+        valid = pos[None] < valid_len
+        if window is not None:
+            valid &= pos[None] > valid_len - 1 - window
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+        return (m_new, denom, acc), None
+
+    init = (jnp.full((B, KVH, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, KVH, G), jnp.float32),
+            jnp.zeros((B, KVH, G, D), jnp.float32))
+    (m, denom, acc), _ = lax.scan(step, init, jnp.arange(nchunks))
+    return (acc / jnp.maximum(denom, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(x, w_out, labels, ctx: ShardCtx, chunk: int = 512):
+    """mean CE without materializing (B, S, V) logits.
+
+    x: (B,S,d) activations, w_out: (d,V) vocab-sharded, labels: (B,S) int32.
+    Scans over seq chunks; within a chunk the logits are (B,chunk,V) and the
+    vocab dim stays sharded ('model'); logsumexp/one-hot reductions over the
+    sharded vocab dim become psums under GSPMD.
+    """
+    B, S, d = x.shape
+    V = w_out.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xb = jnp.moveaxis(x.reshape(B, nc, chunk, d), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def step(carry, xs):
+        xc, lc = xs
+        logits = jnp.einsum("bqd,dv->bqv", xc.astype(jnp.float32),
+                            w_out.astype(jnp.float32))
+        logits = shard(logits, ctx, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, V, dtype=jnp.float32)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        validm = (lc >= 0).astype(jnp.float32)
+        loss_sum, tok = carry
+        return (loss_sum + jnp.sum((lse - gold) * validm),
+                tok + jnp.sum(validm)), None
+
+    (loss_sum, tok), _ = lax.scan(step, (jnp.zeros(()), jnp.zeros(())),
+                                  (xb, lb))
+    return loss_sum / jnp.maximum(tok, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def gated_mlp(x, wi_gate, wi_up, wo, ctx: ShardCtx):
+    h = jnp.einsum("bsd,df->bsf", x, wi_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, wi_up.astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    h = shard(h, ctx, "batch", "seq", "model")
+    return jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype))
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+                    + bi.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype)) + bo.astype(x.dtype)

@@ -1,0 +1,349 @@
+"""Dense decoder-only transformer (deepseek / mistral / qwen / chameleon /
+gemma3). Layers are scanned (stacked params) so the HLO contains one layer
+body regardless of depth; gemma3's 5:1 local:global pattern is expressed by
+per-layer traced (window, rope_theta) scalars.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.common import ParamSpec, ShardCtx, shard
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def attn_param_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    a = arch.attn
+    d = arch.d_model
+    p = {
+        "wq": ParamSpec((d, a.num_heads, a.head_dim), ("embed", "heads", None), dtype),
+        "wk": ParamSpec((d, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", None), dtype),
+        "wv": ParamSpec((d, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", None), dtype),
+        "wo": ParamSpec((a.num_heads, a.head_dim, d), ("heads", None, "embed"), dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = ParamSpec((a.num_heads, a.head_dim), ("heads", None), dtype, "zeros")
+        p["bk"] = ParamSpec((a.num_kv_heads, a.head_dim), ("kv_heads", None), dtype, "zeros")
+        p["bv"] = ParamSpec((a.num_kv_heads, a.head_dim), ("kv_heads", None), dtype, "zeros")
+    return p
+
+
+def mlp_param_specs(arch: ArchConfig, dtype, d_ff=None) -> Dict[str, Any]:
+    d, ff = arch.d_model, d_ff or arch.d_ff
+    return {
+        "gate": ParamSpec((d, ff), ("embed", "mlp"), dtype),
+        "up": ParamSpec((d, ff), ("embed", "mlp"), dtype),
+        "down": ParamSpec((ff, d), ("mlp", "embed"), dtype),
+    }
+
+
+def layer_param_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    d = arch.d_model
+    return {
+        "ln1": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "ln2": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "attn": attn_param_specs(arch, dtype),
+        "mlp": mlp_param_specs(arch, dtype),
+    }
+
+
+def _stack_specs(tree, n: int):
+    return cm.spec_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                            s.init, s.scale), tree)
+
+
+def param_specs(arch: ArchConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(arch.parallel.param_dtype)
+    return {"layers": _stack_specs(layer_param_specs(arch, dtype),
+                                   arch.n_layers)}
+
+
+# per-layer attention pattern (gemma3 local:global)
+def layer_windows(arch: ArchConfig) -> Tuple[np.ndarray, np.ndarray]:
+    a = arch.attn
+    n = arch.n_layers
+    big = np.int32(1 << 30)        # "no window"
+    if a.window is None or a.global_every <= 1:
+        win = np.full((n,), big if a.window is None else a.window, np.int32)
+        theta = np.full((n,), a.rope_theta, np.float32)
+        return win, theta
+    is_global = (np.arange(n) % a.global_every) == (a.global_every - 1)
+    win = np.where(is_global, big, np.int32(a.window)).astype(np.int32)
+    theta = np.where(is_global, np.float32(a.rope_theta),
+                     np.float32(10_000.0)).astype(np.float32)
+    return win, theta
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, arch: ArchConfig, positions, theta):
+    a = arch.attn
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = cm.rope(q, positions, theta)
+    k = cm.rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_block(p, x, arch: ArchConfig, ctx: ShardCtx, *, positions,
+               window, theta):
+    """Full self-attention over x (train/prefill). Returns (out, k, v)."""
+    a = arch.attn
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, arch, positions, theta)
+    q = shard(q, ctx, "batch", "seq", "model", None)
+    k = shard(k, ctx, "batch", "seq", "model", None)
+    G = a.num_heads // a.num_kv_heads
+    qg = q.reshape(B, S, a.num_kv_heads, G, a.head_dim)
+    win = window  # traced int32; 1<<30 means "none"
+    out = _attention_dyn_window(qg, k, v, win, arch, ctx)
+    out = out.reshape(B, S, a.num_heads, a.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, k, v
+
+
+def _attention_dyn_window(qg, k, v, window, arch: ArchConfig, ctx: ShardCtx):
+    """Chunked causal attention with a *traced* window size."""
+    B, S, KVH, G, D = qg.shape
+    T = k.shape[1]
+    chunk = min(arch.parallel.attn_chunk, S)
+    scale = D ** -0.5
+    nq = -(-S // chunk)
+    pad = nq * chunk - S
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qb = jnp.moveaxis(qg.reshape(B, nq, chunk, KVH, G, D), 1, 0)
+    kpos = jnp.arange(T)
+    sc = arch.attn.logit_softcap
+
+    def per_chunk(ci, qc):
+        qpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bthd->bhgqt",
+                       (qc * scale).astype(jnp.float32),
+                       k.astype(jnp.float32))
+        s = cm._softcap(s, sc)
+        mask = kpos[None, :] <= qpos[:, None]
+        mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, cm.NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqt,bthd->bqhgd", pr,
+                          v.astype(jnp.float32)).astype(qg.dtype)
+
+    out = lax.map(lambda xs: per_chunk(*xs), (jnp.arange(nq), qb))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * chunk, KVH, G, D)
+    return out[:, :S]
+
+
+def dense_layer(p, x, arch: ArchConfig, ctx: ShardCtx, *, positions,
+                window, theta, collect_kv: bool = False):
+    if arch.parallel.parallel_block:
+        # PaLM/GPT-J fused block: attn and MLP read ONE LayerNorm and their
+        # partial sums share a single TP all-reduce (§Perf: halves the
+        # per-layer TP collective volume).
+        h = cm.rms_norm(x, p["ln1"], arch.norm_eps)
+        attn_out, k, v = attn_block(p["attn"], h, arch, ctx,
+                                    positions=positions, window=window,
+                                    theta=theta)
+        mlp_out = cm.gated_mlp(h, p["mlp"]["gate"], p["mlp"]["up"],
+                               p["mlp"]["down"], ctx)
+        x = x + attn_out + mlp_out
+    else:
+        h = cm.rms_norm(x, p["ln1"], arch.norm_eps)
+        attn_out, k, v = attn_block(p["attn"], h, arch, ctx,
+                                    positions=positions, window=window,
+                                    theta=theta)
+        x = x + attn_out
+        h = cm.rms_norm(x, p["ln2"], arch.norm_eps)
+        x = x + cm.gated_mlp(h, p["mlp"]["gate"], p["mlp"]["up"],
+                             p["mlp"]["down"], ctx)
+    x = shard(x, ctx, "batch", "seq", None)
+    if collect_kv:
+        return x, (k, v)
+    return x, None
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "nothing":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(params, h, arch: ArchConfig, ctx: ShardCtx, *,
+            positions=None, collect_kv: bool = False):
+    """h: (B, S, d) embedded inputs -> (h_out, kv or None)."""
+    B, S, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    win, theta = layer_windows(arch)
+
+    def body(x, xs):
+        lp, w, th = xs
+        return dense_layer(lp, x, arch, ctx, positions=positions,
+                           window=w, theta=th, collect_kv=collect_kv)
+
+    body = _remat(body, arch.parallel.remat_policy)
+    h, kv = lax.scan(body, h, (params["layers"], jnp.asarray(win),
+                               jnp.asarray(theta)))
+    return h, {"kv": kv}
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, KV cache; flash-decoding scan over cache chunks)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(arch: ArchConfig, batch: int, seq: int,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    a = arch.attn
+    L = arch.n_layers
+    if not kv_quant:
+        kv = ParamSpec((L, batch, seq, a.num_kv_heads, a.head_dim),
+                       ("layers", "batch", "cache_seq", "kv_heads", None),
+                       jnp.bfloat16, "zeros")
+        return {"k": kv, "v": kv}
+    mq = arch.kv_quant.m_bytes
+    kq = arch.kv_quant.codebook_size
+    codes = ParamSpec((L, batch, seq, a.num_kv_heads, mq),
+                      ("layers", "batch", "cache_seq", "kv_heads", None),
+                      jnp.uint8, "zeros")
+    cb = ParamSpec((L, a.num_kv_heads, mq, kq, a.head_dim),
+                   ("layers", "kv_heads", None, None, None),
+                   jnp.bfloat16, "normal")
+    return {"k_codes": codes, "v_codes": codes, "k_cb": cb, "v_cb": cb}
+
+
+def _dequant_chunk(codes, cb):
+    """codes: (B, ch, KVH, Mq) uint8; cb: (KVH, Mq, Kq, D) -> (B, ch, KVH, D).
+
+    One-hot matmul (MXU-friendly) rather than gather — see DESIGN.md §3.
+    """
+    kq = cb.shape[2]
+    onehot = jax.nn.one_hot(codes, kq, dtype=cb.dtype)
+    return jnp.einsum("bthmk,hmkd->bthd", onehot, cb)
+
+
+def _rq_encode_vec(x, cb):
+    """Greedy RQ encode. x: (..., KVH, D); cb: (KVH, Mq, Kq, D) -> codes uint8."""
+    mq = cb.shape[1]
+    r = x.astype(jnp.float32)
+
+    def step(r, m):
+        c = cb[:, m].astype(jnp.float32)             # (KVH, Kq, D)
+        d2 = (jnp.sum(r * r, -1)[..., None]
+              - 2.0 * jnp.einsum("...hd,hkd->...hk", r, c)
+              + jnp.sum(c * c, -1))
+        idx = jnp.argmin(d2, axis=-1)
+        sel = jnp.einsum("...hk,hkd->...hd",
+                         jax.nn.one_hot(idx, c.shape[1], dtype=jnp.float32), c)
+        return r - sel, idx.astype(jnp.uint8)
+
+    codes = []
+    for m in range(mq):
+        r, idx = step(r, m)
+        codes.append(idx)
+    return jnp.stack(codes, axis=-1)
+
+
+def decode_layer(p, cache_slice, x, pos, arch: ArchConfig, ctx: ShardCtx, *,
+                 window, theta, kv_quant: bool, skip_mlp: bool = False):
+    """x: (B, 1, d). Returns (x_out, updated cache_slice)."""
+    a = arch.attn
+    B = x.shape[0]
+    h = cm.rms_norm(x, p["ln1"], arch.norm_eps)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p["attn"], h, arch, positions, theta)
+    G = a.num_heads // a.num_kv_heads
+    qg = q.reshape(B, a.num_kv_heads, G, a.head_dim)
+
+    if not kv_quant:
+        k_cache = lax.dynamic_update_slice_in_dim(
+            cache_slice["k"], k_new.astype(cache_slice["k"].dtype), pos, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            cache_slice["v"], v_new.astype(cache_slice["v"].dtype), pos, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        T = k_cache.shape[1]
+        chunk_len = min(2048, T)
+        nchunks = T // chunk_len
+
+        def chunks(i):
+            sl = lambda c: lax.dynamic_slice_in_dim(c, i * chunk_len,
+                                                    chunk_len, axis=1)
+            return sl(k_cache), sl(v_cache)
+    else:
+        kc = _rq_encode_vec(k_new[:, 0], cache_slice["k_cb"])
+        vc = _rq_encode_vec(v_new[:, 0], cache_slice["v_cb"])
+        k_codes = lax.dynamic_update_slice_in_dim(
+            cache_slice["k_codes"], kc[:, None], pos, axis=1)
+        v_codes = lax.dynamic_update_slice_in_dim(
+            cache_slice["v_codes"], vc[:, None], pos, axis=1)
+        new_cache = dict(cache_slice, k_codes=k_codes, v_codes=v_codes)
+        T = k_codes.shape[1]
+        chunk_len = min(2048, T)
+        nchunks = T // chunk_len
+
+        def chunks(i):
+            slk = lax.dynamic_slice_in_dim(k_codes, i * chunk_len, chunk_len, 1)
+            slv = lax.dynamic_slice_in_dim(v_codes, i * chunk_len, chunk_len, 1)
+            return (_dequant_chunk(slk, cache_slice["k_cb"]),
+                    _dequant_chunk(slv, cache_slice["v_cb"]))
+
+    # window is a traced per-layer int32 (1<<30 encodes "no window")
+    out = cm.decode_attention(qg, chunks, nchunks, chunk_len, pos + 1,
+                              window=window)
+    out = out.reshape(B, 1, a.num_heads, a.head_dim)
+    attn_out = jnp.einsum("bshk,hkd->bsd", out,
+                          p["attn"]["wo"].astype(x.dtype))
+    x = x + attn_out
+    if skip_mlp:
+        return x, new_cache
+    h = cm.rms_norm(x, p["ln2"], arch.norm_eps)
+    x = x + cm.gated_mlp(h, p["mlp"]["gate"], p["mlp"]["up"],
+                         p["mlp"]["down"], ctx)
+    return x, new_cache
+
+
+def decode_step(params, cache, h, pos, arch: ArchConfig, ctx: ShardCtx, *,
+                kv_quant: bool = False):
+    """h: (B, 1, d) embedded token. Scans layers; cache arrays are stacked
+    with a leading layer dim and fed through scan as both xs and ys."""
+    win, theta = layer_windows(arch)
+
+    def body(x, xs):
+        lp, cache_slice, w, th = xs
+        x, new_slice = decode_layer(lp, cache_slice, x, pos, arch, ctx,
+                                    window=w, theta=th, kv_quant=kv_quant)
+        return x, new_slice
+
+    h, new_cache = lax.scan(body, h,
+                            (params["layers"], cache, jnp.asarray(win),
+                             jnp.asarray(theta)))
+    return h, new_cache

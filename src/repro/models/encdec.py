@@ -1,0 +1,255 @@
+"""Whisper-style encoder-decoder (audio). The conv frontend is a stub per
+the assignment: ``input_specs()`` provides precomputed frame embeddings of
+shape (B, encoder_context, d_model). LayerNorm + GELU MLP, sinusoidal
+positions (no RoPE), bidirectional encoder self-attn, causal decoder
+self-attn + cross-attn.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import dense
+from repro.models.common import ParamSpec, ShardCtx, shard
+
+
+def _ln_specs(d, dtype):
+    return {"scale": ParamSpec((d,), ("embed",), dtype, "ones"),
+            "bias": ParamSpec((d,), ("embed",), dtype, "zeros")}
+
+
+def _mlp_specs(arch, dtype):
+    d, ff = arch.d_model, arch.d_ff
+    return {
+        "wi": ParamSpec((d, ff), ("embed", "mlp"), dtype),
+        "bi": ParamSpec((ff,), ("mlp",), dtype, "zeros"),
+        "wo": ParamSpec((ff, d), ("mlp", "embed"), dtype),
+        "bo": ParamSpec((d,), ("embed",), dtype, "zeros"),
+    }
+
+
+def enc_layer_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    return {
+        "ln1": _ln_specs(arch.d_model, dtype),
+        "ln2": _ln_specs(arch.d_model, dtype),
+        "attn": dense.attn_param_specs(arch, dtype),
+        "mlp": _mlp_specs(arch, dtype),
+    }
+
+
+def dec_layer_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    return {
+        "ln1": _ln_specs(arch.d_model, dtype),
+        "ln_x": _ln_specs(arch.d_model, dtype),
+        "ln2": _ln_specs(arch.d_model, dtype),
+        "attn": dense.attn_param_specs(arch, dtype),
+        "xattn": dense.attn_param_specs(arch, dtype),
+        "mlp": _mlp_specs(arch, dtype),
+    }
+
+
+def param_specs(arch: ArchConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(arch.parallel.param_dtype)
+    return {
+        "encoder": dense._stack_specs(enc_layer_specs(arch, dtype),
+                                      arch.n_encoder_layers),
+        "enc_ln_f": _ln_specs(arch.d_model, dtype),
+        "decoder": dense._stack_specs(dec_layer_specs(arch, dtype),
+                                      arch.n_layers),
+    }
+
+
+def _ln(x, p, eps):
+    return cm.layer_norm(x, p["scale"].astype(jnp.float32),
+                         p["bias"].astype(jnp.float32), eps)
+
+
+def _mha(p, xq, xkv, arch: ArchConfig, ctx: ShardCtx, *, causal: bool):
+    """Whisper attention: no RoPE (positions are additive sinusoids)."""
+    a = arch.attn
+    cd = xq.dtype
+    B, S, _ = xq.shape
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cd))
+    G = a.num_heads // a.num_kv_heads
+    qg = q.reshape(B, S, a.num_kv_heads, G, a.head_dim)
+    out = cm.attention(qg, k, v, causal=causal, window=None,
+                       chunk=min(arch.parallel.attn_chunk, S))
+    out = out.reshape(B, S, a.num_heads, a.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)), k, v
+
+
+def encode(params, frames, arch: ArchConfig, ctx: ShardCtx):
+    """frames: (B, T_enc, d) stub embeddings -> encoder output."""
+    B, T, d = frames.shape
+    h = frames + cm.sinusoidal_positions(T, d).astype(frames.dtype)
+
+    def body(x, lp):
+        hh = _ln(x, lp["ln1"], arch.norm_eps)
+        a, _, _ = _mha(lp["attn"], hh, hh, arch, ctx, causal=False)
+        x = x + a
+        hh = _ln(x, lp["ln2"], arch.norm_eps)
+        x = x + cm.gelu_mlp(hh, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                            lp["mlp"]["wo"], lp["mlp"]["bo"])
+        return x, None
+
+    body = dense._remat(body, arch.parallel.remat_policy)
+    h, _ = lax.scan(body, h, params["encoder"])
+    return _ln(h, params["enc_ln_f"], arch.norm_eps)
+
+
+def decode_forward(params, h, enc_out, arch: ArchConfig, ctx: ShardCtx,
+                   collect_kv: bool = False):
+    """Teacher-forcing decoder pass. h: (B, S, d) token embeddings."""
+    B, S, d = h.shape
+    h = h + cm.sinusoidal_positions(S, d).astype(h.dtype)
+
+    def body(x, lp):
+        a, k, v = _mha(lp["attn"], _ln(x, lp["ln1"], arch.norm_eps),
+                       _ln(x, lp["ln1"], arch.norm_eps), arch, ctx,
+                       causal=True)
+        x = x + a
+        xa, xk, xv = _mha(lp["xattn"], _ln(x, lp["ln_x"], arch.norm_eps),
+                          enc_out, arch, ctx, causal=False)
+        x = x + xa
+        hh = _ln(x, lp["ln2"], arch.norm_eps)
+        x = x + cm.gelu_mlp(hh, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                            lp["mlp"]["wo"], lp["mlp"]["bo"])
+        if collect_kv:
+            return x, ((k, v), (xk, xv))
+        return x, None
+
+    body = dense._remat(body, arch.parallel.remat_policy)
+    h, kv = lax.scan(body, h, params["decoder"])
+    return h, kv
+
+
+def forward(params, h, arch: ArchConfig, ctx: ShardCtx, *, positions=None,
+            encoder_frames=None, collect_kv: bool = False):
+    enc_out = encode(params, encoder_frames, arch, ctx)
+    h, kv = decode_forward(params, h, enc_out, arch, ctx, collect_kv)
+    return h, {"kv": kv, "enc_out": enc_out}
+
+
+def cache_specs(arch: ArchConfig, batch: int, seq: int,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    a = arch.attn
+    L = arch.n_layers
+    T_enc = arch.encoder_context
+    xkv = ParamSpec((L, batch, T_enc, a.num_kv_heads, a.head_dim),
+                    ("layers", "batch", None, "kv_heads", None),
+                    jnp.bfloat16, "zeros")
+    if not kv_quant:
+        kv = ParamSpec((L, batch, seq, a.num_kv_heads, a.head_dim),
+                       ("layers", "batch", "cache_seq", "kv_heads", None),
+                       jnp.bfloat16, "zeros")
+        self_part = {"k": kv, "v": kv}
+    else:
+        mq, kq = arch.kv_quant.m_bytes, arch.kv_quant.codebook_size
+        codes = ParamSpec((L, batch, seq, a.num_kv_heads, mq),
+                          ("layers", "batch", "cache_seq", "kv_heads", None),
+                          jnp.uint8, "zeros")
+        cb = ParamSpec((L, a.num_kv_heads, mq, kq, a.head_dim),
+                       ("layers", "kv_heads", None, None, None),
+                       jnp.bfloat16, "normal")
+        self_part = {"k_codes": codes, "v_codes": codes,
+                     "k_cb": cb, "v_cb": cb}
+    return {"self": self_part, "cross_k": xkv, "cross_v": xkv}
+
+
+def decode_step(params, cache, h, pos, arch: ArchConfig, ctx: ShardCtx, *,
+                kv_quant: bool = False):
+    """One decoder token step; cross-attn reads the precomputed cross KV."""
+    a = arch.attn
+    B = h.shape[0]
+    d = arch.d_model
+    h = h + cm.sinusoidal_positions(1, d, offset=pos).astype(h.dtype)
+    big = jnp.int32(1 << 30)
+
+    def body(x, xs):
+        lp, self_cache, xk, xv = xs
+        # self-attention via the dense decode path (no rope: theta irrelevant
+        # because whisper adds sinusoids to h; emulate by zero positions)
+        x2, new_self = _self_decode(lp, self_cache, x, pos, arch, ctx,
+                                    kv_quant)
+        # cross-attention to the precomputed encoder KV
+        xq = _ln(x2, lp["ln_x"], arch.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xq, lp["xattn"]["wq"].astype(x.dtype))
+        G = a.num_heads // a.num_kv_heads
+        qg = q.reshape(B, a.num_kv_heads, G, a.head_dim)
+        T = xk.shape[1]
+        cl = min(512, T) if T % min(512, T) == 0 else T
+        nch = T // cl
+
+        def chunks(i):
+            return (lax.dynamic_slice_in_dim(xk, i * cl, cl, 1),
+                    lax.dynamic_slice_in_dim(xv, i * cl, cl, 1))
+
+        out = cm.decode_attention(qg, chunks, nch, cl, T)
+        out = out.reshape(B, 1, a.num_heads, a.head_dim)
+        x2 = x2 + jnp.einsum("bshk,hkd->bsd", out,
+                             lp["xattn"]["wo"].astype(x.dtype))
+        hh = _ln(x2, lp["ln2"], arch.norm_eps)
+        x2 = x2 + cm.gelu_mlp(hh, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                              lp["mlp"]["wo"], lp["mlp"]["bo"])
+        return x2, new_self
+
+    h, new_self = lax.scan(body, h, (params["decoder"], cache["self"],
+                                     cache["cross_k"], cache["cross_v"]))
+    return h, dict(cache, self=new_self)
+
+
+def _self_decode(lp, self_cache, x, pos, arch, ctx, kv_quant):
+    """Whisper decoder self-attn single step (LayerNorm, no RoPE)."""
+    a = arch.attn
+    B = x.shape[0]
+    h = _ln(x, lp["ln1"], arch.norm_eps)
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(cd))
+    k_new = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(cd))
+    v_new = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(cd))
+    G = a.num_heads // a.num_kv_heads
+    qg = q.reshape(B, a.num_kv_heads, G, a.head_dim)
+    if not kv_quant:
+        k_cache = lax.dynamic_update_slice_in_dim(
+            self_cache["k"], k_new.astype(self_cache["k"].dtype), pos, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            self_cache["v"], v_new.astype(self_cache["v"].dtype), pos, axis=1)
+        new_self = {"k": k_cache, "v": v_cache}
+        T = k_cache.shape[1]
+        cl = min(2048, T)
+        nch = T // cl
+
+        def chunks(i):
+            return (lax.dynamic_slice_in_dim(k_cache, i * cl, cl, 1),
+                    lax.dynamic_slice_in_dim(v_cache, i * cl, cl, 1))
+    else:
+        kc = dense._rq_encode_vec(k_new[:, 0], self_cache["k_cb"])
+        vc = dense._rq_encode_vec(v_new[:, 0], self_cache["v_cb"])
+        k_codes = lax.dynamic_update_slice_in_dim(
+            self_cache["k_codes"], kc[:, None], pos, axis=1)
+        v_codes = lax.dynamic_update_slice_in_dim(
+            self_cache["v_codes"], vc[:, None], pos, axis=1)
+        new_self = dict(self_cache, k_codes=k_codes, v_codes=v_codes)
+        T = k_codes.shape[1]
+        cl = min(2048, T)
+        nch = T // cl
+
+        def chunks(i):
+            return (dense._dequant_chunk(
+                        lax.dynamic_slice_in_dim(k_codes, i * cl, cl, 1),
+                        self_cache["k_cb"]),
+                    dense._dequant_chunk(
+                        lax.dynamic_slice_in_dim(v_codes, i * cl, cl, 1),
+                        self_cache["v_cb"]))
+
+    out = cm.decode_attention(qg, chunks, nch, cl, pos + 1)
+    out = out.reshape(B, 1, a.num_heads, a.head_dim)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(cd))
+    return x, new_self

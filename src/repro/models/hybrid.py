@@ -1,0 +1,133 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared-weight* attention block
+applied every `shared_attn_every` backbone layers  [arXiv:2411.15242].
+
+The backbone is scanned in groups: each group = one shared-attn invocation
+(same params every time — the Zamba signature) followed by
+`shared_attn_every` mamba layers; trailing mamba layers are scanned after.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import dense, ssm
+from repro.models.common import ParamSpec, ShardCtx
+
+
+def _group_layout(arch: ArchConfig):
+    per = arch.shared_attn_every
+    n_groups = arch.n_layers // per
+    trailing = arch.n_layers - n_groups * per
+    return per, n_groups, trailing
+
+
+def param_specs(arch: ArchConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(arch.parallel.param_dtype)
+    per, n_groups, trailing = _group_layout(arch)
+    mamba_layer = ssm.layer_param_specs(arch, dtype)
+    p = {
+        "shared_attn": dense.layer_param_specs(arch, dtype),  # ONE copy
+        "groups": dense._stack_specs(
+            dense._stack_specs(mamba_layer, per), n_groups),
+    }
+    if trailing:
+        p["trailing"] = dense._stack_specs(mamba_layer, trailing)
+    return p
+
+
+def _shared_attn(params, x, arch: ArchConfig, ctx: ShardCtx, positions):
+    big = jnp.int32(1 << 30)
+    theta = jnp.float32(arch.attn.rope_theta)
+    x, _ = dense.dense_layer(params["shared_attn"], x, arch, ctx,
+                             positions=positions, window=big, theta=theta)
+    return x
+
+
+def forward(params, h, arch: ArchConfig, ctx: ShardCtx, *, positions=None,
+            collect_kv: bool = False):
+    B, S, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    per, n_groups, trailing = _group_layout(arch)
+
+    def mamba_body(x, lp):
+        return ssm.mamba_block(lp, x, arch, ctx), None
+
+    mamba_body = dense._remat(mamba_body, arch.parallel.remat_policy)
+
+    def group_body(x, glp):
+        x = _shared_attn(params, x, arch, ctx, positions)
+        x, _ = lax.scan(mamba_body, x, glp)
+        return x, None
+
+    group_body = dense._remat(group_body, arch.parallel.remat_policy)
+    h, _ = lax.scan(group_body, h, params["groups"])
+    if trailing:
+        h, _ = lax.scan(mamba_body, h, params["trailing"])
+    return h, {}
+
+
+def cache_specs(arch: ArchConfig, batch: int, seq: int,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    per, n_groups, trailing = _group_layout(arch)
+    a = arch.attn
+    mamba = ssm.cache_specs(arch, batch, seq)
+    # per-layer mamba cache -> (n_groups, per, ...) stacked
+    specs = {"groups_ssm": {
+        k: ParamSpec((n_groups, per) + v.shape[1:],
+                     ("groups", "layers") + v.axes[1:], v.dtype, v.init)
+        for k, v in mamba.items()}}
+    if trailing:
+        specs["trailing_ssm"] = {
+            k: ParamSpec((trailing,) + v.shape[1:], v.axes, v.dtype, v.init)
+            for k, v in mamba.items()}
+    # one KV cache per shared-attn invocation
+    if not kv_quant:
+        kv = ParamSpec((n_groups, batch, seq, a.num_kv_heads, a.head_dim),
+                       ("layers", "batch", "cache_seq", "kv_heads", None),
+                       jnp.bfloat16, "zeros")
+        specs["attn"] = {"k": kv, "v": kv}
+    else:
+        mq, kq = arch.kv_quant.m_bytes, arch.kv_quant.codebook_size
+        codes = ParamSpec((n_groups, batch, seq, a.num_kv_heads, mq),
+                          ("layers", "batch", "cache_seq", "kv_heads", None),
+                          jnp.uint8, "zeros")
+        cb = ParamSpec((n_groups, a.num_kv_heads, mq, kq, a.head_dim),
+                       ("layers", "kv_heads", None, None, None),
+                       jnp.bfloat16, "normal")
+        specs["attn"] = {"k_codes": codes, "v_codes": codes,
+                         "k_cb": cb, "v_cb": cb}
+    return specs
+
+
+def decode_step(params, cache, h, pos, arch: ArchConfig, ctx: ShardCtx, *,
+                kv_quant: bool = False):
+    per, n_groups, trailing = _group_layout(arch)
+    big = jnp.int32(1 << 30)
+    theta = jnp.float32(arch.attn.rope_theta)
+
+    def mamba_body(x, xs):
+        lp, cs = xs
+        return ssm.decode_block(lp, cs, x, arch, ctx)
+
+    def group_body(x, xs):
+        glp, attn_cache, ssm_cache = xs
+        x, new_attn = dense.decode_layer(
+            params["shared_attn"], attn_cache, x, pos, arch, ctx,
+            window=big, theta=theta, kv_quant=kv_quant)
+        x, new_ssm = lax.scan(mamba_body, x, (glp, ssm_cache))
+        return x, (new_attn, new_ssm)
+
+    h, (new_attn, new_gssm) = lax.scan(
+        group_body, h, (params["groups"], cache["attn"], cache["groups_ssm"]))
+    new_cache = {"attn": new_attn, "groups_ssm": new_gssm}
+    if trailing:
+        h, new_tr = lax.scan(mamba_body, h,
+                             (params["trailing"], cache["trailing_ssm"]))
+        new_cache["trailing_ssm"] = new_tr
+    return h, new_cache

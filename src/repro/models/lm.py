@@ -1,0 +1,178 @@
+"""Unified model API across the five families.
+
+    specs  = param_specs(arch)                  # ParamSpec tree
+    params = cm.init_params(specs, key)         # or abstract_params for AOT
+    loss   = loss_fn(params, batch, arch, ctx)
+    logits, cache = prefill(...) / decode_step(...)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import dense, encdec, hybrid, moe, ssm
+from repro.models.common import ParamSpec, ShardCtx, shard
+
+FAMILIES = {"dense": dense, "moe": moe, "ssm": ssm, "hybrid": hybrid,
+            "encdec": encdec}
+
+
+def family(arch: ArchConfig):
+    return FAMILIES[arch.family]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def param_specs(arch: ArchConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(arch.parallel.param_dtype)
+    d, V = arch.d_model, arch.vocab_size
+    p = {
+        "embedding": ParamSpec((V, d), ("vocab", "embed"), dtype, "normal",
+                               0.02),
+        "final_norm": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "backbone": family(arch).param_specs(arch),
+    }
+    if not arch.tie_embeddings:
+        p["lm_head"] = ParamSpec((d, V), ("embed", "vocab"), dtype, "normal",
+                                 0.02)
+    return p
+
+
+def count_params(arch: ArchConfig) -> int:
+    return cm.count_params(param_specs(arch))
+
+
+def active_params(arch: ArchConfig) -> int:
+    """Activated parameters per token (MoE: top-k of the experts)."""
+    total = count_params(arch)
+    if arch.moe is None:
+        return total
+    m = arch.moe
+    expert_p = 3 * arch.d_model * m.d_ff_expert
+    n_moe = arch.n_layers - arch.moe_first_dense
+    return total - n_moe * (m.num_experts - m.top_k) * expert_p
+
+
+def _head_matrix(params, arch: ArchConfig):
+    if arch.tie_embeddings:
+        return params["embedding"].T
+    return params["lm_head"]
+
+
+def _embed(params, tokens, arch: ArchConfig, ctx: ShardCtx):
+    h = jnp.take(params["embedding"], tokens, axis=0)
+    h = h.astype(jnp.dtype(arch.parallel.compute_dtype))
+    if arch.tie_embeddings:
+        h = h * math.sqrt(arch.d_model)
+    return shard(h, ctx, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _backbone_forward(params, h, batch, arch: ArchConfig, ctx: ShardCtx,
+                      collect_kv=False):
+    fam = family(arch)
+    if arch.family == "encdec":
+        return fam.forward(params["backbone"], h, arch, ctx,
+                           encoder_frames=batch["frames"],
+                           collect_kv=collect_kv)
+    return fam.forward(params["backbone"], h, arch, ctx,
+                       collect_kv=collect_kv)
+
+
+def loss_fn(params, batch, arch: ArchConfig, ctx: ShardCtx) -> jnp.ndarray:
+    """Mean next-token CE (+ MoE aux). batch: tokens, labels[, frames]."""
+    h = _embed(params, batch["tokens"], arch, ctx)
+    h, extras = _backbone_forward(params, h, batch, arch, ctx)
+    h = cm.rms_norm(h, params["final_norm"], arch.norm_eps)
+    w_out = _head_matrix(params, arch)
+    loss = cm.chunked_softmax_xent(h, w_out, batch["labels"], ctx)
+    if "aux" in extras:
+        loss = loss + 0.01 * extras["aux"] / max(arch.n_layers, 1)
+    return loss
+
+
+def prefill(params, batch, arch: ArchConfig, ctx: ShardCtx):
+    """Forward over the prompt; returns (last-position logits, extras).
+
+    extras contains per-layer kv for cache construction where the family
+    supports it (dense/moe/encdec); ssm/hybrid prefill returns states via
+    their own forward (constant-size, recomputed by decode path in serve).
+    """
+    h = _embed(params, batch["tokens"], arch, ctx)
+    h, extras = _backbone_forward(params, h, batch, arch, ctx,
+                                  collect_kv=True)
+    h = cm.rms_norm(h, params["final_norm"], arch.norm_eps)
+    last = h[:, -1:]
+    logits = jnp.einsum("bsd,dv->bsv", last.astype(jnp.float32),
+                        _head_matrix(params, arch).astype(jnp.float32))
+    logits = shard(logits, ctx, "batch", None, "model")
+    return logits, extras
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(arch: ArchConfig, batch: int, seq: int,
+                kv_quant: bool = False):
+    return family(arch).cache_specs(arch, batch, seq, kv_quant)
+
+
+def decode_step(params, cache, tokens, pos, arch: ArchConfig, ctx: ShardCtx,
+                *, kv_quant: bool = False):
+    """tokens: (B, 1) -> (logits (B, 1, V), new_cache)."""
+    h = _embed(params, tokens, arch, ctx)
+    h, new_cache = family(arch).decode_step(params["backbone"], cache, h,
+                                            pos, arch, ctx,
+                                            kv_quant=kv_quant)
+    h = cm.rms_norm(h, params["final_norm"], arch.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        _head_matrix(params, arch).astype(jnp.float32))
+    logits = shard(logits, ctx, "batch", None, "model")
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Batch specs (inputs for each shape kind)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(arch: ArchConfig, seq_len: int, global_batch: int,
+                kind: str, kv_quant: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins + logical axes for every model input."""
+    B, S = global_batch, seq_len
+    tok_axes = ("batch", "seq")
+    out: Dict[str, Any] = {}
+    if kind == "train":
+        out["tokens"] = ParamSpec((B, S), tok_axes, jnp.int32, "zeros")
+        out["labels"] = ParamSpec((B, S), tok_axes, jnp.int32, "zeros")
+        if arch.family == "encdec":
+            out["frames"] = ParamSpec(
+                (B, arch.encoder_context, arch.d_model),
+                ("batch", None, None), jnp.bfloat16, "normal")
+    elif kind == "prefill":
+        out["tokens"] = ParamSpec((B, S), tok_axes, jnp.int32, "zeros")
+        if arch.family == "encdec":
+            out["frames"] = ParamSpec(
+                (B, arch.encoder_context, arch.d_model),
+                ("batch", None, None), jnp.bfloat16, "normal")
+    elif kind == "decode":
+        out["tokens"] = ParamSpec((B, 1), ("batch", None), jnp.int32, "zeros")
+        out["cache"] = cache_specs(arch, B, S, kv_quant)
+    else:
+        raise ValueError(kind)
+    return out

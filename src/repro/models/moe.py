@@ -1,0 +1,243 @@
+"""Mixture-of-experts layers (dbrx-132b, kimi-k2-1t-a32b).
+
+Dispatch strategy (TPU/GSPMD-native, no ragged ops): token-choice top-k
+gating followed by per-expert top-C token selection ("expert slots"), then
+dense per-expert einsums with experts sharded over the `model` axis (EP)
+and the capacity dim sharded over `data`. See DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import dense
+from repro.models.common import ParamSpec, ShardCtx, shard
+
+
+def moe_param_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    m = arch.moe
+    d = arch.d_model
+    if arch.parallel.moe_2d:
+        # 2D expert sharding (§Perf): experts over `model`, expert-FFN dim
+        # over `data`. Every weight element lives on exactly one device, so
+        # experts are never all-gathered and their grads reduce locally.
+        gate_axes = ("experts", None, "moe_ffn")
+        down_axes = ("experts", "moe_ffn", None)
+    else:
+        gate_axes = ("experts", "embed", None)
+        down_axes = ("experts", None, "embed")
+    p = {
+        "router": ParamSpec((d, m.num_experts), ("embed", "experts"),
+                            jnp.float32, "normal", 0.02),
+        "w_gate": ParamSpec((m.num_experts, d, m.d_ff_expert), gate_axes,
+                            dtype),
+        "w_up": ParamSpec((m.num_experts, d, m.d_ff_expert), gate_axes,
+                          dtype),
+        "w_down": ParamSpec((m.num_experts, m.d_ff_expert, d), down_axes,
+                            dtype),
+    }
+    if m.num_shared_experts:
+        ff = m.d_ff_shared * m.num_shared_experts
+        p["shared"] = dense.mlp_param_specs(arch, dtype, d_ff=ff)
+    return p
+
+
+def layer_param_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    d = arch.d_model
+    return {
+        "ln1": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "ln2": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "attn": dense.attn_param_specs(arch, dtype),
+        "moe": moe_param_specs(arch, dtype),
+    }
+
+
+def param_specs(arch: ArchConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(arch.parallel.param_dtype)
+    n_moe = arch.n_layers - arch.moe_first_dense
+    p = {"layers": dense._stack_specs(layer_param_specs(arch, dtype), n_moe)}
+    if arch.moe_first_dense:
+        p["dense_layers"] = dense._stack_specs(
+            dense.layer_param_specs(arch, dtype), arch.moe_first_dense)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MoE block
+# ---------------------------------------------------------------------------
+
+
+def _capacity(n_tokens: int, arch: ArchConfig) -> int:
+    m = arch.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(m.top_k, min(n_tokens, c))
+
+
+def moe_block(p, x, arch: ArchConfig, ctx: ShardCtx) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d)."""
+    m = arch.moe
+    B, S, d = x.shape
+    N = B * S
+    C = _capacity(N, arch)
+    xt = x.reshape(N, d)
+
+    # --- token-choice gates -------------------------------------------------
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                      # (N, E)
+    top_vals, _ = lax.top_k(gates, m.top_k)
+    thresh = top_vals[:, -1:]
+    gates = jnp.where(gates >= thresh, gates, 0.0)               # keep top-k
+    gates = shard(gates, ctx, "batch", "model")
+
+    # --- expert-choice capacity: each expert takes its top-C tokens ---------
+    gv, token_idx = lax.top_k(gates.T, C)                        # (E, C)
+    moe2d = arch.parallel.moe_2d
+    # moe_2d: capacity replicated over data (expert-FFN dim carries `data`);
+    # baseline: capacity sharded over data.
+    cap_ax = None if moe2d else "batch"
+    token_idx = shard(token_idx, ctx, "model", cap_ax)
+    gv = shard(gv, ctx, "model", cap_ax)
+    xe = jnp.take(xt, token_idx, axis=0)                         # (E, C, d)
+    xe = shard(xe, ctx, "model", cap_ax, None)
+
+    # --- per-expert gated MLP ------------------------------------------------
+    cd = x.dtype
+    h = jnp.einsum("ecd,edf->ecf", xe.astype(cd), p["w_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", xe.astype(cd), p["w_up"].astype(cd))
+    h = jax.nn.silu(h) * u
+    h = shard(h, ctx, "model", cap_ax, "moe_ffn")
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))
+    ye = ye * (gv[..., None] > 0.0) * gv[..., None].astype(cd)
+    ye = shard(ye, ctx, "model", cap_ax, None)
+
+    # --- combine back (scatter-add over token ids) --------------------------
+    y = jnp.zeros((N, d), cd).at[token_idx.reshape(-1)].add(
+        ye.reshape(-1, d))
+    y = y.reshape(B, S, d)
+    y = shard(y, ctx, "batch", "seq", None)
+
+    if m.num_shared_experts:
+        sp = p["shared"]
+        y = y + cm.gated_mlp(x, sp["gate"], sp["up"], sp["down"], ctx)
+
+    # Switch-style load-balance aux loss (from pre-mask gates)
+    top1 = jnp.argmax(gates, -1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, m.num_experts,
+                                          dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+    aux = m.num_experts * jnp.sum(frac_tokens * frac_probs)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(p, x, arch: ArchConfig, ctx: ShardCtx, *, positions,
+              window, theta, collect_kv=False):
+    if arch.parallel.parallel_block:
+        # fused attn+MoE block: one LN, one residual sum, one TP AR (§Perf)
+        h = cm.rms_norm(x, p["ln1"], arch.norm_eps)
+        attn_out, k, v = dense.attn_block(p["attn"], h, arch, ctx,
+                                          positions=positions, window=window,
+                                          theta=theta)
+        y, aux = moe_block(p["moe"], h, arch, ctx)
+        x = x + attn_out + y
+    else:
+        h = cm.rms_norm(x, p["ln1"], arch.norm_eps)
+        attn_out, k, v = dense.attn_block(p["attn"], h, arch, ctx,
+                                          positions=positions, window=window,
+                                          theta=theta)
+        x = x + attn_out
+        h = cm.rms_norm(x, p["ln2"], arch.norm_eps)
+        y, aux = moe_block(p["moe"], h, arch, ctx)
+        x = x + y
+    if collect_kv:
+        return x, ((k, v), aux)
+    return x, (None, aux)
+
+
+def forward(params, h, arch: ArchConfig, ctx: ShardCtx, *, positions=None,
+            collect_kv: bool = False):
+    B, S, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    win, theta = dense.layer_windows(arch)
+    kv_dense = None
+    if arch.moe_first_dense:
+        def dbody(x, xs):
+            lp, w, th = xs
+            return dense.dense_layer(lp, x, arch, ctx, positions=positions,
+                                     window=w, theta=th,
+                                     collect_kv=collect_kv)
+        dbody = dense._remat(dbody, arch.parallel.remat_policy)
+        nd = arch.moe_first_dense
+        h, kv_dense = lax.scan(
+            dbody, h, (params["dense_layers"], jnp.asarray(win[:nd]),
+                       jnp.asarray(theta[:nd])))
+
+    def body(x, xs):
+        lp, w, th = xs
+        return moe_layer(lp, x, arch, ctx, positions=positions, window=w,
+                         theta=th, collect_kv=collect_kv)
+
+    body = dense._remat(body, arch.parallel.remat_policy)
+    nd = arch.moe_first_dense
+    h, (kv, aux) = lax.scan(body, h, (params["layers"], jnp.asarray(win[nd:]),
+                                      jnp.asarray(theta[nd:])))
+    if collect_kv and kv_dense is not None:
+        kv = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                          kv_dense, kv)
+    return h, {"kv": kv, "aux": jnp.sum(aux)}
+
+
+def cache_specs(arch: ArchConfig, batch: int, seq: int,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    return dense.cache_specs(arch, batch, seq, kv_quant)
+
+
+def decode_step(params, cache, h, pos, arch: ArchConfig, ctx: ShardCtx, *,
+                kv_quant: bool = False):
+    win, theta = dense.layer_windows(arch)
+    nd = arch.moe_first_dense
+
+    def split_cache(c, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], c)
+
+    new_cache_parts = []
+    if nd:
+        def dbody(x, xs):
+            lp, cs, w, th = xs
+            return dense.decode_layer(lp, cs, x, pos, arch, ctx, window=w,
+                                      theta=th, kv_quant=kv_quant)
+        h, nc = lax.scan(dbody, h,
+                         (params["dense_layers"], split_cache(cache, 0, nd),
+                          jnp.asarray(win[:nd]), jnp.asarray(theta[:nd])))
+        new_cache_parts.append(nc)
+
+    def body(x, xs):
+        lp, cs, w, th = xs
+        # dense decode attention (skip_mlp), then the MoE MLP
+        x2, nc = dense.decode_layer(lp, cs, x, pos, arch, ctx, window=w,
+                                    theta=th, kv_quant=kv_quant,
+                                    skip_mlp=True)
+        h3 = cm.rms_norm(x2, lp["ln2"], arch.norm_eps)
+        y, _aux = moe_block(lp["moe"], h3, arch, ctx)
+        x3 = x2 + y
+        return x3, nc
+
+    h, nc = lax.scan(body, h,
+                     (params["layers"], split_cache(cache, nd, arch.n_layers),
+                      jnp.asarray(win[nd:]), jnp.asarray(theta[nd:])))
+    new_cache_parts.append(nc)
+    if len(new_cache_parts) == 1:
+        return h, new_cache_parts[0]
+    new_cache = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                             new_cache_parts[0], new_cache_parts[1])
+    return h, new_cache

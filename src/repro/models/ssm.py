@@ -1,0 +1,262 @@
+"""Mamba2 / SSD (state-space duality) blocks  [arXiv:2405.21060].
+
+Training/prefill uses the chunked dual form: quadratic attention-like
+computation within chunks of size Q plus a linear inter-chunk state
+recurrence (lax.scan). Decode is the single-token recurrence with a
+fixed-size (B, H, P, N) state — constant memory, the reason `long_500k`
+runs for SSM archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.common import ParamSpec, ShardCtx, shard
+
+
+def dims(arch: ArchConfig):
+    s = arch.ssm
+    d_in = s.expand * arch.d_model
+    H = d_in // s.head_dim          # SSD heads
+    conv_ch = d_in + 2 * s.ngroups * s.state_dim
+    return d_in, H, conv_ch
+
+
+def layer_param_specs(arch: ArchConfig, dtype) -> Dict[str, Any]:
+    s = arch.ssm
+    d = arch.d_model
+    d_in, H, conv_ch = dims(arch)
+    in_dim = 2 * d_in + 2 * s.ngroups * s.state_dim + H   # z, x, B, C, dt
+    return {
+        "ln": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "in_proj": ParamSpec((d, in_dim), ("embed", "ssm_inner"), dtype),
+        "conv_w": ParamSpec((s.conv_width, conv_ch), (None, "ssm_inner"),
+                            dtype, "fan_in", 1.0),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), dtype, "zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), jnp.float32, "normal", 0.5),
+        "D": ParamSpec((H,), ("ssm_heads",), jnp.float32, "ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), jnp.float32, "zeros"),
+        "ln_gate": ParamSpec((d_in,), ("ssm_inner",), dtype, "zeros"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def param_specs(arch: ArchConfig) -> Dict[str, Any]:
+    from repro.models.dense import _stack_specs
+    dtype = jnp.dtype(arch.parallel.param_dtype)
+    return {"layers": _stack_specs(layer_param_specs(arch, dtype),
+                                   arch.n_layers)}
+
+
+def _split_proj(arch: ArchConfig, zxbcdt):
+    s = arch.ssm
+    d_in, H, _ = dims(arch)
+    gn = s.ngroups * s.state_dim
+    z, x, B_, C_, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, B_, C_, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (W, C). Depthwise causal conv via shifted adds."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums.
+
+    segsum[i, j] = sum_{k=j+1..i} dA_k  for i >= j, -inf otherwise.
+    """
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, arch: ArchConfig, ctx: ShardCtx,
+                init_state=None):
+    """SSD dual form.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    B_, C_: (B, S, G, N). Returns (y: (B, S, H, P), final_state (B,H,P,N)).
+    """
+    s = arch.ssm
+    Bsz, S, H, P = x.shape
+    G = B_.shape[2]
+    Q = min(s.chunk_size, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    hpg = H // G
+
+    # chunked views
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = B_.reshape(Bsz, nc, Q, G, s.state_dim)
+    Cr = C_.reshape(Bsz, nc, Q, G, s.state_dim)
+    dA = dtr * A  # (B, nc, Q, H)
+
+    # ---- intra-chunk (quadratic) term --------------------------------------
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cr, Br)   # (B,nc,G,Q,Q)
+    scores = jnp.repeat(scores, hpg, axis=2)            # (B,nc,H,Q,Q)
+    M = scores * L * jnp.moveaxis(dtr, -1, -2)[..., None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M, xr)
+
+    # ---- chunk states -------------------------------------------------------
+    cums = jnp.cumsum(dA, axis=2)                       # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)   # (B,nc,Q,H)
+    Brh = jnp.repeat(Br, hpg, axis=3)                   # (B,nc,Q,H,N)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Brh, dtr * decay_to_end, xr)    # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))          # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, s.state_dim), jnp.float32)
+
+    def step(carry, xs):
+        st, dc = xs                                      # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dc[..., None, None] + st
+        return new, prev
+
+    final_state, prev_states = lax.scan(
+        step, init_state.astype(jnp.float32),
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # ---- inter-chunk (off-diagonal) output ----------------------------------
+    decay_from_start = jnp.exp(cums)                    # (B,nc,Q,H)
+    Crh = jnp.repeat(Cr, hpg, axis=3)                   # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                       Crh, decay_from_start, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def mamba_block(p, x, arch: ArchConfig, ctx: ShardCtx, init_state=None,
+                return_state: bool = False):
+    """Full Mamba2 block. x: (B, S, d) -> (B, S, d)."""
+    s = arch.ssm
+    d_in, H, conv_ch = dims(arch)
+    cd = x.dtype
+    h = cm.rms_norm(x, p["ln"], arch.norm_eps)
+    zxbcdt = jnp.einsum("bsd,di->bsi", h, p["in_proj"].astype(cd))
+    zxbcdt = shard(zxbcdt, ctx, "batch", "seq", "model")
+    z, xs_, B_, C_, dt = _split_proj(arch, zxbcdt)
+    xbc = jnp.concatenate([xs_, B_, C_], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(cd),
+                                   p["conv_b"].astype(cd)))
+    xs_, B_, C_ = jnp.split(xbc, [d_in, d_in + s.ngroups * s.state_dim], -1)
+    Bsz, S, _ = x.shape
+    xh = xs_.reshape(Bsz, S, H, s.head_dim)
+    xh = shard(xh, ctx, "batch", "seq", "model", None)
+    Bm = B_.reshape(Bsz, S, s.ngroups, s.state_dim).astype(jnp.float32)
+    Cm = C_.reshape(Bsz, S, s.ngroups, s.state_dim).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, final_state = ssd_chunked(xh.astype(jnp.float32), dtv, A, Bm, Cm,
+                                 arch, ctx, init_state)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in).astype(cd)
+    # gated RMSNorm then out-projection
+    y = cm.rms_norm(y * jax.nn.silu(z), p["ln_gate"], arch.norm_eps)
+    out = x + jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd))
+    if return_state:
+        return out, final_state
+    return out
+
+
+def forward(params, h, arch: ArchConfig, ctx: ShardCtx, *, positions=None,
+            collect_kv: bool = False):
+    from repro.models.dense import _remat
+
+    def body(x, lp):
+        return mamba_block(lp, x, arch, ctx), None
+
+    body = _remat(body, arch.parallel.remat_policy)
+    h, _ = lax.scan(body, h, params["layers"])
+    return h, {}
+
+
+# ---------------------------------------------------------------------------
+# Decode: constant-memory recurrence
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(arch: ArchConfig, batch: int, seq: int,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    s = arch.ssm
+    d_in, H, conv_ch = dims(arch)
+    return {
+        "ssm_state": ParamSpec((arch.n_layers, batch, H, s.head_dim,
+                                s.state_dim),
+                               ("layers", "batch", "ssm_heads", None, None),
+                               jnp.float32, "zeros"),
+        "conv_state": ParamSpec((arch.n_layers, batch, s.conv_width - 1,
+                                 conv_ch),
+                                ("layers", "batch", None, "ssm_inner"),
+                                jnp.float32, "zeros"),
+    }
+
+
+def decode_block(p, cache_slice, x, arch: ArchConfig, ctx: ShardCtx):
+    """Single-token Mamba2 step. x: (B, 1, d)."""
+    s = arch.ssm
+    d_in, H, conv_ch = dims(arch)
+    cd = x.dtype
+    Bsz = x.shape[0]
+    h = cm.rms_norm(x, p["ln"], arch.norm_eps)
+    zxbcdt = jnp.einsum("bsd,di->bsi", h, p["in_proj"].astype(cd))[:, 0]
+    z, xs_, B_, C_, dt = _split_proj(arch, zxbcdt)
+    xbc = jnp.concatenate([xs_, B_, C_], axis=-1)          # (B, conv_ch)
+
+    conv_state = cache_slice["conv_state"]                 # (B, W-1, conv_ch)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(cd))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(cd))
+    new_conv_state = window[:, 1:]
+
+    xs_, B_, C_ = jnp.split(xbc, [d_in, d_in + s.ngroups * s.state_dim], -1)
+    xh = xs_.reshape(Bsz, H, s.head_dim).astype(jnp.float32)
+    Bm = B_.reshape(Bsz, s.ngroups, s.state_dim).astype(jnp.float32)
+    Cm = C_.reshape(Bsz, s.ngroups, s.state_dim).astype(jnp.float32)
+    hpg = H // s.ngroups
+    Bh = jnp.repeat(Bm, hpg, axis=1)                       # (B, H, N)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+    A = -jnp.exp(p["A_log"])
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+
+    state = cache_slice["ssm_state"]                       # (B, H, P, N)
+    decay = jnp.exp(dtv * A)[..., None, None]
+    state = state * decay + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dtv, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(Bsz, d_in).astype(cd)
+    y = cm.rms_norm(y * jax.nn.silu(z), p["ln_gate"], arch.norm_eps)
+    out = x + jnp.einsum("bi,id->bd", y, p["out_proj"].astype(cd))[:, None]
+    return out, {"ssm_state": state, "conv_state": new_conv_state}
+
+
+def decode_step(params, cache, h, pos, arch: ArchConfig, ctx: ShardCtx, *,
+                kv_quant: bool = False):
+    def body(x, xs):
+        lp, cs = xs
+        return decode_block(lp, cs, x, arch, ctx)
+
+    h, new_cache = lax.scan(body, h, (params["layers"], cache))
+    return h, new_cache

@@ -1,0 +1,87 @@
+"""AdamW with decoupled weight decay, global-norm clipping and optional
+low-precision optimizer state (bf16 m/v for the ≥100B configs).
+
+State mirrors the param pytree, so it inherits the param shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    state_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    zeros_v = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+
+def abstract_state(abstract_p, cfg: AdamWConfig) -> AdamWState:
+    z = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, cfg.state_dtype), abstract_p)
+    z2 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, cfg.state_dtype), abstract_p)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=z, v=z2)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    metrics["lr"] = lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g32
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g32 * g32
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (delta + cfg.weight_decay * p32)
+        return (p32.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,20 @@
+"""LR schedules (paper App. A.2: cosine to min_ratio with linear warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(max_lr: float, total_steps: int,
+                       warmup_steps: int = 0, min_ratio: float = 1e-3):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = max_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, max_lr * cos)
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

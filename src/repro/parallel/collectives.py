@@ -1,0 +1,39 @@
+"""Reusable distributed collectives (DESIGN.md §6).
+
+- distributed_topk: per-shard top-k + all-gather + merge (billion-scale
+  search; also used by core/search.make_distributed_adc).
+- sp_decode_merge: sequence-parallel decode attention combine — merges
+  per-shard partial softmax statistics (max / denominator / weighted sum).
+- compressed_psum_pods: re-exported from core/grad_compress.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grad_compress import compressed_psum_pods  # noqa: F401
+
+
+def distributed_topk(scores_local, base_index, k: int, axis: str):
+    """Inside shard_map: local (Q, N_loc) scores -> global (Q, k) ids+scores.
+
+    Wire cost: 2 * Q * k * (bytes) instead of gathering Q * N scores."""
+    s, i = jax.lax.top_k(scores_local, k)
+    gid = base_index + i
+    s_all = jax.lax.all_gather(s, axis, axis=1, tiled=True)
+    g_all = jax.lax.all_gather(gid, axis, axis=1, tiled=True)
+    s2, i2 = jax.lax.top_k(s_all, k)
+    return jnp.take_along_axis(g_all, i2, axis=1), s2
+
+
+def sp_decode_merge(m_loc, denom_loc, acc_loc, axis: str):
+    """Merge flash-decoding partials across a sequence-sharded KV cache.
+
+    m_loc: (...,) local max; denom_loc: (...,) local sum exp(s - m_loc);
+    acc_loc: (..., D) local sum p*V. Returns the exact global attention
+    output. Wire: 2 scalars + one D-vector per head — independent of T."""
+    m_glob = jax.lax.pmax(m_loc, axis)
+    corr = jnp.exp(m_loc - m_glob)
+    denom = jax.lax.psum(denom_loc * corr, axis)
+    acc = jax.lax.psum(acc_loc * corr[..., None], axis)
+    return acc / jnp.maximum(denom, 1e-30)[..., None]

@@ -1,0 +1,117 @@
+"""Logical-axis -> mesh-axis resolution with divisibility checking.
+
+Every ParamSpec / cache spec / batch spec carries logical axis names; this
+module turns them into PartitionSpecs for a concrete mesh. A rule is dropped
+(dim left replicated) when the mesh axis size does not divide the dim — the
+safe default for e.g. 56 attention heads over a 16-way model axis (the
+*activation* constraints still shard heads; GSPMD pads those internally).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.common import ParamSpec, ShardCtx, is_spec
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+def data_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig
+               ) -> Tuple[Dict[str, AxisVal], ShardCtx]:
+    """Resolve the arch's parallel policy against a mesh + input shape."""
+    pol = arch.parallel
+    daxes = data_axes_for(mesh)
+    if pol.dp_only:
+        # no tensor parallelism: the model axis joins data parallelism
+        daxes = daxes + ("model",)
+    dp = int(np.prod([mesh.shape[a] for a in daxes]))
+    batch_sharded = shape.global_batch % dp == 0 and shape.global_batch >= dp
+    sp_decode = (shape.kind == "decode") and not batch_sharded
+
+    batch_axes = daxes
+    if pol.grad_compress_in_graph and "pod" in mesh.axis_names:
+        # the pod axis goes manual (shard_map) in train_step: batch enters
+        # sharded over pod only; inside, activations shard over data alone
+        batch_axes = ("pod",)
+        daxes = tuple(a for a in daxes if a != "pod")
+
+    tp_axis = None if pol.dp_only else "model"
+    fsdp_axes = ("data", "model") if (pol.fsdp and pol.dp_only) else "data"
+    rules: Dict[str, AxisVal] = {
+        "mlp": tp_axis, "heads": tp_axis, "kv_heads": tp_axis,
+        "vocab": tp_axis, "experts": tp_axis, "ssm_inner": tp_axis,
+        "ssm_heads": tp_axis,
+        "layers": None, "groups": None, "seq": None,
+        "embed": fsdp_axes if pol.fsdp else None,
+        "moe_ffn": "data" if pol.moe_2d else None,
+        "batch": batch_axes if batch_sharded else None,
+        "cache_seq": daxes if sp_decode else None,
+    }
+    ctx = ShardCtx(data_axes=daxes, model_axis=tp_axis,
+                   batch_sharded=batch_sharded,
+                   cache_seq_sharded=sp_decode, active=True,
+                   moe_ffn_axis="data" if pol.moe_2d else None,
+                   axis_sizes={a: int(mesh.shape[a])
+                               for a in mesh.axis_names})
+    return rules, ctx
+
+
+def _resolve(spec: ParamSpec, rules: Dict[str, AxisVal], mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        r = rules.get(ax) if ax is not None else None
+        if r is None:
+            parts.append(None)
+            continue
+        axes = (r,) if isinstance(r, str) else tuple(r)
+        if any(a in used for a in axes):
+            parts.append(None)         # an axis may appear once per spec
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            parts.append(None)         # replicate non-divisible dims
+            continue
+        used.update(axes)
+        parts.append(r)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def pspec_tree(spec_tree, rules: Dict[str, AxisVal], mesh: Mesh):
+    return jax.tree.map(lambda s: _resolve(s, rules, mesh), spec_tree,
+                        is_leaf=is_spec)
+
+
+def sharding_tree(spec_tree, rules: Dict[str, AxisVal], mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, _resolve(s, rules, mesh)),
+                        spec_tree, is_leaf=is_spec)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def bytes_per_device(spec_tree, rules, mesh: Mesh) -> int:
+    """Static per-device byte footprint of a spec tree under the rules."""
+    total = 0
+    for s in jax.tree.leaves(spec_tree, is_leaf=is_spec):
+        ps = _resolve(s, rules, mesh)
+        shard_elems = int(np.prod(s.shape))
+        for dim, part in zip(s.shape, tuple(ps) + (None,) * 8):
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else tuple(part)
+            shard_elems //= int(np.prod([mesh.shape[a] for a in axes]))
+        total += shard_elems * jax.dtypes.canonicalize_dtype(s.dtype).itemsize
+    return total

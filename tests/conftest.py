@@ -1,0 +1,17 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single CPU device. Only launch/dryrun.py (run
+# as a subprocess) requests placeholder devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def clustered(rng, n, d, k=32, scale=2.0):
+    centers = rng.normal(size=(k, d)).astype(np.float32) * scale
+    x = centers[rng.integers(0, k, n)] + rng.normal(size=(n, d))
+    x = x - x.mean(0, keepdims=True)
+    return (x / x.std()).astype(np.float32)

@@ -1,0 +1,95 @@
+"""MCQ baselines: RQ / PQ / OPQ / k-means invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rq
+from repro.core.kmeans import kmeans, kmeans_cost, pairwise_sqdist
+
+from conftest import clustered
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(2)
+    return jnp.asarray(clustered(rng, 2048, 32))
+
+
+def test_kmeans_reduces_cost(data):
+    key = jax.random.key(0)
+    c1, _ = kmeans(key, data, 16, iters=1)
+    c10, _ = kmeans(key, data, 16, iters=10)
+    assert float(kmeans_cost(data, c10)) <= float(kmeans_cost(data, c1)) + 1e-6
+
+
+def test_rq_beam_improves(data):
+    cbs = rq.rq_train(jax.random.key(0), data, 4, 16)
+    _, x1 = rq.rq_encode(cbs, data, B=1)
+    _, x8 = rq.rq_encode(cbs, data, B=8)
+    m1 = float(jnp.mean(jnp.sum((data - x1) ** 2, -1)))
+    m8 = float(jnp.mean(jnp.sum((data - x8) ** 2, -1)))
+    assert m8 <= m1 + 1e-6
+
+
+def test_rq_decode_matches_encode(data):
+    cbs = rq.rq_train(jax.random.key(0), data, 4, 16)
+    codes, xhat = rq.rq_encode(cbs, data, B=2)
+    np.testing.assert_allclose(np.asarray(rq.rq_decode(cbs, codes)),
+                               np.asarray(xhat), rtol=1e-5, atol=1e-5)
+
+
+def test_rq_more_steps_better(data):
+    m_prev = None
+    for M in (1, 2, 4):
+        cbs = rq.rq_train(jax.random.key(0), data, M, 16)
+        _, xh = rq.rq_encode(cbs, data, B=1)
+        m = float(jnp.mean(jnp.sum((data - xh) ** 2, -1)))
+        if m_prev is not None:
+            assert m <= m_prev + 1e-6
+        m_prev = m
+
+
+def test_pq_roundtrip(data):
+    cbs = rq.pq_train(jax.random.key(0), data, 4, 16)
+    codes = rq.pq_encode(cbs, data)
+    xhat = rq.pq_decode(cbs, codes)
+    assert xhat.shape == data.shape
+    mse = float(jnp.mean(jnp.sum((data - xhat) ** 2, -1)))
+    base = float(jnp.mean(jnp.sum(data ** 2, -1)))
+    assert mse < base        # better than the zero coder
+
+
+def test_opq_no_worse_than_pq(data):
+    pq_cbs = rq.pq_train(jax.random.key(0), data, 4, 16)
+    pq_mse = float(jnp.mean(jnp.sum(
+        (data - rq.pq_decode(pq_cbs, rq.pq_encode(pq_cbs, data))) ** 2, -1)))
+    opq = rq.opq_train(jax.random.key(0), data, 4, 16, outer=3)
+    opq_mse = float(jnp.mean(jnp.sum(
+        (data - rq.opq_decode(opq, rq.opq_encode(opq, data))) ** 2, -1)))
+    assert opq_mse <= pq_mse * 1.05      # small slack: alternation is local
+
+
+def test_rq_beats_pq_on_correlated_data(data):
+    """RQ exploits cross-subspace structure PQ cannot (paper §1)."""
+    rq_cbs = rq.rq_train(jax.random.key(0), data, 4, 16)
+    _, xh = rq.rq_encode(rq_cbs, data, B=4)
+    rq_mse = float(jnp.mean(jnp.sum((data - xh) ** 2, -1)))
+    pq_cbs = rq.pq_train(jax.random.key(0), data, 4, 16)
+    pq_mse = float(jnp.mean(jnp.sum(
+        (data - rq.pq_decode(pq_cbs, rq.pq_encode(pq_cbs, data))) ** 2, -1)))
+    assert rq_mse < pq_mse
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pairwise_sqdist_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(20, 5)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(7, 5)).astype(np.float32))
+    d2 = pairwise_sqdist(x, c)
+    assert float(jnp.min(d2)) > -1e-4
+    # diagonal: distance to self is 0
+    dd = pairwise_sqdist(x[:5], x[:5])
+    assert float(jnp.max(jnp.abs(jnp.diag(dd)))) < 1e-4

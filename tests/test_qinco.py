@@ -1,0 +1,157 @@
+"""QINCo2 encode/decode invariants (paper §3.2) + hypothesis properties."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import qinco, rq, training
+from repro.models.common import init_params
+
+from conftest import clustered
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    x = clustered(rng, 2048, 16)
+    cfg = tiny()
+    params = training.init_qinco2(jax.random.key(0), x, cfg)
+    return cfg, params, jnp.asarray(x)
+
+
+def _mse(params, x, cfg, A, B):
+    return float(enc.reconstruction_mse(params, x, cfg, A, B))
+
+
+def test_encode_decode_consistency(setup):
+    """decode(params, codes) must equal the encoder's xhat."""
+    cfg, params, x = setup
+    codes, xhat, _ = enc.encode(params, x[:128], cfg, A=4, B=4)
+    recon = qinco.decode(params, codes, cfg)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(xhat),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_beam_monotone(setup):
+    """Larger beams never hurt (Fig. S5): MSE(B=8) <= MSE(B=2) <= MSE(B=1)."""
+    cfg, params, x = setup
+    m1 = _mse(params, x[:512], cfg, 8, 1)
+    m2 = _mse(params, x[:512], cfg, 8, 2)
+    m8 = _mse(params, x[:512], cfg, 8, 8)
+    assert m2 <= m1 + 1e-5
+    assert m8 <= m2 + 1e-5
+
+
+def test_preselection_approximates_exhaustive(setup):
+    """A=K is exhaustive; small A should degrade gracefully (Fig. S4)."""
+    cfg, params, x = setup
+    exhaustive = _mse(params, x[:512], cfg, cfg.K, 1)
+    a_half = _mse(params, x[:512], cfg, cfg.K // 2, 1)
+    a_quarter = _mse(params, x[:512], cfg, cfg.K // 4, 1)
+    assert exhaustive <= a_half + 1e-5
+    assert a_half <= a_quarter + 1e-5
+
+
+def test_dynamic_rates_monotone(setup):
+    """MSE after m steps decreases with m (Fig. S3)."""
+    cfg, params, x = setup
+    codes, _, _ = enc.encode(params, x[:256], cfg, A=8, B=4)
+    traj = qinco.decode_partial(params, codes, cfg)        # (N, M, d)
+    errs = jnp.mean(jnp.sum((x[:256, None] - traj) ** 2, -1), axis=0)
+    assert bool(jnp.all(errs[1:] <= errs[:-1] + 1e-5))
+
+
+def test_train_forward_differentiable(setup):
+    cfg, params, x = setup
+    codes, _, _ = enc.encode(params, x[:64], cfg, A=4, B=2)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: enc.train_forward(p, x[:64], codes, cfg),
+        has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+def test_training_improves_over_rq():
+    rng = np.random.default_rng(1)
+    x = clustered(rng, 3072, 16)
+    cfg = tiny(epochs=4)
+    cbs = rq.rq_train(jax.random.key(0), jnp.asarray(x[:2048]), cfg.M,
+                      cfg.K, 15)
+    _, xhat = rq.rq_encode(cbs, jnp.asarray(x[2048:]), B=1)
+    rq_mse = float(jnp.mean(jnp.sum((x[2048:] - np.asarray(xhat)) ** 2, -1)))
+    params, hist = training.train(jax.random.key(1), x[:2048], cfg,
+                                  x_val=x[2048:], verbose=False)
+    assert hist[-1]["val_mse"] < rq_mse
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 1000))
+def test_beam_monotone_property(beam, seed):
+    """Hypothesis: for random data/params, B+1 beams never lose to B."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    cfg = tiny(d=8, M=3, K=8, de=8, dh=8, L=1)
+    params = init_params(qinco.param_specs(cfg), jax.random.key(seed))
+    m_small = float(enc.reconstruction_mse(params, x, cfg, 4, beam))
+    m_big = float(enc.reconstruction_mse(params, x, cfg, 4, beam + 1))
+    assert m_big <= m_small + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_decode_is_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    cfg = tiny(d=8, M=3, K=8, de=8, dh=8, L=1)
+    params = init_params(qinco.param_specs(cfg), jax.random.key(seed))
+    codes = jnp.asarray(rng.integers(0, cfg.K, size=(32, cfg.M))
+                        .astype(np.int32))
+    r1 = qinco.decode(params, codes, cfg)
+    r2 = qinco.decode(params, codes, cfg)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_preselection_with_neural_g():
+    """L_s >= 1: the neural pre-selector path (paper Fig. 4-left)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(128, 8)).astype(np.float32))
+    cfg = tiny(d=8, M=3, K=8, de=8, dh=8, L=1, Ls=1)
+    params = init_params(qinco.param_specs(cfg), jax.random.key(0))
+    assert "g" in params
+    codes, xhat, mse = enc.encode(params, x, cfg, A=4, B=2)
+    assert codes.shape == (128, 3)
+    assert np.isfinite(float(mse))
+    recon = qinco.decode(params, codes, cfg)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(xhat),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sp_decode_merge_exact():
+    """Sequence-parallel softmax merge == monolithic attention (long_500k)."""
+    from repro.parallel.collectives import sp_decode_merge
+    rng = np.random.default_rng(0)
+    H, T, D, shards = 4, 64, 8, 4
+    q = jnp.asarray(rng.normal(size=(H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    s = q @ k.T                                       # (H, T)
+    ref = jax.nn.softmax(s, -1) @ v
+    # emulate the per-shard partials + merge math (pure-fn form)
+    tl = T // shards
+    ms, ds, accs = [], [], []
+    for i in range(shards):
+        sl = s[:, i * tl:(i + 1) * tl]
+        m = jnp.max(sl, -1)
+        p = jnp.exp(sl - m[:, None])
+        ms.append(m); ds.append(jnp.sum(p, -1))
+        accs.append(p @ v[i * tl:(i + 1) * tl])
+    m_glob = jnp.max(jnp.stack(ms), 0)
+    corr = [jnp.exp(m - m_glob) for m in ms]
+    denom = sum(d * c for d, c in zip(ds, corr))
+    acc = sum(a * c[:, None] for a, c in zip(accs, corr))
+    out = acc / denom[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,127 @@
+"""Search cascade: AQ / pairwise decoders, IVF, end-to-end recall,
+distributed ADC merge."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qinco2 import tiny
+from repro.core import aq, ivf, pairwise as pw, search, training
+from repro.core import encode as enc
+from repro.kernels import ops, ref as kref
+
+from conftest import clustered
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(3)
+    xb = clustered(rng, 6000, 16, k=64)
+    xq = xb[:48] + 0.05 * rng.normal(size=(48, 16)).astype(np.float32)
+    gt = np.argmin(((xq[:, None] - xb[None]) ** 2).sum(-1), axis=1)
+    cfg = tiny(epochs=2)
+    params, _ = training.train(jax.random.key(1), xb[:3000], cfg,
+                               verbose=False)
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params, cfg,
+                             k_ivf=32, m_tilde=2, n_pair_books=8)
+    return xb, xq, gt, cfg, params, idx
+
+
+def test_aq_fit_reduces_error(world):
+    xb, _, _, cfg, params, idx = world
+    resid = ivf.residual_to_centroid(idx.ivf, jnp.asarray(xb),
+                                     idx.ivf.assignments)
+    recon = aq.aq_decode(idx.aq_books, idx.codes)
+    mse = float(jnp.mean(jnp.sum((resid - recon) ** 2, -1)))
+    base = float(jnp.mean(jnp.sum(resid ** 2, -1)))
+    assert mse < base
+
+
+def test_pairwise_beats_unitary(world):
+    """Paper §3.3: the pairwise decoder is at least as good as unitary AQ."""
+    xb, _, _, cfg, params, idx = world
+    recon_aq = (aq.aq_decode(idx.aq_books, idx.codes)
+                + idx.ivf.centroids[idx.ivf.assignments])
+    mse_aq = float(jnp.mean(jnp.sum((jnp.asarray(xb) - recon_aq) ** 2, -1)))
+    recon_pw = idx.pw.decode(idx.ext_codes)
+    mse_pw = float(jnp.mean(jnp.sum((jnp.asarray(xb) - recon_pw) ** 2, -1)))
+    assert mse_pw <= mse_aq + 1e-5
+
+
+def test_optimized_pairs_beat_consecutive(world):
+    """Table 4: optimized code-pairs > consecutive code-pairs."""
+    xb, _, _, cfg, params, idx = world
+    ext = idx.ext_codes
+    cons = pw.consecutive_pairs_decoder(ext, jnp.asarray(xb), cfg.K)
+    mse_cons = float(jnp.mean(jnp.sum(
+        (jnp.asarray(xb) - cons.decode(ext)) ** 2, -1)))
+    opt = pw.fit_pairwise(ext, jnp.asarray(xb), cfg.K, len(cons.pairs))
+    mse_opt = float(jnp.mean(jnp.sum(
+        (jnp.asarray(xb) - opt.decode(ext)) ** 2, -1)))
+    assert mse_opt <= mse_cons + 1e-5
+
+
+def test_cascade_recall(world):
+    """Cascade recall close to the codec's own brute-force ceiling."""
+    from repro.core import qinco
+    xb, xq, gt, cfg, params, idx = world
+    q = jnp.asarray(xq)
+    ids, dists = search.search(idx, q, n_probe=8,
+                               n_short_aq=64, n_short_pw=16, topk=1, cfg=cfg)
+    r1 = float((np.asarray(ids[:, 0]) == gt).mean())
+    # ceiling: exact rerank of ALL decoded db vectors (no shortlist)
+    recon = (qinco.decode(params, idx.codes, cfg)
+             + idx.ivf.centroids[idx.ivf.assignments])
+    d2 = ((np.asarray(q)[:, None] - np.asarray(recon)[None]) ** 2).sum(-1)
+    ceiling = float((np.argmin(d2, 1) == gt).mean())
+    assert r1 >= 0.5 * ceiling and r1 > 0.2, (r1, ceiling)
+
+
+def test_bigger_shortlists_help(world):
+    xb, xq, gt, cfg, params, idx = world
+    r = {}
+    for ns in (4, 32):
+        ids, _ = search.search(idx, jnp.asarray(xq), n_probe=8,
+                               n_short_aq=max(ns, 8), n_short_pw=ns,
+                               topk=1, cfg=cfg)
+        r[ns] = float((np.asarray(ids[:, 0]) == gt).mean())
+    assert r[32] >= r[4] - 1e-9
+
+
+def test_adc_kernel_in_cascade(world):
+    """The Pallas ADC kernel scores == the cascade's jnp scoring."""
+    xb, xq, gt, cfg, params, idx = world
+    q = jnp.asarray(xq[:8])
+    lut = aq.adc_lut(idx.aq_books, q)                     # (Q, M, K)
+    scores_k = ops.adc_scores(idx.codes, lut)
+    scores_ref = kref.adc_ref(idx.codes, lut)
+    np.testing.assert_allclose(np.asarray(scores_k), np.asarray(scores_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_distributed_adc_matches_local(world):
+    """shard_map per-shard top-k + merge == single-device top-k."""
+    xb, xq, gt, cfg, params, idx = world
+    mesh = jax.make_mesh((1,), ("model",))
+    fn = search.make_distributed_adc(mesh, "model")
+    q = jnp.asarray(xq[:4])
+    lut = aq.adc_lut(idx.aq_books, q)
+    norms = idx.aq_norms
+    k = 8
+    with jax.set_mesh(mesh):
+        gids, gscores = fn(lut, idx.codes, norms, k)
+    # reference: full scores, global top-k
+    full = 2.0 * kref.adc_ref(idx.codes, lut) - norms[None]
+    rs, ri = jax.lax.top_k(full, k)
+    np.testing.assert_allclose(np.asarray(gscores), np.asarray(rs),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ivf_probe_covers_assignment(world):
+    """A vector's own bucket is found when probing enough buckets."""
+    xb, _, _, cfg, params, idx = world
+    x0 = jnp.asarray(xb[:16])
+    top, cand, mask = ivf.probe(idx.ivf, x0, n_probe=8)
+    own = np.asarray(idx.ivf.assignments[:16])
+    hit = (np.asarray(top) == own[:, None]).any(1).mean()
+    assert hit > 0.9

@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The QINCo2 pipeline from raw vectors to search results, exercising every
+paper component in one flow: normalize -> RQ init -> train QINCo2 (encode
+w/ pre-selection+beam, AdamW, dead-code reset) -> IVF index -> AQ +
+pairwise shortlists -> neural re-rank, validating the paper's ordering
+claims along the way.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qinco2 import tiny, qinco1
+from repro.core import aq, encode as enc, pairwise as pw, rq, search, training
+
+from conftest import clustered
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    rng = np.random.default_rng(7)
+    xb = clustered(rng, 8000, 16, k=48)
+    xt, xdb = xb[:4000], xb[4000:]
+    xq = 0.8 * xdb[:64] + 0.2 * rng.normal(size=(64, 16)).astype(np.float32)
+    gt = np.argmin(((xq[:, None] - xdb[None]) ** 2).sum(-1), axis=1)
+    cfg = tiny(epochs=3)
+    params, hist = training.train(jax.random.key(0), xt, cfg, x_val=xdb[:512],
+                                  verbose=False)
+    return xt, xdb, xq, gt, cfg, params, hist
+
+
+def test_paper_ordering_claims(pipeline):
+    """Table 3 ordering on synthetic data: QINCo2(beam) <= QINCo2(greedy),
+    QINCo2 < RQ on held-out MSE."""
+    xt, xdb, xq, gt, cfg, params, hist = pipeline
+    val = jnp.asarray(xdb[:1024])
+    cbs = rq.rq_train(jax.random.key(0), jnp.asarray(xt), cfg.M, cfg.K, 15)
+    _, xhat_rq = rq.rq_encode(cbs, val, B=1)
+    mse_rq = float(jnp.mean(jnp.sum((val - xhat_rq) ** 2, -1)))
+    mse_greedy = float(enc.reconstruction_mse(params, val, cfg, cfg.K, 1))
+    mse_beam = float(enc.reconstruction_mse(params, val, cfg,
+                                            cfg.A_eval, cfg.B_eval))
+    assert mse_beam <= mse_greedy + 1e-6
+    assert mse_beam < mse_rq
+
+
+def test_training_history_improves(pipeline):
+    *_, hist = pipeline
+    assert hist[-1]["val_mse"] <= hist[0]["val_mse"] + 1e-6
+
+
+def test_full_search_flow(pipeline):
+    xt, xdb, xq, gt, cfg, params, _ = pipeline
+    idx = search.build_index(jax.random.key(1), jnp.asarray(xdb), params,
+                             cfg, k_ivf=32, m_tilde=2, n_pair_books=8)
+    ids, dists = search.search(idx, jnp.asarray(xq), n_probe=8,
+                               n_short_aq=48, n_short_pw=12, topk=5, cfg=cfg)
+    r1 = float((np.asarray(ids[:, 0]) == gt).mean())
+    r5 = float((np.asarray(ids) == gt[:, None]).any(1).mean())
+    assert r1 >= 0.4
+    assert r5 >= r1
+    # distances are sorted ascending
+    d = np.asarray(dists)
+    assert (np.diff(d, axis=1) >= -1e-5).all()
+
+
+def test_shortlist_cascade_claim(pipeline):
+    """Table 4's core claim: a pairwise shortlist re-ranked by the QINCo2
+    decoder beats the pairwise decoder's own top-1, on the SAME candidates."""
+    from repro.core import qinco
+    xt, xdb, xq, gt, cfg, params, _ = pipeline
+    # few pair-books: the pairwise decoder is the deliberately cheap/less
+    # accurate stage (paper §2: "a less accurate but faster decoder") —
+    # with many books on a small db it can overfit past the neural codec.
+    idx = search.build_index(jax.random.key(1), jnp.asarray(xdb), params,
+                             cfg, k_ivf=32, m_tilde=2, n_pair_books=2)
+    q = jnp.asarray(xq)
+    lut = pw.pairwise_lut(idx.pw.codebooks, q)
+    scores = pw.pairwise_scores(lut, idx.ext_codes, idx.pw.pairs, cfg.K,
+                                idx.pw_norms)                   # (Q, N)
+    direct = np.asarray(jnp.argmax(scores, 1))
+    r1_direct = float((direct == gt).mean())
+    # shortlist of 10 from the same scores, re-ranked with the full decoder
+    _, short = jax.lax.top_k(scores, 10)                        # (Q, 10)
+    flat = short.reshape(-1)
+    recon = (qinco.decode(params, idx.codes[flat], cfg)
+             + idx.ivf.centroids[idx.ivf.assignments[flat]])
+    recon = recon.reshape(q.shape[0], 10, -1)
+    d2 = jnp.sum((q[:, None] - recon) ** 2, -1)
+    rerank = np.asarray(jnp.take_along_axis(
+        short, jnp.argmin(d2, 1)[:, None], 1))[:, 0]
+    r1_rerank = float((rerank == gt).mean())
+    assert r1_rerank >= r1_direct - 1e-9, (r1_rerank, r1_direct)

@@ -1,0 +1,76 @@
+"""Encode/search throughput: the `kernels/ops` dispatch backends compared
+(xla reference path vs pallas kernels) on the two paper hot loops —
+beam-search encoding (§3.2) and ADC/pairwise candidate scoring (§3.3).
+
+On TPU the pallas column is the native-kernel path; on CPU it runs in
+interpret mode (expected to be much slower — the column is then a
+correctness/coverage signal, not a speed claim; the printed rows say which
+mode was measured).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import training
+from repro.kernels import ops
+
+BACKENDS = ("xla", "pallas")
+
+
+def run(dim=16, M=4, K=16, n_db=2048, n_q=32, seed=0, *,
+        backends=BACKENDS, reps=3):
+    xt, xb, xq, _ = bench_data("bigann", dim=dim, n_db=n_db, n_query=n_q,
+                               seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, epochs=1, batch_size=512)
+    params = training.init_qinco2(jax.random.key(seed), xt, cfg)
+    xbj = jnp.asarray(xb[:512])
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, K, size=(n_db, M)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(n_q, M, K)).astype(np.float32))
+    norms = jnp.asarray((rng.normal(size=(n_db,)) ** 2).astype(np.float32))
+    pairs = tuple((i, (i + 1) % M) for i in range(M))
+    plut = jnp.asarray(
+        rng.normal(size=(n_q, len(pairs), K * K)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(1024, dim)).astype(np.float32))
+    cb = params["pre_codebooks"][0]
+
+    rows = []
+    for be in backends:
+        tag = f"{be}" if be == "xla" else f"{be}/{mode}"
+        t = timeit_us(lambda x: enc.encode(params, x, cfg, 8, 8,
+                                           backend=be)[0], xbj, reps=reps)
+        rows.append({"op": "encode(A=8,B=8)", "backend": tag,
+                     "us_per_vec": t / len(xbj)})
+        t = timeit_us(lambda rr: ops.l2_topk(rr, cb, 8, backend=be)[0], r,
+                      reps=reps)
+        rows.append({"op": "l2_topk(A=8)", "backend": tag,
+                     "us_per_vec": t / len(r)})
+        t = timeit_us(lambda c: ops.adc_scores(c, lut, norms=norms,
+                                               backend=be), codes, reps=reps)
+        rows.append({"op": f"adc_scores({n_q}x{n_db})", "backend": tag,
+                     "us_per_vec": t / n_db})
+        t = timeit_us(lambda c: ops.pairwise_scores(c, plut, pairs, K,
+                                                    backend=be), codes,
+                      reps=reps)
+        rows.append({"op": f"pairwise_scores({n_q}x{n_db})", "backend": tag,
+                     "us_per_vec": t / n_db})
+    return rows
+
+
+def main(fast=True):
+    rows = run(n_db=1024 if fast else 8192, reps=2 if fast else 5)
+    print("op,backend,us_per_vec")
+    for r in rows:
+        print(f"{r['op']},{r['backend']},{r['us_per_vec']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -19,12 +19,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=[None, "t3", "t4", "s2", "f5", "f6", "roofline"])
+                    choices=[None, "t3", "t4", "s2", "f5", "f6", "roofline",
+                             "backends"])
     args = ap.parse_args()
     fast = not args.full
     sections = {
         "t3": _t3, "t4": _t4, "s2": _s2, "f5": _f5, "f6": _f6,
-        "roofline": _roof,
+        "roofline": _roof, "backends": _backends,
     }
     todo = [args.only] if args.only else list(sections)
     print("name,us_per_call,derived")
@@ -79,6 +80,15 @@ def _f6(fast):
     q2 = [r for r in rows if r["method"] == "IVF-QINCo2"]
     best = max(q2, key=lambda r: r["r@1"])
     return f"best_r1={best['r@1']:.4f}@qps={best['qps']:.0f}"
+
+
+def _backends(fast):
+    from benchmarks import kernel_backends as kb
+    print("\n== ops dispatch: xla vs pallas backends ==")
+    rows = kb.main(fast=fast)
+    xla_enc = [r for r in rows
+               if r["op"].startswith("encode") and r["backend"] == "xla"]
+    return f"encode_xla={xla_enc[0]['us_per_vec']:.1f}us/vec"
 
 
 def _roof(fast):

@@ -53,7 +53,8 @@ def run(dim=24, M=4, K=16, seed=0, n=2048):
     # Pallas kernel path for the pre-selection distance scan
     r = xbj
     cb0 = params["pre_codebooks"][0]
-    t_pre = timeit_us(lambda x: ops.l2_topk(x, cb0, 8)[0], r) / n
+    t_pre = timeit_us(lambda x: ops.l2_topk(x, cb0, 8,
+                                            backend="pallas")[0], r) / n
     rows.append(("l2_topk kernel (per step)", t_pre, 0.0))
 
     f = flops_formulas(dim, K, M, cfg.L, cfg.de, cfg.dh, 8, 8)

@@ -58,13 +58,11 @@ def adc_lut(codebooks, q):
     return jnp.einsum("qd,mkd->qmk", q, codebooks)
 
 
-def adc_scores(lut, codes, norms):
+def adc_scores(lut, codes, norms, backend: str = "auto"):
     """Approx -||q - xhat||^2 up to a ||q||^2 constant.
 
     lut: (Q, M, K); codes: (N, M); norms: (N,) = ||xhat||^2.
-    Returns (Q, N) scores (higher = closer)."""
-    M = lut.shape[1]
-    ip = jnp.sum(jnp.take_along_axis(
-        lut[:, None, :, :],
-        codes[None, :, :, None], axis=3)[..., 0], axis=2)   # (Q, N)
-    return 2.0 * ip - norms[None, :]
+    Returns (Q, N) scores (higher = closer). Thin wrapper over the
+    `kernels/ops.adc_scores` dispatch (kept for its LUT-first signature)."""
+    from repro.kernels import ops
+    return ops.adc_scores(codes, lut, norms=norms, backend=backend)

@@ -5,94 +5,208 @@ One code path covers the whole family:
     Q_QI-A  (pre-selection): A < K, B = 1
     Q_QI-B  (beam search):   A < K, B > 1
 
-Shapes are static: (N, B, ...) tensors, lax.top_k selection, no raggedness.
+The beam is an explicit `BeamState` pytree (xhat / err / codes) advanced by
+a single `lax.scan` over the stacked step params — one trace per
+(cfg, A, B, backend) regardless of M, instead of M unrolled Python-loop
+steps. Shapes are static throughout: the beam is B-wide from step 0, with
+not-yet-populated hypotheses carrying err = +inf so that flat top-k over
+the B*A expansions reproduces the growing-beam (min(B, A^m)) semantics of
+the reference implementation exactly.
+
+Pre-selection (Eq. 6, L_s = 0) runs through the `kernels/ops.l2_topk`
+dispatch; `encode_dataset` is the chunked driver for database-scale
+encoding (static chunk shapes, donated chunk buffers, optional shard_map
+over a data axis).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.configs.qinco2 import QincoConfig
 from repro.core import qinco
+from repro.kernels import ops
 
 
-def _sqdist_to_codebook(r, cb):
-    """r: (N, B, d); cb: (K, d) -> (N, B, K)."""
-    r2 = jnp.sum(r * r, axis=-1, keepdims=True)
-    c2 = jnp.sum(cb * cb, axis=-1)
-    return r2 - 2.0 * jnp.einsum("nbd,kd->nbk", r, cb) + c2
+@dataclasses.dataclass
+class BeamState:
+    """The B-hypothesis beam carried through the encode scan.
 
-
-def preselect(params, m_g, r, xhat, pre_cb, A: int, cfg: QincoConfig):
-    """Top-A candidate indices (N, B, A) by distance to C~ (Eq. 6)."""
-    if cfg.Ls >= 1 and "g" in params:
-        cand = qinco.f_apply(m_g, pre_cb, xhat[..., None, :], cfg)  # (N,B,K,d)
-        d2 = jnp.sum(jnp.square(r[..., None, :] - cand), axis=-1)
-    else:
-        d2 = _sqdist_to_codebook(r, pre_cb)
-    if A >= cfg.K:
-        idx = jnp.broadcast_to(jnp.arange(cfg.K), d2.shape[:-1] + (cfg.K,))
-        return idx, d2
-    _, idx = lax.top_k(-d2, A)
-    return idx, d2
-
-
-@partial(jax.jit, static_argnames=("cfg", "A", "B"))
-def encode(params, x, cfg: QincoConfig, A: Optional[int] = None,
-           B: Optional[int] = None):
-    """Beam-search encode. x: (N, d) -> (codes (N, M), xhat (N, d), mse).
-
-    Maintains B hypotheses; step m expands each with its top-A pre-selected
-    candidates, evaluates f_theta on the A*B expansions and keeps the best B
-    (Fig. 2). Also returns the per-beam per-step selected pre-codebook index
-    trace needed for the C~ auxiliary loss.
+    xhat: (N, B, d) running reconstructions; err: (N, B) squared errors
+    (+inf marks a beam slot not yet populated); codes: (N, B, M) selected
+    indices so far (columns >= current step are zero).
     """
+    xhat: jnp.ndarray
+    err: jnp.ndarray
+    codes: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    BeamState, data_fields=("xhat", "err", "codes"), meta_fields=())
+
+
+def preselect(gm, r, xhat, pre_cb, A: int, cfg: QincoConfig,
+              backend: str = "auto"):
+    """Top-A candidate indices (N, B, A) by distance to C~ (Eq. 6).
+
+    gm: the step's g_phi params (None when L_s = 0). A >= K short-circuits
+    to the identity candidate list (exhaustive search, QINCo greedy mode).
+    """
+    N, Bb, d = r.shape
+    if A >= cfg.K:      # exhaustive: the candidate list is the identity
+        return jnp.broadcast_to(jnp.arange(cfg.K), (N, Bb, cfg.K))
+    if cfg.Ls >= 1 and gm is not None:
+        cand = qinco.f_apply(gm, pre_cb, xhat[..., None, :], cfg)  # (N,B,K,d)
+        d2 = jnp.sum(jnp.square(r[..., None, :] - cand), axis=-1)
+        _, idx = lax.top_k(-d2, A)
+        return idx
+    idx, _ = ops.l2_topk(r.reshape(N * Bb, d), pre_cb, A, backend=backend)
+    return idx.reshape(N, Bb, A)
+
+
+def _stacked_step_inputs(params):
+    """The per-step scan inputs: step nets + codebooks, stacked over M."""
+    xs = {"f": params["f"], "cb": params["codebooks"],
+          "pre": params["pre_codebooks"], "m": None}
+    if "g" in params:
+        xs["g"] = params["g"]
+    M = params["codebooks"].shape[0]
+    xs["m"] = jnp.arange(M)
+    return xs
+
+
+def _beam_step(state: BeamState, xs, *, x, cfg: QincoConfig, A: int, B: int,
+               backend: str) -> Tuple[BeamState, None]:
+    """Expand each beam with its top-A candidates, keep the best B (Fig. 2)."""
+    N, Bb, d = state.xhat.shape
+    r = x[:, None, :] - state.xhat                        # (N, B, d)
+    idx = preselect(xs.get("g"), r, state.xhat, xs["pre"], A, cfg, backend)
+    cand = xs["cb"][idx]                                  # (N, B, A, d)
+    f_out = qinco.f_apply(xs["f"], cand, state.xhat[..., None, :], cfg)
+    new_xhat = state.xhat[..., None, :] + f_out           # (N, B, A, d)
+    new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
+    # expansions of not-yet-populated beams must not be selectable
+    new_err = jnp.where(jnp.isinf(state.err)[..., None], jnp.inf, new_err)
+
+    Acur = idx.shape[-1]
+    flat_err = new_err.reshape(N, Bb * Acur)
+    top_err, flat_idx = lax.top_k(-flat_err, Bb)          # (N, B)
+    b_idx = flat_idx // Acur
+    xhat = jnp.take_along_axis(
+        new_xhat.reshape(N, Bb * Acur, d), flat_idx[..., None], axis=1)
+    sel_code = jnp.take_along_axis(
+        idx.reshape(N, Bb * Acur), flat_idx, axis=1)      # (N, B)
+    codes = jnp.take_along_axis(state.codes, b_idx[..., None], axis=1)
+    codes = lax.dynamic_update_slice(
+        codes, sel_code[..., None].astype(codes.dtype), (0, 0, xs["m"]))
+    return BeamState(xhat=xhat, err=-top_err, codes=codes), None
+
+
+def _encode_impl(params, x, cfg: QincoConfig, A: Optional[int] = None,
+                 B: Optional[int] = None, backend: str = "auto"):
+    """Beam-search encode. x: (N, d) -> (codes (N, M), xhat (N, d), mse)."""
     A = A or cfg.A_eval
     B = B or cfg.B_eval
     A = min(A, cfg.K)
     N, d = x.shape
 
-    xhat = jnp.zeros((N, 1, d), x.dtype)          # beams start identical
-    err = jnp.zeros((N, 1), x.dtype)
-    codes = jnp.zeros((N, 1, cfg.M), jnp.int32)
+    init = BeamState(
+        xhat=jnp.zeros((N, B, d), x.dtype),
+        err=jnp.where(jnp.arange(B)[None, :] == 0, 0.0,
+                      jnp.inf).astype(x.dtype) * jnp.ones((N, 1), x.dtype),
+        codes=jnp.zeros((N, B, cfg.M), jnp.int32),
+    )
+    step = partial(_beam_step, x=x, cfg=cfg, A=A, B=B, backend=backend)
+    state, _ = lax.scan(step, init, _stacked_step_inputs(params))
 
-    for m in range(cfg.M):
-        fm = jax.tree.map(lambda a: a[m], params["f"])
-        gm = (jax.tree.map(lambda a: a[m], params["g"])
-              if "g" in params else None)
-        cb = params["codebooks"][m]               # (K, d)
-        pre_cb = params["pre_codebooks"][m]
-        Bcur = xhat.shape[1]
-        r = x[:, None, :] - xhat                  # (N, Bcur, d)
-        idx, _ = preselect(params, gm, r, xhat, pre_cb, A, cfg)  # (N,Bcur,A)
-        cand = cb[idx]                            # (N, Bcur, A, d)
-        f_out = qinco.f_apply(fm, cand, xhat[..., None, :], cfg)
-        new_xhat = xhat[..., None, :] + f_out     # (N, Bcur, A, d)
-        new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
-
-        k = min(B, Bcur * A)
-        flat_err = new_err.reshape(N, Bcur * A)
-        top_err, flat_idx = lax.top_k(-flat_err, k)
-        b_idx = flat_idx // A                     # (N, k)
-        a_idx = flat_idx % A
-        take = lambda t, bi: jnp.take_along_axis(t, bi, axis=1)
-        xhat = jnp.take_along_axis(
-            new_xhat.reshape(N, Bcur * A, d), flat_idx[..., None], axis=1)
-        sel_code = jnp.take_along_axis(
-            idx.reshape(N, Bcur * A), flat_idx, axis=1)    # (N, k)
-        codes = take(codes, b_idx[..., None])
-        codes = codes.at[:, :, m].set(sel_code)
-        err = -top_err
-
-    best = jnp.argmin(err, axis=1)
-    codes_best = jnp.take_along_axis(codes, best[:, None, None], 1)[:, 0]
-    xhat_best = jnp.take_along_axis(xhat, best[:, None, None], 1)[:, 0]
-    mse = jnp.mean(jnp.min(err, axis=1))
+    best = jnp.argmin(state.err, axis=1)
+    codes_best = jnp.take_along_axis(state.codes, best[:, None, None], 1)[:, 0]
+    xhat_best = jnp.take_along_axis(state.xhat, best[:, None, None], 1)[:, 0]
+    mse = jnp.mean(jnp.min(state.err, axis=1))
     return codes_best, xhat_best, mse
+
+
+encode = jax.jit(_encode_impl, static_argnames=("cfg", "A", "B", "backend"))
+encode.__doc__ = _encode_impl.__doc__
+
+# chunk variant: the incoming chunk buffer is donated (same shape/dtype as
+# the returned xhat, so XLA can reuse it) — used only by encode_dataset,
+# whose chunks are freshly device_put host slices.
+_encode_chunk = jax.jit(_encode_impl, static_argnames=("cfg", "A", "B",
+                                                       "backend"),
+                        donate_argnums=(1,))
+
+
+def encode_dataset(params, x, cfg: QincoConfig, A: Optional[int] = None,
+                   B: Optional[int] = None, *, chunk: int = 4096,
+                   backend: str = "auto", mesh=None, data_axis: str = "data",
+                   out_codes=None):
+    """Encode a database larger than a device batch, chunk by chunk.
+
+    Every chunk has the same static shape (the tail is zero-padded and
+    sliced off), so the whole dataset reuses ONE compiled executable; chunk
+    buffers are donated. With ``mesh``, each chunk is shard_mapped over
+    ``data_axis`` (params replicated — the paper's DDP database-encode
+    layout). Results land in host memory (``out_codes`` may preallocate).
+
+    Returns (codes (N, M) int32 np.ndarray, xhat (N, d) np.ndarray, mse).
+    """
+    A = A or cfg.A_eval
+    B = B or cfg.B_eval
+    x = np.asarray(x)
+    N, d = x.shape
+    chunk = max(1, min(chunk, N))
+    if mesh is not None:
+        nsh = mesh.shape[data_axis]
+        chunk = max(nsh, chunk - chunk % nsh)
+        fn = _make_sharded_chunk_encoder(cfg, A, B, backend, mesh, data_axis)
+    else:
+        fn = partial(_encode_chunk, cfg=cfg, A=A, B=B, backend=backend)
+
+    codes = out_codes if out_codes is not None else np.empty((N, cfg.M),
+                                                             np.int32)
+    xhat = np.empty((N, d), np.float32)
+    for lo in range(0, N, chunk):
+        hi = min(lo + chunk, N)
+        xc = x[lo:hi]
+        if hi - lo < chunk:                               # static tail shape
+            xc = np.concatenate(
+                [xc, np.zeros((chunk - (hi - lo), d), x.dtype)])
+        c, xh, _ = fn(params, jnp.asarray(xc))
+        codes[lo:hi] = np.asarray(c)[:hi - lo]
+        xhat[lo:hi] = np.asarray(xh)[:hi - lo]
+    mse = float(np.mean(np.sum((x - xhat) ** 2, axis=-1)))
+    return codes, xhat, mse
+
+
+def _make_sharded_chunk_encoder(cfg, A, B, backend, mesh, data_axis):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import compat
+
+    def run(params, xc):
+        def local(params, x_loc):
+            codes, xhat, mse = _encode_impl(params, x_loc, cfg, A, B,
+                                            backend)
+            # per-shard means are equal-weighted (chunks divide evenly
+            # over the axis), so pmean == the chunk-global mean — and the
+            # out_spec below promises a replicated scalar
+            return codes, xhat, jax.lax.pmean(mse, data_axis)
+
+        pspec = jax.tree.map(lambda _: P(), params)
+        return compat.shard_map(
+            local, mesh=mesh,
+            in_specs=(pspec, P(data_axis)),
+            out_specs=(P(data_axis), P(data_axis), P()),
+            check_vma=False)(params, xc)
+
+    return jax.jit(run, donate_argnums=(1,))
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel import compat
+
 
 def quantize_int8(g, block: int = 256):
     """g: any shape -> (int8 payload, fp32 scales). Per-block absmax."""
@@ -57,9 +59,9 @@ def compressed_psum_pods(grads, mesh, axis: str = "pod", block: int = 256):
         return jax.tree.map(one, tree)
 
     specs = jax.tree.map(lambda _: P(), grads)
-    return jax.shard_map(inner, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs, check_vma=False,
-                         axis_names={axis})(grads)
+    return compat.shard_map(inner, mesh=mesh, in_specs=(specs,),
+                            out_specs=specs, check_vma=False,
+                            axis_names={axis})(grads)
 
 
 def wire_bytes_saved(n_params: int, pods: int = 2,

@@ -108,11 +108,11 @@ def pairwise_lut(codebooks, q):
     return jnp.einsum("qd,tkd->qtk", q, codebooks)
 
 
-def pairwise_scores(lut, codes, pairs, K: int, norms):
-    """lut: (Q, M', K^2); codes: (N, M_all); norms ||xhat_pair||^2 -> (Q,N)."""
-    buckets = jnp.stack([codes[:, i] * K + codes[:, j] for i, j in pairs],
-                        axis=1)                           # (N, M')
-    ip = jnp.sum(jnp.take_along_axis(
-        lut[:, None, :, :], buckets[None, :, :, None], axis=3)[..., 0],
-        axis=2)                                           # (Q, N)
-    return 2.0 * ip - norms[None, :]
+def pairwise_scores(lut, codes, pairs, K: int, norms, backend: str = "auto"):
+    """lut: (Q, M', K^2); codes: (N, M_all); norms ||xhat_pair||^2 -> (Q,N).
+
+    Thin wrapper over `kernels/ops.pairwise_scores` (kept for its LUT-first
+    signature); bucket formation and the one-hot ADC matmul live there."""
+    from repro.kernels import ops
+    return ops.pairwise_scores(codes, lut, tuple(tuple(p) for p in pairs), K,
+                               norms=norms, backend=backend)

@@ -4,10 +4,15 @@
               -> pairwise-decoder shortlist S_pairs
               -> full QINCo2 neural re-ranking.
 
-Plus the distributed variant: database sharded over the `model` mesh axis,
-per-shard ADC top-k, all-gather + global top-k merge
-(`distributed_search`), expressed with shard_map — the billion-scale
-layout exercised by the dry-run.
+All candidate scoring goes through the `kernels/ops` dispatch facade
+(`ops.adc_scores` / `ops.pairwise_scores` — the one-hot MXU forms) rather
+than per-byte LUT gathers; the IVF-centroid inner-product term is folded in
+as an extra ADC codebook so the whole step-2 scan is ONE `adc_scores` call.
+
+The distributed variant shards the database over the `model` mesh axis and
+runs the *identical* per-shard kernel path (shared-codes `ops.adc_scores`)
+followed by `collectives.distributed_topk` — the billion-scale layout
+exercised by the dry-run.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ from repro.core import aq as aq_mod
 from repro.core import ivf as ivf_mod
 from repro.core import pairwise as pw_mod
 from repro.core import qinco
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -54,16 +60,22 @@ jax.tree_util.register_dataclass(
 
 def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
                 m_tilde: int = 2, n_pair_books: int = None,
-                encode_fn=None, verbose: bool = False) -> SearchIndex:
-    """Encode the database and fit the cascade decoders."""
+                encode_fn=None, encode_chunk: int = 4096,
+                backend: str = "auto", verbose: bool = False) -> SearchIndex:
+    """Encode the database and fit the cascade decoders.
+
+    Database encoding runs through the chunked `encode_dataset` driver, so
+    databases larger than a device batch reuse one compiled executable.
+    """
     from repro.core import encode as enc
     n_pair_books = n_pair_books or 2 * cfg.M
     k1, k2 = jax.random.split(key)
     ivf = ivf_mod.build_ivf(k1, xb, k_ivf, m_tilde=m_tilde, K=cfg.K)
     resid = ivf_mod.residual_to_centroid(ivf, xb, ivf.assignments)
-    encode_fn = encode_fn or (lambda v: enc.encode(
-        qinco_params, v, cfg, cfg.A_eval, cfg.B_eval)[0])
-    codes = encode_fn(resid)
+    encode_fn = encode_fn or (lambda v: enc.encode_dataset(
+        qinco_params, v, cfg, cfg.A_eval, cfg.B_eval, chunk=encode_chunk,
+        backend=backend)[0])
+    codes = jnp.asarray(encode_fn(resid))
 
     # unitary AQ decoder on the residual codes
     aq_books = aq_mod.fit_aq(codes, resid, cfg.M, cfg.K)
@@ -83,35 +95,48 @@ def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
                        qinco_params=qinco_params, cfg=cfg)
 
 
+def _adc_lut_with_centroids(index: SearchIndex, q):
+    """(Q, M+1, K') LUT: the unitary AQ books plus the IVF-centroid book.
+
+    Scoring a candidate n then reads M code columns plus its bucket id —
+    the centroid inner product becomes just another ADC codebook, so step 2
+    is a single `ops.adc_scores` call. K' = max(K, k_ivf); both LUT groups
+    are zero-padded on the alphabet axis (padded slots are never indexed).
+    """
+    lut = aq_mod.adc_lut(index.aq_books, q)               # (Q, M, K)
+    clut = aq_mod.adc_lut(index.ivf.centroids[None], q)   # (Q, 1, k_ivf)
+    K, k_ivf = lut.shape[2], clut.shape[2]
+    Kp = max(K, k_ivf)
+    lut = jnp.pad(lut, ((0, 0), (0, 0), (0, Kp - K)))
+    clut = jnp.pad(clut, ((0, 0), (0, 0), (0, Kp - k_ivf)))
+    return jnp.concatenate([lut, clut], axis=1)
+
+
 @partial(jax.jit, static_argnames=("n_probe", "n_short_aq", "n_short_pw",
-                                   "topk", "cfg"))
+                                   "topk", "cfg", "backend"))
 def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
-           n_short_pw: int = 16, topk: int = 1, cfg: QincoConfig = None):
+           n_short_pw: int = 16, topk: int = 1, cfg: QincoConfig = None,
+           backend: str = "auto"):
     """Full cascade. q: (Q, d) -> (ids (Q, topk), dists (Q, topk))."""
     cfg = cfg or index.cfg
     Q = q.shape[0]
     # 1. IVF probe ----------------------------------------------------------
     top_b, cand, cmask = ivf_mod.probe(index.ivf, q, n_probe)
-    # 2. ADC over candidates (unitary AQ LUT) --------------------------------
-    lut = aq_mod.adc_lut(index.aq_books, q)               # (Q, M, K)
-    clut = jnp.einsum("qd,kd->qk", q, index.ivf.centroids)
-    cand_codes = index.codes[cand]                        # (Q, C, M)
-    ip = jnp.sum(jnp.take_along_axis(
-        lut[:, None], cand_codes[..., None], axis=3)[..., 0], axis=2)
-    ip = ip + jnp.take_along_axis(
-        clut, index.ivf.assignments[cand], axis=1)
-    score = 2.0 * ip - index.aq_norms[cand]
+    # 2. ADC over candidates (unitary AQ LUT + centroid term) ----------------
+    lut_ext = _adc_lut_with_centroids(index, q)           # (Q, M+1, K')
+    codes_ext = jnp.concatenate(
+        [index.codes[cand],
+         index.ivf.assignments[cand][..., None]], axis=-1)  # (Q, C, M+1)
+    score = ops.adc_scores(codes_ext, lut_ext,
+                           norms=index.aq_norms[cand], backend=backend)
     score = jnp.where(cmask, score, -jnp.inf)
     s1, keep1 = jax.lax.top_k(score, n_short_aq)          # (Q, n_short_aq)
     ids1 = jnp.take_along_axis(cand, keep1, axis=1)
     # 3. pairwise decoder re-rank --------------------------------------------
     plut = pw_mod.pairwise_lut(index.pw.codebooks, q)     # (Q, M', K^2)
-    ext1 = index.ext_codes[ids1]                          # (Q, S1, M_all)
-    buckets = jnp.stack([ext1[..., i] * cfg.K + ext1[..., j]
-                         for i, j in index.pw.pairs], axis=-1)
-    ipp = jnp.sum(jnp.take_along_axis(
-        plut[:, None], buckets[..., None], axis=3)[..., 0], axis=2)
-    score2 = 2.0 * ipp - index.pw_norms[ids1]
+    score2 = ops.pairwise_scores(index.ext_codes[ids1], plut,
+                                 index.pw.pairs, cfg.K,
+                                 norms=index.pw_norms[ids1], backend=backend)
     score2 = jnp.where(s1 > -jnp.inf, score2, -jnp.inf)
     _, keep2 = jax.lax.top_k(score2, n_short_pw)
     ids2 = jnp.take_along_axis(ids1, keep2, axis=1)       # (Q, n_short_pw)
@@ -130,34 +155,30 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
 # ---------------------------------------------------------------------------
 
 
-def make_distributed_adc(mesh, model_axis: str = "model"):
+def make_distributed_adc(mesh, model_axis: str = "model",
+                         backend: str = "auto"):
     """Per-shard ADC top-k + all-gather merge, as a shard_map collective.
 
-    db_codes: (N, M) sharded over model; lut: (Q, M, K) replicated;
-    norms: (N,) sharded. Returns (Q, k) global ids + scores."""
+    db_codes: (N, M) sharded over `model_axis`; lut: (Q, M, K) replicated;
+    norms: (N,) sharded. Returns (Q, k) global ids + scores. Each shard
+    scans its slice with the SAME shared-codes `ops.adc_scores` path as
+    local search, then merges shortlists via `collectives.distributed_topk`
+    (wire cost 2*Q*k instead of Q*N)."""
     from jax.sharding import PartitionSpec as P
 
-    def local_topk(lut, codes, norms, base, k):
-        ip = jnp.sum(jnp.take_along_axis(
-            lut[:, None], codes[None, ..., None], axis=3)[..., 0], axis=2)
-        score = 2.0 * ip - norms[None]
-        s, i = jax.lax.top_k(score, k)                    # local top-k
-        gid = base + i
-        # gather all shards' candidates and reduce to a global top-k
-        s_all = jax.lax.all_gather(s, model_axis, axis=1, tiled=True)
-        g_all = jax.lax.all_gather(gid, model_axis, axis=1, tiled=True)
-        s2, i2 = jax.lax.top_k(s_all, k)
-        return jnp.take_along_axis(g_all, i2, axis=1), s2
+    from repro.parallel import compat
+    from repro.parallel.collectives import distributed_topk
 
     def fn(lut, db_codes, norms, k: int):
         nshard = mesh.shape[model_axis]
         nloc = db_codes.shape[0] // nshard
 
         def inner(lut, codes, norms):
-            idx = jax.lax.axis_index(model_axis)
-            return local_topk(lut, codes, norms, idx * nloc, k)
+            scores = ops.adc_scores(codes, lut, norms=norms, backend=backend)
+            base = jax.lax.axis_index(model_axis) * nloc
+            return distributed_topk(scores, base, k, model_axis)
 
-        return jax.shard_map(
+        return compat.shard_map(
             inner, mesh=mesh,
             in_specs=(P(), P(model_axis), P(model_axis)),
             out_specs=(P(), P()), check_vma=False,

@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Compute-kernel layer: Pallas kernels + reference ops + the dispatch
+facade.
+
+Layout (the dispatch contract — see `ops.py` for the full statement):
+
+  - ``ops.py``     public entry points. Every core/ hot path calls these;
+                   each op takes ``backend="pallas" | "xla" | "auto"`` and
+                   handles tile padding once so callers never think about
+                   tile-multiple shapes.
+  - ``ref.py``     pure-jnp reference implementations: the oracles the
+                   kernel tests compare against AND the ``backend="xla"``
+                   fallbacks used on CPU/GPU.
+  - ``l2_topk.py``        fused L2 distance + top-A pre-selection (Eq. 6).
+  - ``adc_onehot.py``     one-hot MXU ADC scan, shared-codes and per-query
+                          batched variants (Fig. 3; also serves the K^2
+                          pairwise alphabet via `ops.pairwise_scores`).
+  - ``resmlp.py``         chained residual-MLP blocks of f_theta.
+  - ``kv_dequant_attn.py`` decode attention over an RQ-compressed KV cache.
+
+Kernels compile natively on TPU and run with ``interpret=True`` elsewhere;
+``backend="auto"`` therefore lowers to the Pallas kernels on TPU and to the
+ref ops everywhere else.
+"""

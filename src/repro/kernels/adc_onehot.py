@@ -33,6 +33,53 @@ def _kernel(codes_ref, lut_ref, out_ref):
         preferred_element_type=jnp.float32)               # (TQ, TN)
 
 
+def _kernel_batched(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]                                # (TQ, TC, M) int32
+    lut = lut_ref[...].astype(jnp.float32)                # (TQ, M*K)
+    tq, tc, M = codes.shape
+    MK = lut.shape[1]
+    K = MK // M
+    codes_b = jnp.broadcast_to(codes[..., None], (tq, tc, M, K))
+    kio = jax.lax.broadcasted_iota(jnp.int32, (tq, tc, M, K), 3)
+    onehot = (codes_b == kio).astype(jnp.float32).reshape(tq, tc, MK)
+    out_ref[...] = jax.lax.dot_general(
+        lut, onehot, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # (TQ, TC)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_q", "tile_c", "interpret"))
+def adc_scores_batched(codes, lut, *, tile_q: int = 8, tile_c: int = 256,
+                       interpret: bool = True):
+    """Per-query candidate scan: codes (Q, C, M) int32; lut (Q, M, K) ->
+    (Q, C) scores. Same one-hot MXU form as `adc_scores`, batched over Q —
+    the shape of the IVF-shortlist steps of the search cascade, where each
+    query scores its own candidate set rather than the whole database."""
+    Q, C, M = codes.shape
+    K = lut.shape[2]
+    tile_q = min(tile_q, Q)
+    tile_c = min(tile_c, C)
+    pq, pc = (-Q) % tile_q, (-C) % tile_c
+    if pq:
+        lut = jnp.pad(lut, ((0, pq), (0, 0), (0, 0)))
+        codes = jnp.pad(codes, ((0, pq), (0, 0), (0, 0)))
+    if pc:
+        codes = jnp.pad(codes, ((0, 0), (0, pc), (0, 0)))
+    lut_flat = lut.reshape(Q + pq, M * K)
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=((Q + pq) // tile_q, (C + pc) // tile_c),
+        in_specs=[
+            pl.BlockSpec((tile_q, tile_c, M), lambda qi, ci: (qi, ci, 0)),
+            pl.BlockSpec((tile_q, M * K), lambda qi, ci: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_c), lambda qi, ci: (qi, ci)),
+        out_shape=jax.ShapeDtypeStruct((Q + pq, C + pc), jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), lut_flat)
+    return out[:Q, :C]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("tile_q", "tile_n", "interpret"))
 def adc_scores(codes, lut, *, tile_q: int = 64, tile_n: int = 256,

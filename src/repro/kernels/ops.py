@@ -1,39 +1,187 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Backend-selectable ops facade: the single dispatch point for every
+compute hot path in `core/` (the dispatch contract).
 
-On TPU the kernels compile natively; everywhere else they run in
-interpret=True mode (the kernel body executed op-by-op on CPU), which is
-how the test suite validates them against the `ref.py` oracles.
+Each op takes ``backend`` — one of:
+
+  - ``"pallas"``: the hand-written Pallas kernel. Compiles natively on TPU;
+    elsewhere it runs in ``interpret=True`` mode (the kernel body executed
+    op-by-op), which is how the test suite validates kernel bodies on CPU.
+  - ``"xla"``: the pure-jnp reference implementation from `kernels/ref.py`
+    (gather forms — the cheap path off-TPU). The fallback on CPU/GPU, and
+    the comparison baseline for the parity tests and backend benchmarks.
+  - ``"xla_onehot"``: same results as ``"xla"`` but with the ADC scan
+    expressed as the one-hot MXU einsum — for AOT dry-run lowering that
+    must see TPU-shaped HLO (see `launch/qinco_cells`), not for real
+    non-TPU execution.
+  - ``"auto"`` (default): ``"pallas"`` on TPU, ``"xla"`` everywhere else.
+
+Contract highlights:
+
+  - Input padding/tiling is handled HERE, once. Callers may pass any
+    N/Q/C — not just tile multiples; outputs are sliced back to caller
+    shapes and padded rows never leak into results.
+  - Scoring ops accept an optional ``norms`` operand and then return the
+    asymmetric-distance surrogate ``2 * <q, xhat> - ||xhat||^2`` directly,
+    so callers never re-implement score assembly.
+  - `adc_scores` dispatches on the codes rank: ``(N, M)`` scores every
+    query against a shared code matrix (database scan, one (Q, N) tile
+    grid); ``(Q, C, M)`` scores each query against its own candidate list
+    (IVF shortlists, batched one-hot matvec).
+  - `pairwise_scores` reuses the same one-hot ADC machinery on the
+    K^2-alphabet combined codes of the pairwise decoder (paper Eq. 8-9):
+    bucket indices i*K+j are formed here and fed to the ADC backend.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import adc_onehot as _adc
 from repro.kernels import kv_dequant_attn as _kva
 from repro.kernels import l2_topk as _l2
+from repro.kernels import ref as _ref
 from repro.kernels import resmlp as _rm
+
+BACKENDS = ("auto", "pallas", "xla", "xla_onehot")
+
+
+def resolve_backend(backend: str | None) -> str:
+    """'auto' -> 'pallas' on TPU, 'xla' elsewhere.
+
+    'xla_onehot' is the xla fallback with the ADC scan expressed as the
+    one-hot MXU einsum instead of a gather: same results, TPU-shaped HLO.
+    Meant for AOT dry-run lowering (launch/qinco_cells), NOT for real
+    non-TPU execution — the (N, M, K) one-hot intermediate is exactly what
+    the gather form avoids.
+    """
+    if backend in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of "
+                         f"{BACKENDS}")
+    return backend
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def l2_topk(r, cb, A: int, **kw):
-    kw.setdefault("interpret", _interpret())
-    return _l2.l2_topk(r, cb, A, **kw)
+# ---------------------------------------------------------------------------
+# Pre-selection: fused L2 distance + top-A (paper Eq. 6, L_s = 0)
+# ---------------------------------------------------------------------------
 
 
-def adc_scores(codes, lut, **kw):
-    kw.setdefault("interpret", _interpret())
-    return _adc.adc_scores(codes, lut, **kw)
+@partial(jax.jit, static_argnames=("A", "backend", "tile_n", "interpret"))
+def l2_topk(r, cb, A: int, *, backend: str = "auto", tile_n: int = 256,
+            interpret: bool | None = None):
+    """r: (N, d); cb: (K, d) -> (idx (N, A) int32, d2 (N, A)) ascending."""
+    A = min(A, cb.shape[0])
+    if resolve_backend(backend) != "pallas":
+        return _ref.l2_topk_ref(r, cb, A)
+    if interpret is None:
+        interpret = _interpret()
+    return _l2.l2_topk(r, cb, A, tile_n=tile_n, interpret=interpret)
 
 
-def resmlp_chain(v, w1, w2, **kw):
-    kw.setdefault("interpret", _interpret())
-    return _rm.resmlp_chain(v, w1, w2, **kw)
+# ---------------------------------------------------------------------------
+# ADC scoring (paper Fig. 3 step 2; the billion-scale scan hot loop)
+# ---------------------------------------------------------------------------
 
 
-def kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len, **kw):
+@partial(jax.jit, static_argnames=("backend", "tile_q", "tile_n",
+                                   "interpret"))
+def adc_scores(codes, lut, *, norms=None, backend: str = "auto",
+               tile_q: int = 64, tile_n: int = 256,
+               interpret: bool | None = None):
+    """Additive-decoder inner products (one-hot MXU form on the pallas
+    path, gather form on the xla fallback).
+
+    codes (N, M) int32, lut (Q, M, K)          -> (Q, N)  [shared codes]
+    codes (Q, C, M) int32, lut (Q, M, K)       -> (Q, C)  [per-query codes]
+
+    With ``norms`` (||xhat||^2, shaped (N,) or (Q, C) to match) the result
+    is the score ``2 * ip - norms``; otherwise the raw inner products.
+    """
+    be = resolve_backend(backend)
+    if interpret is None:
+        interpret = _interpret()
+    if codes.ndim == 2:
+        if be == "xla":
+            ip = _ref.adc_ref(codes, lut)
+        elif be == "xla_onehot":
+            ip = _ref.adc_onehot_ref(codes, lut)
+        else:
+            ip = _adc.adc_scores(codes, lut, tile_q=tile_q, tile_n=tile_n,
+                                 interpret=interpret)
+        if norms is not None:
+            return 2.0 * ip - norms[None, :]
+        return ip
+    if codes.ndim != 3:
+        raise ValueError(f"codes must be (N, M) or (Q, C, M); got "
+                         f"{codes.shape}")
+    if be in ("xla", "xla_onehot"):
+        ip = _ref.adc_batched_ref(codes, lut)
+    else:
+        ip = _adc.adc_scores_batched(codes, lut, tile_q=min(tile_q, 8),
+                                     tile_c=tile_n, interpret=interpret)
+    if norms is not None:
+        return 2.0 * ip - norms
+    return ip
+
+
+# ---------------------------------------------------------------------------
+# Pairwise-decoder scoring (paper §3.3 Eq. 8-9; Fig. 3 step 3)
+# ---------------------------------------------------------------------------
+
+
+def pairwise_buckets(codes, pairs, K: int):
+    """Combined codes I^{i,j} = I^i * K + I^j over the selected column
+    pairs. codes (..., M_all) int32 -> (..., M') int32 with alphabet K^2."""
+    return jnp.stack([codes[..., i] * K + codes[..., j] for i, j in pairs],
+                     axis=-1)
+
+
+@partial(jax.jit, static_argnames=("pairs", "K", "backend", "tile_q",
+                                   "tile_n", "interpret"))
+def pairwise_scores(codes, lut, pairs, K: int, *, norms=None,
+                    backend: str = "auto", tile_q: int = 64,
+                    tile_n: int = 256, interpret: bool | None = None):
+    """Pairwise additive-decoder scores, reusing the one-hot ADC matmul on
+    the K^2-alphabet bucket codes.
+
+    codes (..., M_all) int32 raw code columns (QINCo2 codes ++ I~);
+    lut (Q, M', K^2) per-pair inner-product LUTs; pairs: static tuple of
+    (i, j) column pairs. Shapes dispatch exactly like `adc_scores`.
+    """
+    buckets = pairwise_buckets(codes, pairs, K)
+    return adc_scores(buckets, lut, norms=norms, backend=backend,
+                      tile_q=tile_q, tile_n=tile_n, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Residual-MLP chain + compressed-KV attention (non-QINCo hot paths)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend", "tile_n", "interpret"))
+def resmlp_chain(v, w1, w2, *, backend: str = "auto", tile_n: int = 256,
+                 interpret: bool | None = None):
+    """v: (N, de); w1: (L, de, dh); w2: (L, dh, de) -> (N, de)."""
+    if resolve_backend(backend) != "pallas":
+        return _ref.resmlp_ref(v, w1, w2)
+    if interpret is None:
+        interpret = _interpret()
+    return _rm.resmlp_chain(v, w1, w2, tile_n=tile_n, interpret=interpret)
+
+
+def kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len, *,
+                    backend: str = "auto", **kw):
+    """Decode attention over an RQ-compressed KV cache."""
+    if resolve_backend(backend) != "pallas":
+        return _ref.kv_dequant_attn_ref(q, codes_k, codes_v, cb_k, cb_v,
+                                        valid_len)
     kw.setdefault("interpret", _interpret())
     return _kva.kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len,
                                 **kw)

@@ -1,4 +1,13 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+"""Pure-jnp reference ops: the correctness contracts for every Pallas
+kernel AND the `backend="xla"` implementations behind `kernels/ops.py`.
+
+Two flavors coexist on purpose:
+  - gather forms (`adc_ref`, `adc_batched_ref`): take_along_axis lookups —
+    the cheap path on CPU/GPU and the oracle the kernel tests check against;
+  - one-hot forms (`adc_onehot_ref`): the same math as an MXU matmul —
+    what `ops` lowers on the shared-codes hot path so that AOT dry-runs see
+    the TPU-shaped HLO even under the XLA backend.
+"""
 from __future__ import annotations
 
 import jax
@@ -17,6 +26,19 @@ def adc_ref(codes, lut):
     """codes: (N, M) int32; lut: (Q, M, K) -> scores (Q, N) = sum_m lut[q,m,codes[n,m]]."""
     return jnp.sum(jnp.take_along_axis(
         lut[:, None], codes[None, ..., None], axis=3)[..., 0], axis=2)
+
+
+def adc_onehot_ref(codes, lut):
+    """`adc_ref` as the one-hot einsum (the kernel's own matmul form)."""
+    K = lut.shape[2]
+    oh = jax.nn.one_hot(codes, K, dtype=jnp.float32)      # (N, M, K)
+    return jnp.einsum("qmk,nmk->qn", lut.astype(jnp.float32), oh)
+
+
+def adc_batched_ref(codes, lut):
+    """Per-query candidates: codes (Q, C, M) int32; lut (Q, M, K) -> (Q, C)."""
+    return jnp.sum(jnp.take_along_axis(
+        lut[:, None], codes[..., None], axis=3)[..., 0], axis=2)
 
 
 def resmlp_ref(v, w1, w2):

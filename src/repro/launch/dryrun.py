@@ -36,6 +36,7 @@ from repro.launch.steps import (make_decode_step, make_prefill_step,
                                 make_train_step, prefill_kv_specs)
 from repro.models import lm
 from repro.models.common import ShardCtx, abstract_params, is_spec
+from repro.parallel import compat
 from repro.optim import adamw
 from repro.optim.schedule import cosine_with_warmup
 from repro.parallel import sharding as shd
@@ -189,7 +190,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     ndev = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             jitted, args, info = build_cell(arch, shape, mesh,
                                             kv_quant=kv_quant)
             lowered = jitted.lower(*args)

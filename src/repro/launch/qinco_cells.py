@@ -18,11 +18,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.qinco2 import PRESETS, QincoConfig
 from repro.core import encode as enc
 from repro.core import qinco
+from repro.kernels import ops
 from repro.launch import hlo_analysis as ha
 from repro.launch.mesh import HW
 from repro.models.common import abstract_params
 from repro.optim import adamw
 from repro.optim.schedule import cosine_with_warmup
+from repro.parallel import compat
+from repro.parallel.collectives import distributed_topk
 
 
 def _qinco_flops(cfg: QincoConfig, n_vec: int, kind: str) -> float:
@@ -91,7 +94,7 @@ def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
 
                 pspec = jax.tree.map(lambda _: P(), params)
                 ospec = jax.tree.map(lambda _: P(), opt_state)
-                return jax.shard_map(
+                return compat.shard_map(
                     local, mesh=mesh,
                     in_specs=(pspec, ospec, P(all_axes)),
                     out_specs=(pspec, ospec, P()),
@@ -113,7 +116,7 @@ def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
                     return codes, jax.lax.pmean(mse, all_axes)
 
                 pspec = jax.tree.map(lambda _: P(), params)
-                return jax.shard_map(
+                return compat.shard_map(
                     local, mesh=mesh, in_specs=(pspec, P(all_axes)),
                     out_specs=(P(all_axes), P()),
                     check_vma=False)(params, x)
@@ -135,18 +138,14 @@ def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
 
             def search_step(params, lut, db_codes, norms):
                 def local(params, lut, codes, norms):
-                    oh = jax.nn.one_hot(codes, cfg.K, dtype=jnp.float32)
-                    scores = (2.0 * jnp.einsum("qmk,nmk->qn", lut, oh)
-                              - norms[None])
-                    s, i = jax.lax.top_k(scores, k)      # local top-k
+                    # identical per-shard kernel path as core/search:
+                    # shared-codes ops.adc_scores + shortlist merge
+                    # (xla_onehot: TPU-shaped one-hot-matmul HLO for the
+                    # roofline stats, even when lowered on placeholders)
+                    scores = ops.adc_scores(codes, lut, norms=norms,
+                                            backend="xla_onehot")
                     base = jax.lax.axis_index("model") * n_loc
-                    gid = base + i
-                    s_all = jax.lax.all_gather(s, "model", axis=1,
-                                               tiled=True)
-                    g_all = jax.lax.all_gather(gid, "model", axis=1,
-                                               tiled=True)
-                    s2, i2 = jax.lax.top_k(s_all, k)     # global merge
-                    merged = jnp.take_along_axis(g_all, i2, axis=1)
+                    merged, s2 = distributed_topk(scores, base, k, "model")
                     # neural re-rank: decode this shard's share of hits
                     local_hits = jnp.where(
                         (merged >= base) & (merged < base + n_loc),
@@ -157,7 +156,7 @@ def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
                         jnp.sum(recon), "model")
 
                 pspec = jax.tree.map(lambda _: P(), params)
-                return jax.shard_map(
+                return compat.shard_map(
                     local, mesh=mesh,
                     in_specs=(pspec, P(), P("model"), P("model")),
                     out_specs=(P(), P(), P()),

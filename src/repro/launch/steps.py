@@ -10,6 +10,7 @@ from repro.configs.base import ArchConfig
 from repro.models import lm
 from repro.models.common import ParamSpec, ShardCtx
 from repro.optim import adamw
+from repro.parallel import compat
 
 
 def make_train_step(arch: ArchConfig, ctx: ShardCtx, opt_cfg, mesh=None):
@@ -43,7 +44,7 @@ def make_train_step(arch: ArchConfig, ctx: ShardCtx, opt_cfg, mesh=None):
 
             pspec = jax.tree.map(lambda _: P(), params)
             bspec = jax.tree.map(lambda _: P("pod"), batch)
-            loss, grads = jax.shard_map(
+            loss, grads = compat.shard_map(
                 inner, mesh=mesh, in_specs=(pspec, bspec),
                 out_specs=(P(), pspec), check_vma=False,
                 axis_names={"pod"})(params, batch)

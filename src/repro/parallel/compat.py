@@ -1,0 +1,44 @@
+"""Version bridges for jax APIs that moved between 0.4.x and 0.5+.
+
+The repo targets the modern spellings (`jax.shard_map` with ``check_vma``
+and ``axis_names``, `jax.set_mesh`); the pinned jax (0.4.37) only ships
+`jax.experimental.shard_map.shard_map` (``check_rep`` / ``auto``) and uses
+the Mesh object itself as the ambient-mesh context manager. Every caller
+in this codebase goes through these two wrappers instead of touching the
+jax namespace directly.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
+              axis_names=None):
+    """`jax.shard_map` signature, runnable on both old and new jax.
+
+    ``axis_names`` (new API: the axes that go manual) maps onto the old
+    API's ``auto`` (the complementary set that stays under GSPMD).
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return sm(f, **kw)
+    from jax.experimental.shard_map import shard_map as esm
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return esm(f, **kw)
+
+
+def use_mesh(mesh):
+    """Context manager equivalent of `jax.set_mesh(mesh)` on any jax."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh  # 0.4.x: Mesh is itself the ambient-mesh context manager

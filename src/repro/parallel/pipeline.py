@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel import compat
+
 
 def pipelined_forward(layer_body: Callable, stage_params, x_microbatches,
                       *, mesh, axis: str = "pod"):
@@ -66,9 +68,9 @@ def pipelined_forward(layer_body: Callable, stage_params, x_microbatches,
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(stage_fn, mesh=mesh,
-                         in_specs=(pspec, P()), out_specs=P(),
-                         check_vma=False)(stage_params, x_microbatches)
+    return compat.shard_map(stage_fn, mesh=mesh,
+                            in_specs=(pspec, P()), out_specs=P(),
+                            check_vma=False)(stage_params, x_microbatches)
 
 
 def bubble_fraction(n_micro: int, n_stages: int) -> float:

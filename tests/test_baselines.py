@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import rq
 from repro.core.kmeans import kmeans, kmeans_cost, pairwise_sqdist

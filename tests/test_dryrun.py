@@ -9,6 +9,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow      # subprocess suite; skip via -m "not slow"
+
 ROOT = Path(__file__).resolve().parent.parent
 SRC = str(ROOT / "src")
 
@@ -87,11 +89,12 @@ def inner(t):
         deq = jax.vmap(lambda qq, ss: gc.dequantize_int8(qq, ss, x.shape))(qg, sg)
         out[k] = jnp.sum(deq, 0)
     return out
-with jax.set_mesh(mesh):
+from repro.parallel import compat
+with compat.use_mesh(mesh):
     specs = jax.tree.map(lambda _: P("pod"), per_pod)
-    out = jax.shard_map(inner, mesh=mesh, in_specs=(specs,),
-                        out_specs=jax.tree.map(lambda _: P(), per_pod),
-                        check_vma=False)(per_pod)
+    out = compat.shard_map(inner, mesh=mesh, in_specs=(specs,),
+                           out_specs=jax.tree.map(lambda _: P(), per_pod),
+                           check_vma=False)(per_pod)
 exact = jax.tree.map(lambda a: a * 3.0, g)   # 1x + 2x
 for k in g:
     err = np.abs(np.asarray(out[k]) - np.asarray(exact[k]))
@@ -120,7 +123,8 @@ rng = np.random.default_rng(0)
 W = jnp.asarray(rng.normal(size=(S, d, d)).astype(np.float32) * 0.3)
 x = jnp.asarray(rng.normal(size=(M, mb, d)).astype(np.float32))
 body = lambda w, x: jnp.tanh(x @ w)
-with jax.set_mesh(mesh):
+from repro.parallel import compat
+with compat.use_mesh(mesh):
     out = pipelined_forward(body, W, x, mesh=mesh)
 ref = x
 for s in range(S):

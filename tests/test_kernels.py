@@ -17,7 +17,7 @@ def test_l2_topk_matches_ref(N, d, K, A):
     rng = np.random.default_rng(N + d)
     r = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
     cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
-    idx, d2 = ops.l2_topk(r, cb, A, tile_n=64)
+    idx, d2 = ops.l2_topk(r, cb, A, backend="pallas", tile_n=64)
     ridx, rd2 = ref.l2_topk_ref(r, cb, A)
     np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2),
                                rtol=1e-4, atol=1e-4)
@@ -31,7 +31,7 @@ def test_l2_topk_dtypes(dtype):
     rng = np.random.default_rng(7)
     r = jnp.asarray(rng.normal(size=(50, 24)), dtype)
     cb = jnp.asarray(rng.normal(size=(32, 24)), dtype)
-    idx, d2 = ops.l2_topk(r, cb, 4)
+    idx, d2 = ops.l2_topk(r, cb, 4, backend="pallas")
     ridx, rd2 = ref.l2_topk_ref(r.astype(jnp.float32),
                                 cb.astype(jnp.float32), 4)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
@@ -46,7 +46,7 @@ def test_adc_matches_ref(Q, N, M, K):
     rng = np.random.default_rng(Q * N)
     codes = jnp.asarray(rng.integers(0, K, size=(N, M)).astype(np.int32))
     lut = jnp.asarray(rng.normal(size=(Q, M, K)).astype(np.float32))
-    s = ops.adc_scores(codes, lut, tile_q=16, tile_n=64)
+    s = ops.adc_scores(codes, lut, backend="pallas", tile_q=16, tile_n=64)
     np.testing.assert_allclose(np.asarray(s), np.asarray(ref.adc_ref(codes, lut)),
                                rtol=1e-5, atol=1e-4)
 
@@ -59,7 +59,7 @@ def test_resmlp_matches_ref(N, de, dh, L):
     v = jnp.asarray(rng.normal(size=(N, de)).astype(np.float32))
     w1 = jnp.asarray(rng.normal(size=(L, de, dh)).astype(np.float32) * 0.2)
     w2 = jnp.asarray(rng.normal(size=(L, dh, de)).astype(np.float32) * 0.2)
-    out = ops.resmlp_chain(v, w1, w2, tile_n=64)
+    out = ops.resmlp_chain(v, w1, w2, backend="pallas", tile_n=64)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.resmlp_ref(v, w1, w2)),
                                rtol=2e-4, atol=2e-4)
@@ -76,7 +76,7 @@ def test_kv_dequant_attn_matches_ref(B, T, KVH, G, D, Mq, Kq, valid):
     cv = jnp.asarray(rng.integers(0, Kq, size=(B, T, KVH, Mq)).astype(np.int32))
     cbk = jnp.asarray(rng.normal(size=(KVH, Mq, Kq, D)).astype(np.float32))
     cbv = jnp.asarray(rng.normal(size=(KVH, Mq, Kq, D)).astype(np.float32))
-    out = ops.kv_dequant_attn(q, ck, cv, cbk, cbv, valid, tile_t=32)
+    out = ops.kv_dequant_attn(q, ck, cv, cbk, cbv, valid, backend="pallas", tile_t=32)
     rout = ref.kv_dequant_attn_ref(q, ck, cv, cbk, cbv, valid)
     np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
                                rtol=1e-4, atol=1e-4)
@@ -94,7 +94,7 @@ def test_kv_dequant_attn_matches_model_dequant_path():
     cbk = jnp.asarray(rng.normal(size=(KVH, Mq, Kq, D)).astype(np.float32))
     cbv = jnp.asarray(rng.normal(size=(KVH, Mq, Kq, D)).astype(np.float32))
     valid = 50
-    out = ops.kv_dequant_attn(q, ck, cv, cbk, cbv, valid, tile_t=32)
+    out = ops.kv_dequant_attn(q, ck, cv, cbk, cbv, valid, backend="pallas", tile_t=32)
 
     chunk = 32
     qd = q * (D ** -0.5)  # decode_attention scales internally; use raw q

@@ -1,0 +1,212 @@
+"""The ops-dispatch contract (kernels/ops.py):
+
+- pallas(interpret) == xla backend for every scoring op, on shapes that are
+  NOT tile multiples (padding is the facade's job, not the caller's);
+- encode(..., backend="xla") is bit-identical to the pre-refactor greedy
+  Python-loop path (A=K, B=1, qinco1 mode) and to backend="pallas";
+- encode() traces ONE lax.scan over steps (trace size independent of M);
+- encode_dataset covers a dataset larger than its chunk with static shapes.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import qinco, training
+from repro.kernels import ops, ref
+
+from conftest import clustered
+
+
+# ---------------------------------------------------------------------------
+# backend parity on non-tile-multiple shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,d,K,A", [(37, 12, 16, 4), (130, 24, 32, 8)])
+def test_l2_topk_backend_parity(N, d, K, A):
+    rng = np.random.default_rng(N)
+    r = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    ip, dp = ops.l2_topk(r, cb, A, backend="pallas", tile_n=64)
+    ix, dx = ops.l2_topk(r, cb, A, backend="xla")
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dx),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(ip) == np.asarray(ix)).mean() > 0.98
+
+
+@pytest.mark.parametrize("Q,N,M,K", [(13, 37, 4, 16), (7, 129, 3, 32)])
+def test_adc_shared_backend_parity(Q, N, M, K):
+    rng = np.random.default_rng(Q * N)
+    codes = jnp.asarray(rng.integers(0, K, size=(N, M)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(Q, M, K)).astype(np.float32))
+    norms = jnp.asarray(rng.normal(size=(N,)).astype(np.float32) ** 2)
+    sp = ops.adc_scores(codes, lut, norms=norms, backend="pallas",
+                        tile_q=8, tile_n=32)
+    sx = ops.adc_scores(codes, lut, norms=norms, backend="xla")
+    sr = 2.0 * ref.adc_ref(codes, lut) - norms[None, :]
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("Q,C,M,K", [(5, 33, 4, 16), (11, 70, 3, 8)])
+def test_adc_batched_backend_parity(Q, C, M, K):
+    """Per-query candidate form: codes (Q, C, M) -> (Q, C)."""
+    rng = np.random.default_rng(Q + C)
+    codes = jnp.asarray(rng.integers(0, K, size=(Q, C, M)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(Q, M, K)).astype(np.float32))
+    sp = ops.adc_scores(codes, lut, backend="pallas", tile_q=4, tile_n=32)
+    sx = ops.adc_scores(codes, lut, backend="xla")
+    sr = ref.adc_batched_ref(codes, lut)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", ["shared", "batched"])
+def test_pairwise_scores_backend_parity(shape):
+    """K^2-alphabet pairwise codes reuse the one-hot ADC machinery."""
+    rng = np.random.default_rng(3)
+    K, M_all, Mp = 8, 5, 3
+    pairs = ((0, 2), (1, 4), (2, 3))
+    if shape == "shared":
+        codes = rng.integers(0, K, size=(41, M_all)).astype(np.int32)
+        norms = (rng.normal(size=(41,)) ** 2).astype(np.float32)
+    else:
+        codes = rng.integers(0, K, size=(6, 21, M_all)).astype(np.int32)
+        norms = (rng.normal(size=(6, 21)) ** 2).astype(np.float32)
+    codes = jnp.asarray(codes)
+    norms = jnp.asarray(norms)
+    lut = jnp.asarray(rng.normal(size=(6, Mp, K * K)).astype(np.float32))
+    sp = ops.pairwise_scores(codes, lut, pairs, K, norms=norms,
+                             backend="pallas", tile_q=4, tile_n=16)
+    sx = ops.pairwise_scores(codes, lut, pairs, K, norms=norms,
+                             backend="xla")
+    buckets = ops.pairwise_buckets(codes, pairs, K)
+    if shape == "shared":
+        sr = 2.0 * ref.adc_ref(buckets, lut) - norms[None, :]
+    else:
+        sr = 2.0 * ref.adc_batched_ref(buckets, lut) - norms
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# encode: pre-refactor equivalence + scan structure
+# ---------------------------------------------------------------------------
+
+
+def _encode_reference(params, x, cfg, A, B):
+    """The pre-refactor encoder: Python loop over m, beam grown from 1."""
+    A = min(A, cfg.K)
+    N, d = x.shape
+    xhat = jnp.zeros((N, 1, d), x.dtype)
+    err = jnp.zeros((N, 1), x.dtype)
+    codes = jnp.zeros((N, 1, cfg.M), jnp.int32)
+    for m in range(cfg.M):
+        fm = jax.tree.map(lambda a: a[m], params["f"])
+        cb = params["codebooks"][m]
+        pre_cb = params["pre_codebooks"][m]
+        Bcur = xhat.shape[1]
+        r = x[:, None, :] - xhat
+        if A >= cfg.K:
+            idx = jnp.broadcast_to(jnp.arange(cfg.K), (N, Bcur, cfg.K))
+        else:
+            r2 = jnp.sum(r * r, axis=-1, keepdims=True)
+            c2 = jnp.sum(pre_cb * pre_cb, axis=-1)
+            d2 = r2 - 2.0 * jnp.einsum("nbd,kd->nbk", r, pre_cb) + c2
+            _, idx = lax.top_k(-d2, A)
+        cand = cb[idx]
+        f_out = qinco.f_apply(fm, cand, xhat[..., None, :], cfg)
+        new_xhat = xhat[..., None, :] + f_out
+        new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
+        k = min(B, Bcur * A)
+        flat_err = new_err.reshape(N, Bcur * A)
+        top_err, flat_idx = lax.top_k(-flat_err, k)
+        b_idx = flat_idx // A
+        xhat = jnp.take_along_axis(
+            new_xhat.reshape(N, Bcur * A, d), flat_idx[..., None], axis=1)
+        sel_code = jnp.take_along_axis(
+            idx.reshape(N, Bcur * A), flat_idx, axis=1)
+        codes = jnp.take_along_axis(codes, b_idx[..., None], axis=1)
+        codes = codes.at[:, :, m].set(sel_code)
+        err = -top_err
+    best = jnp.argmin(err, axis=1)
+    return (jnp.take_along_axis(codes, best[:, None, None], 1)[:, 0],
+            jnp.take_along_axis(xhat, best[:, None, None], 1)[:, 0])
+
+
+@pytest.fixture(scope="module")
+def q1_setup():
+    rng = np.random.default_rng(0)
+    x = clustered(rng, 256, 8)
+    cfg = tiny(d=8, de=8, dh=16, M=3, K=8, qinco1_mode=True)
+    params = training.init_qinco2(jax.random.key(1), x, cfg)
+    return cfg, params, jnp.asarray(x)
+
+
+def test_encode_xla_bit_identical_to_greedy_reference(q1_setup):
+    """A=K, B=1 (QINCo1 greedy) must survive the scan refactor bitwise."""
+    cfg, params, x = q1_setup
+    c_ref, xh_ref = _encode_reference(params, x, cfg, cfg.K, 1)
+    c_new, xh_new, _ = enc.encode(params, x, cfg, cfg.K, 1, backend="xla")
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_new))
+    np.testing.assert_array_equal(np.asarray(xh_ref), np.asarray(xh_new))
+
+
+def test_encode_beam_matches_growing_beam_reference(q1_setup):
+    """A<K, B>1: static-width beam (inf-masked empty slots) == grown beam."""
+    cfg, params, x = q1_setup
+    c_ref, xh_ref = _encode_reference(params, x, cfg, 4, 6)
+    c_new, xh_new, _ = enc.encode(params, x, cfg, 4, 6, backend="xla")
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_new))
+    np.testing.assert_allclose(np.asarray(xh_ref), np.asarray(xh_new),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_encode_backend_parity(q1_setup):
+    cfg, params, x = q1_setup
+    c_x, xh_x, _ = enc.encode(params, x, cfg, 4, 4, backend="xla")
+    c_p, xh_p, _ = enc.encode(params, x, cfg, 4, 4, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(c_x), np.asarray(c_p))
+    np.testing.assert_allclose(np.asarray(xh_x), np.asarray(xh_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_encode_traces_one_scan_independent_of_M():
+    """The jaxpr must contain a scan and not grow with M (no unrolling)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    sizes = {}
+    for M in (2, 7):
+        cfg = tiny(d=8, de=8, dh=16, M=M, K=8)
+        params = training.init_qinco2(jax.random.key(0), np.asarray(x), cfg)
+        jaxpr = jax.make_jaxpr(
+            lambda p, xx: enc._encode_impl(p, xx, cfg, 4, 4))(params, x)
+        assert any(e.primitive.name == "scan" for e in jaxpr.eqns)
+        sizes[M] = len(jaxpr.eqns)
+    assert sizes[2] == sizes[7], sizes
+
+
+def test_encode_dataset_chunks_match_single_batch():
+    """A dataset larger than the chunk encodes identically, chunk by chunk
+    (static chunk shapes; padded tail rows never leak)."""
+    rng = np.random.default_rng(4)
+    x = clustered(rng, 300, 16)
+    cfg = tiny()
+    params = training.init_qinco2(jax.random.key(0), x, cfg)
+    codes_d, xhat_d, mse_d = enc.encode_dataset(params, x, cfg, 4, 4,
+                                                chunk=128)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, 4, 4)
+    np.testing.assert_array_equal(codes_d, np.asarray(codes))
+    np.testing.assert_allclose(xhat_d, np.asarray(xhat), rtol=1e-6,
+                               atol=1e-6)
+    assert np.isfinite(mse_d)

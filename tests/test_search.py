@@ -78,14 +78,22 @@ def test_cascade_recall(world):
 
 
 def test_bigger_shortlists_help(world):
+    """Bigger shortlists must not lose ground-truth candidates.
+
+    Final r@1 after the neural re-rank is NOT monotone in shortlist size
+    (a larger pool can surface a wrong neighbor whose *reconstruction* is
+    closer than the true NN's), so assert the deterministic property
+    instead: gt containment in the pre-rerank shortlist is monotone,
+    because top-k candidate sets of the same scores nest as k grows."""
     xb, xq, gt, cfg, params, idx = world
     r = {}
     for ns in (4, 32):
         ids, _ = search.search(idx, jnp.asarray(xq), n_probe=8,
                                n_short_aq=max(ns, 8), n_short_pw=ns,
-                               topk=1, cfg=cfg)
-        r[ns] = float((np.asarray(ids[:, 0]) == gt).mean())
+                               topk=ns, cfg=cfg)
+        r[ns] = float((np.asarray(ids) == gt[:, None]).any(1).mean())
     assert r[32] >= r[4] - 1e-9
+    assert r[32] > 0.2
 
 
 def test_adc_kernel_in_cascade(world):
@@ -93,7 +101,7 @@ def test_adc_kernel_in_cascade(world):
     xb, xq, gt, cfg, params, idx = world
     q = jnp.asarray(xq[:8])
     lut = aq.adc_lut(idx.aq_books, q)                     # (Q, M, K)
-    scores_k = ops.adc_scores(idx.codes, lut)
+    scores_k = ops.adc_scores(idx.codes, lut, backend="pallas")
     scores_ref = kref.adc_ref(idx.codes, lut)
     np.testing.assert_allclose(np.asarray(scores_k), np.asarray(scores_ref),
                                rtol=1e-4, atol=1e-3)
@@ -102,13 +110,14 @@ def test_adc_kernel_in_cascade(world):
 def test_distributed_adc_matches_local(world):
     """shard_map per-shard top-k + merge == single-device top-k."""
     xb, xq, gt, cfg, params, idx = world
+    from repro.parallel import compat
     mesh = jax.make_mesh((1,), ("model",))
     fn = search.make_distributed_adc(mesh, "model")
     q = jnp.asarray(xq[:4])
     lut = aq.adc_lut(idx.aq_books, q)
     norms = idx.aq_norms
     k = 8
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         gids, gscores = fn(lut, idx.codes, norms, k)
     # reference: full scores, global top-k
     full = 2.0 * kref.adc_ref(idx.codes, lut) - norms[None]

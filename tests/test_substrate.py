@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager, StragglerMonitor
 from repro.core import grad_compress as gc
@@ -132,7 +132,8 @@ def test_compressed_psum_single_pod():
     mesh = jax.make_mesh((1,), ("pod",))
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 8))
                           .astype(np.float32))}
-    with jax.set_mesh(mesh):
+    from repro.parallel import compat
+    with compat.use_mesh(mesh):
         out = gc.compressed_psum_pods(g, mesh)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),
                                rtol=2e-2, atol=2e-2)

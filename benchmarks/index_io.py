@@ -1,0 +1,88 @@
+"""Index persistence I/O: streaming build throughput, on-disk bytes per
+vector, and load-to-first-query latency of the `repro.index` store —
+the operational costs of the billion-scale layout (paper §3.3) that the
+in-memory benchmarks never see.
+
+Also reports the packed-vs-int32 HBM footprint of the code matrix and the
+ADC scan throughput on the packed representation (the bytes the store
+serves are the bytes the kernel consumes).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data, timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import aq, search, training
+from repro.index import IndexStore, StreamingIndexBuilder
+from repro.kernels import ops
+
+
+def run(*, dim=16, M=4, K=16, n_db=4096, shard_size=1024, seed=0, reps=3):
+    xt, xb, xq, _ = bench_data("bigann", dim=dim, n_db=n_db, n_query=32,
+                               seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, epochs=1, batch_size=512)
+    params = training.init_qinco2(jax.random.key(seed), xt, cfg)
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="bench_index_io_")
+    try:
+        # -- streaming build throughput -----------------------------------
+        builder = StreamingIndexBuilder(tmp, shard_size=shard_size,
+                                        encode_chunk=1024)
+        builder.prepare(jax.random.key(1), xb[:2048], params, cfg,
+                        n_total=n_db, k_ivf=32, m_tilde=2, n_pair_books=6)
+        t0 = time.perf_counter()
+        build_done = builder.build(xb)
+        dt = time.perf_counter() - t0
+        assert build_done
+        rows.append({"metric": "build_vecs_per_s", "value": n_db / dt})
+
+        # -- bytes/vector on disk -----------------------------------------
+        store = IndexStore(tmp)
+        rows.append({"metric": "disk_bytes_per_vec",
+                     "value": store.bytes_per_vector()})
+        rows.append({"metric": "code_bytes_per_vec", "value": float(M)})
+
+        # -- load-to-first-query ------------------------------------------
+        t0 = time.perf_counter()
+        idx = store.load()
+        ids, _ = search.search(idx, jnp.asarray(xq[:8]), n_probe=4,
+                               n_short_aq=32, n_short_pw=8, topk=1, cfg=cfg)
+        jax.block_until_ready(ids)
+        rows.append({"metric": "load_to_first_query_ms",
+                     "value": (time.perf_counter() - t0) * 1e3})
+
+        # -- packed vs int32 scan (HBM footprint + throughput) ------------
+        lut = jnp.asarray(aq.adc_lut(idx.aq_books, jnp.asarray(xq[:16])))
+        codes32 = idx.codes.astype(jnp.int32)
+        rows.append({"metric": "hbm_codes_mb_uint8",
+                     "value": idx.codes.nbytes / 2**20})
+        rows.append({"metric": "hbm_codes_mb_int32",
+                     "value": codes32.nbytes / 2**20})
+        for name, c in (("uint8", idx.codes), ("int32", codes32)):
+            t = timeit_us(lambda cc: ops.adc_scores(cc, lut, backend="xla"),
+                          c, reps=reps)
+            rows.append({"metric": f"adc_scan_us_per_kvec_{name}",
+                         "value": t / n_db * 1e3})
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def main(fast=True):
+    rows = run(n_db=2048 if fast else 16384,
+               shard_size=512 if fast else 4096, reps=2 if fast else 5)
+    print("metric,value")
+    for r in rows:
+        print(f"{r['metric']},{r['value']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -20,12 +20,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=[None, "t3", "t4", "s2", "f5", "f6", "roofline",
-                             "backends"])
+                             "backends", "index"])
     args = ap.parse_args()
     fast = not args.full
     sections = {
         "t3": _t3, "t4": _t4, "s2": _s2, "f5": _f5, "f6": _f6,
-        "roofline": _roof, "backends": _backends,
+        "roofline": _roof, "backends": _backends, "index": _index,
     }
     todo = [args.only] if args.only else list(sections)
     print("name,us_per_call,derived")
@@ -89,6 +89,16 @@ def _backends(fast):
     xla_enc = [r for r in rows
                if r["op"].startswith("encode") and r["backend"] == "xla"]
     return f"encode_xla={xla_enc[0]['us_per_vec']:.1f}us/vec"
+
+
+def _index(fast):
+    from benchmarks import index_io
+    print("\n== index store: build / bytes / load-to-first-query ==")
+    rows = index_io.main(fast=fast)
+    d = {r["metric"]: r["value"] for r in rows}
+    return (f"build_vps={d['build_vecs_per_s']:.0f};"
+            f"bytes_per_vec={d['disk_bytes_per_vec']:.1f};"
+            f"load_ms={d['load_to_first_query_ms']:.0f}")
 
 
 def _roof(fast):

@@ -1,10 +1,18 @@
-"""Billion-scale search layout at demonstration scale: the database is
-sharded across devices (here: across chunks on one device), each shard runs
-ADC with the Pallas one-hot kernel, shortlists are merged, and the QINCo2
-decoder re-ranks — exactly the Fig. 3 pipeline the 512-chip dry-run lowers.
+"""Billion-scale index lifecycle at demonstration scale, end-to-end
+through the persistent `repro.index` subsystem:
+
+    build (streaming, killed mid-dataset) -> resume -> save
+      -> load (mmap-backed) -> batched query serving
+
+Codes are packed uint8 on disk AND in HBM (4x smaller than int32); the
+per-shard ADC scan consumes the packed bytes directly through the Pallas
+one-hot kernel path (`kernels/ops`), and an interrupted build restarts
+from its shard cursor — the Fig. 3 pipeline the 512-chip dry-run lowers,
+made durable.
 
     PYTHONPATH=src python examples/billion_scale_search.py
 """
+import tempfile
 import time
 
 import jax
@@ -12,11 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.qinco2 import tiny
-from repro.core import aq, search, training
+from repro.core import search, training
 from repro.data.synthetic import make_splits
-from repro.kernels import ops
+from repro.index import IndexStore, StreamingIndexBuilder
+from repro.launch.serve_search import SearchServer, synthetic_stream
 
-# data
+# data ------------------------------------------------------------------------
 xt, xb, _, _ = make_splits("bigann", n_train=4000, n_db=16000, n_query=32,
                            seed=1)
 dim = 24
@@ -30,42 +39,51 @@ gt = np.argmin(((xq[:, None] - xb[None]) ** 2).sum(-1), axis=1)
 
 cfg = tiny(d=dim, M=4, K=16, de=32, dh=48, L=2, epochs=2, batch_size=512)
 params, _ = training.train(jax.random.key(0), xt, cfg, verbose=False)
-idx = search.build_index(jax.random.key(1), jnp.asarray(xb), params, cfg,
-                         k_ivf=64, m_tilde=2, n_pair_books=8)
 
-# ---- sharded ADC scan with the Pallas kernel (interpret on CPU) -------------
-n_shards = 4
-shard_len = len(xb) // n_shards
-q = jnp.asarray(xq)
-lut = aq.adc_lut(idx.aq_books, q)                  # (Q, M, K)
-cent_ip = q @ idx.ivf.centroids.T                  # (Q, K_ivf)
-k = 32
+# build -> kill -> resume -----------------------------------------------------
+store_dir = tempfile.mkdtemp(prefix="qinco2_index_")
+
+
+def make_builder():
+    b = StreamingIndexBuilder(store_dir, shard_size=4000, encode_chunk=2048,
+                              verbose=True)
+    b.prepare(jax.random.key(1), xb[:6000], params, cfg, n_total=len(xb),
+              k_ivf=64, m_tilde=2, n_pair_books=8)
+    return b
+
+
 t0 = time.time()
-parts = []
-for s in range(n_shards):                          # one device per shard IRL
-    sl = slice(s * shard_len, (s + 1) * shard_len)
-    codes_s = idx.codes[sl]
-    norms_s = idx.aq_norms[sl]
-    # full ADC score: residual-code LUT sum + the IVF-centroid term
-    ip = ops.adc_scores(codes_s, lut) + cent_ip[:, idx.ivf.assignments[sl]]
-    scores = 2.0 * ip - norms_s[None]
-    sc, ii = jax.lax.top_k(scores, k)              # local top-k
-    parts.append((sc, ii + s * shard_len))
-sc = jnp.concatenate([p[0] for p in parts], axis=1)   # merge (all-gather IRL)
-ii = jnp.concatenate([p[1] for p in parts], axis=1)
-sc2, order = jax.lax.top_k(sc, k)
-merged = jnp.take_along_axis(ii, order, axis=1)
-print(f"sharded ADC + merge: {time.time()-t0:.2f}s over {n_shards} shards")
+done = make_builder().build(xb, max_shards=2)       # "power loss" mid-build
+assert not done, "expected the interrupted run to stop before completion"
+print(f"-- interrupted after 2/{IndexStore(store_dir).manifest['n_shards']} "
+      f"shards; restarting from the cursor --")
+resumed_done = make_builder().build(xb)             # fresh builder resumes
+assert resumed_done
+print(f"streaming build (incl. interruption): {time.time() - t0:.2f}s")
 
-# ---- neural re-rank of the merged shortlist --------------------------------
-from repro.core import qinco
-flat = merged.reshape(-1)
-recon = (qinco.decode(params, idx.codes[flat], cfg)
-         + idx.ivf.centroids[idx.ivf.assignments[flat]])
-recon = recon.reshape(len(xq), k, dim)
-d2 = jnp.sum((q[:, None] - recon) ** 2, -1)
-best = np.asarray(jnp.take_along_axis(merged, jnp.argmin(d2, 1)[:, None], 1))
-r1 = float((best[:, 0] == gt).mean())
-print(f"distributed-layout R@1: {r1:.3f}")
+# load (mmap) -----------------------------------------------------------------
+t0 = time.time()
+store = IndexStore(store_dir)
+idx = store.load()
+print(f"loaded {store.manifest['n_total']} vectors "
+      f"({store.bytes_per_vector():.1f} B/vec on disk, codes "
+      f"{idx.codes.dtype}) in {time.time() - t0:.2f}s")
+assert idx.codes.dtype == jnp.uint8                 # packed end-to-end
+
+# recall check against brute force -------------------------------------------
+ids, _ = search.search(idx, jnp.asarray(xq), n_probe=8, n_short_aq=64,
+                       n_short_pw=16, topk=1, cfg=cfg)
+r1 = float((np.asarray(ids[:, 0]) == gt).mean())
+print(f"store-loaded cascade R@1: {r1:.3f}")
 assert r1 > 0.3
+
+# batched query serving -------------------------------------------------------
+server = SearchServer(idx, micro_batch=16, n_probe=8, n_short_aq=64,
+                      n_short_pw=16, topk=10)
+q_stream, arrivals = synthetic_stream(idx, n_queries=128, rate_qps=1000.0)
+stats = server.serve_stream(q_stream, arrivals, max_wait_s=2e-3)
+print(f"serving: {stats.row()}")
+
+import shutil
+shutil.rmtree(store_dir, ignore_errors=True)
 print("billion_scale_search OK")

@@ -11,6 +11,38 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
     || echo "[ci] dev deps unavailable (offline?); continuing without"
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# index-store smoke: save -> load -> search round trip in a tmpdir (fast;
+# guards the on-disk format independently of the pytest suite)
+python - <<'PY'
+import tempfile, shutil
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import IndexStore
+
+rng = np.random.default_rng(0)
+xb = rng.normal(size=(600, 16)).astype(np.float32)
+cfg = tiny(epochs=1)
+params = training.init_qinco2(jax.random.key(0), xb[:256], cfg)
+idx = search.build_index(jax.random.key(1), jnp.asarray(xb), params, cfg,
+                         k_ivf=8, m_tilde=2, n_pair_books=4)
+d = tempfile.mkdtemp(prefix="ci_index_smoke_")
+try:
+    IndexStore.save(d, idx, shard_size=256)
+    loaded = IndexStore(d).load()
+    assert loaded.codes.dtype == jnp.uint8
+    q = jnp.asarray(xb[:5] + 0.01)
+    kw = dict(n_probe=4, n_short_aq=16, n_short_pw=8, topk=3, cfg=cfg)
+    i1, s1 = search.search(idx, q, **kw)
+    i2, s2 = search.search(loaded, q, **kw)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    print("[ci] index store smoke OK (save -> load -> search bit-identical)")
+finally:
+    shutil.rmtree(d, ignore_errors=True)
+PY
+
 if [ "${QUICK:-0}" = "1" ]; then
     exec python -m pytest -q -m "not slow" "$@"
 fi

@@ -79,24 +79,34 @@ class CheckpointManager:
         """Load leaves and place onto `shardings` (resharding as needed).
 
         target_tree provides the pytree structure (values ignored)."""
-        src = self.dir / f"step_{step:09d}"
-        manifest = json.loads((src / "MANIFEST.json").read_text())
+        loaded, extra = self.restore_flat(step)
         leaves, treedef = _flatten(target_tree)
-        assert manifest["n_leaves"] == len(leaves), (
-            f"checkpoint has {manifest['n_leaves']} leaves, "
+        assert len(loaded) == len(leaves), (
+            f"checkpoint has {len(loaded)} leaves, "
             f"target expects {len(leaves)} — structure mismatch")
-        import jax.numpy as jnp
-        loaded = []
-        for i in range(len(leaves)):
-            raw = np.load(src / f"leaf_{i:05d}.npy")
-            meta = manifest["leaves"][i]
-            dt = jnp.dtype(meta["dtype"])
-            loaded.append(raw.view(dt).reshape(meta["shape"]))
         tree = jax.tree.unflatten(treedef, loaded)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda a, s: jax.device_put(a, s), tree, shardings)
-        return tree, manifest["extra"]
+        return tree, extra
+
+    def restore_flat(self, step: int):
+        """Load a checkpoint's leaves as a flat list — no target tree.
+
+        The single deserialization path (`restore` builds on it); also for
+        consumers that persist their own structure description (e.g.
+        `index/store.py` keeps a JSON treespec in the store manifest) and
+        therefore can unflatten without a live template pytree.
+        Returns (leaves in save order, extra dict)."""
+        src = self.dir / f"step_{step:09d}"
+        manifest = json.loads((src / "MANIFEST.json").read_text())
+        import jax.numpy as jnp
+        leaves = []
+        for i, meta in enumerate(manifest["leaves"]):
+            raw = np.load(src / f"leaf_{i:05d}.npy")
+            leaves.append(raw.view(jnp.dtype(meta["dtype"])).reshape(
+                meta["shape"]))
+        return leaves, manifest["extra"]
 
     def restore_latest(self, target_tree: Any, shardings: Any = None):
         step = self.latest_step()

@@ -155,6 +155,11 @@ def encode_dataset(params, x, cfg: QincoConfig, A: Optional[int] = None,
     ``data_axis`` (params replicated — the paper's DDP database-encode
     layout). Results land in host memory (``out_codes`` may preallocate).
 
+    Host<->device staging is double-buffered: chunk i+1 is device_put and
+    its encode dispatched (JAX dispatch is async) BEFORE chunk i's results
+    are fetched back to host, so the host readback of one chunk overlaps
+    the device compute of the next — the billion-vector pipeline shape.
+
     Returns (codes (N, M) int32 np.ndarray, xhat (N, d) np.ndarray, mse).
     """
     A = A or cfg.A_eval
@@ -172,15 +177,25 @@ def encode_dataset(params, x, cfg: QincoConfig, A: Optional[int] = None,
     codes = out_codes if out_codes is not None else np.empty((N, cfg.M),
                                                              np.int32)
     xhat = np.empty((N, d), np.float32)
+
+    def drain(pending):
+        plo, phi, c, xh = pending
+        codes[plo:phi] = np.asarray(c)[:phi - plo]        # blocks here
+        xhat[plo:phi] = np.asarray(xh)[:phi - plo]
+
+    pending = None                                        # one-deep pipeline
     for lo in range(0, N, chunk):
         hi = min(lo + chunk, N)
         xc = x[lo:hi]
         if hi - lo < chunk:                               # static tail shape
             xc = np.concatenate(
                 [xc, np.zeros((chunk - (hi - lo), d), x.dtype)])
-        c, xh, _ = fn(params, jnp.asarray(xc))
-        codes[lo:hi] = np.asarray(c)[:hi - lo]
-        xhat[lo:hi] = np.asarray(xh)[:hi - lo]
+        c, xh, _ = fn(params, jax.device_put(xc))         # async dispatch
+        if pending is not None:
+            drain(pending)
+        pending = (lo, hi, c, xh)
+    if pending is not None:
+        drain(pending)
     mse = float(np.mean(np.sum((x - xhat) ** 2, axis=-1)))
     return codes, xhat, mse
 

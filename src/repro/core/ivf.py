@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rq as rq_mod
+from repro.core.kmeans import assign as kmeans_assign
 from repro.core.kmeans import kmeans, pairwise_sqdist
 
 
@@ -38,21 +39,109 @@ jax.tree_util.register_dataclass(
     meta_fields=())
 
 
+def bucket_cap(n: int, k_ivf: int, cap_factor: float = 2.0) -> int:
+    """Rows per padded bucket. cap_factor >= 1 guarantees total capacity
+    k_ivf * cap >= n, so spilling always finds a non-full bucket."""
+    return int(np.ceil(n / k_ivf * cap_factor))
+
+
+def assign_with_spill(xb, centroids, assign, cap: int, fill=None):
+    """Enforce the bucket capacity WITHOUT dropping vectors: a vector whose
+    nearest centroid's bucket is full spills to the nearest non-full one
+    (and its assignment is updated so residuals/probing stay consistent).
+
+    Rows are processed in index order, which makes the result deterministic
+    and streaming-friendly: pass the running ``fill`` counts to continue
+    across shards (`index/builder.py`). Returns (assignments, fill), both
+    np arrays.
+
+    Fast path: when no bucket can overflow within this batch (the common
+    case at cap_factor >= 2 — one vectorized bincount check), all rows are
+    accepted in bulk. Otherwise only rows targeting at-risk buckets are
+    walked one by one (runs of safe rows advance in bulk), so billion-
+    scale builds never pay a Python loop per vector — even when one hot
+    bucket stays full for the rest of the stream. Both paths are exactly
+    equivalent to the naive sequential loop.
+    """
+    xb = np.asarray(xb)
+    centroids = np.asarray(centroids)
+    assign = np.asarray(assign).astype(np.int32).copy()
+    k_ivf = centroids.shape[0]
+    fill = np.zeros(k_ivf, np.int64) if fill is None else np.asarray(
+        fill, np.int64).copy()
+    incoming = np.bincount(assign, minlength=k_ivf)
+    if np.all(fill + incoming <= cap):             # nothing can overflow
+        return assign, fill + incoming
+    # Slow path — but only rows targeting "at-risk" buckets are walked one
+    # by one. S upper-bounds the spilled-row count by fixpoint (each spill
+    # could land in any bucket); a bucket with fill + incoming + S <= cap
+    # then can NEVER be full when one of its own rows arrives, so those
+    # rows are accepted under any interleaving and are advanced in bulk
+    # (segment bincounts keep the sequential walk's per-bucket fills
+    # exact, including safe buckets as potential spill targets).
+    S, prev = 0, -1
+    while S != prev and S < len(assign):
+        prev = S
+        S = int(np.sum(np.maximum(fill + incoming + S - cap, 0)))
+    risky = fill + incoming + S > cap              # (k_ivf,) bool
+    seg_start = 0
+    for i in np.flatnonzero(risky[assign]):
+        if i > seg_start:
+            fill += np.bincount(assign[seg_start:i], minlength=k_ivf)
+        b = assign[i]
+        if fill[b] >= cap:
+            d2 = np.sum((xb[i] - centroids) ** 2, axis=-1)
+            for nb in np.argsort(d2, kind="stable"):
+                if fill[nb] < cap:
+                    b = int(nb)
+                    break
+            else:
+                raise ValueError(
+                    f"all {k_ivf} buckets full at cap={cap} (n > k_ivf*cap)")
+            assign[i] = b
+        fill[b] += 1
+        seg_start = i + 1
+    if seg_start < len(assign):
+        fill += np.bincount(assign[seg_start:], minlength=k_ivf)
+    return assign, fill
+
+
+def buckets_from_assignments(assign, k_ivf: int, cap: int):
+    """Rebuild the padded dense bucket table from final assignments.
+
+    Vector ids appear within each bucket in increasing order — the same
+    order the build-time fill loop produces — so a store that persists
+    only assignments reconstructs `buckets`/`bucket_mask` bit-identically
+    (`index/store.py` relies on this). Assignments must already respect
+    ``cap`` (i.e. post-spill). Vectorized: no per-row Python loop.
+    """
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=k_ivf)
+    if counts.max(initial=0) > cap:
+        raise ValueError(f"bucket count {counts.max()} exceeds cap {cap}; "
+                         f"assignments were not capacity-enforced")
+    order = np.argsort(assign, kind="stable")      # bucket-major, id-ascending
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(len(assign)) - np.repeat(starts, counts)
+    buckets = np.zeros((k_ivf, cap), np.int32)
+    mask = np.zeros((k_ivf, cap), bool)
+    buckets[assign[order], pos] = order
+    mask[assign[order], pos] = True
+    return buckets, mask
+
+
 def build_ivf(key, xb, k_ivf: int, *, kmeans_iters: int = 10,
               cap_factor: float = 2.0, m_tilde: int = 0, K: int = 256):
-    """Train coarse centroids on xb and bucket the database."""
+    """Train coarse centroids on xb and bucket the database.
+
+    Bucket overflow spills to the nearest non-full centroid instead of
+    silently dropping the vector (which made it unsearchable).
+    """
     n = xb.shape[0]
     cent, assign = kmeans(key, xb, k_ivf, kmeans_iters)
-    cap = int(np.ceil(n / k_ivf * cap_factor))
-    assign_np = np.asarray(assign)
-    buckets = np.full((k_ivf, cap), 0, np.int32)
-    mask = np.zeros((k_ivf, cap), bool)
-    fill = np.zeros(k_ivf, np.int32)
-    for i, b in enumerate(assign_np):
-        if fill[b] < cap:
-            buckets[b, fill[b]] = i
-            mask[b, fill[b]] = True
-            fill[b] += 1
+    cap = bucket_cap(n, k_ivf, cap_factor)
+    assign_np, _ = assign_with_spill(xb, cent, assign, cap)
+    buckets, mask = buckets_from_assignments(assign_np, k_ivf, cap)
     idx = IVFIndex(centroids=cent, buckets=jnp.asarray(buckets),
                    bucket_mask=jnp.asarray(mask),
                    assignments=jnp.asarray(assign_np))
@@ -77,3 +166,11 @@ def probe(index: IVFIndex, q, n_probe: int):
 
 def residual_to_centroid(index: IVFIndex, x, assignment):
     return x - index.centroids[assignment]
+
+
+def assign_to_centroids(centroids, x):
+    """Nearest-centroid assignment (N,) int32 — the streaming builder's
+    per-shard coarse quantization. Thin host-side wrapper over
+    `kmeans.assign` so assignment semantics live in one place."""
+    return np.asarray(kmeans_assign(jnp.asarray(x),
+                                    jnp.asarray(centroids))).astype(np.int32)

@@ -34,10 +34,16 @@ jax.tree_util.register_dataclass(
     PairwiseDecoder, data_fields=("codebooks",), meta_fields=("pairs", "K"))
 
 
+def _bucket_ids(codes_i, codes_j, K: int):
+    """I^i * K + I^j, widened first: packed uint8 columns would wrap at
+    256 while the combined alphabet needs up to 16 bits."""
+    return codes_i.astype(jnp.int32) * K + codes_j.astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("K",))
 def _bucket_fit(codes_i, codes_j, r, K: int, ridge: float = 1.0):
     """Per-bucket ridge means + achieved SSE reduction for one pair."""
-    bucket = codes_i * K + codes_j                       # (N,)
+    bucket = _bucket_ids(codes_i, codes_j, K)            # (N,)
     d = r.shape[1]
     sums = jnp.zeros((K * K, d), jnp.float32).at[bucket].add(r)
     cnts = jnp.zeros((K * K,), jnp.float32).at[bucket].add(1.0)
@@ -71,7 +77,7 @@ def fit_pairwise(codes, x, K: int, n_books: int, *,
         gain, (i, j), cb = best
         sel_pairs.append((i, j))
         books.append(cb)
-        r = r - cb[codes[:, i] * K + codes[:, j]]
+        r = r - cb[_bucket_ids(codes[:, i], codes[:, j], K)]
         if verbose:
             mse = float(jnp.mean(jnp.sum(r * r, -1)))
             print(f"[pairwise] step {t}: pair=({i},{j}) mse={mse:.6g}")
@@ -91,7 +97,7 @@ def _fixed_fit(codes, x, K, pairs, ridge):
     for (i, j) in pairs:
         cb, _ = _bucket_fit(codes[:, i], codes[:, j], r, K, ridge)
         books.append(cb)
-        r = r - cb[codes[:, i] * K + codes[:, j]]
+        r = r - cb[_bucket_ids(codes[:, i], codes[:, j], K)]
     return PairwiseDecoder(list(pairs), jnp.stack(books), K)
 
 
@@ -99,7 +105,7 @@ def pairwise_decode(codebooks, codes, pairs, K: int):
     """codebooks: (M', K^2, d); codes: (N, M_all) -> (N, d)."""
     out = jnp.zeros((codes.shape[0], codebooks.shape[-1]), jnp.float32)
     for t, (i, j) in enumerate(pairs):
-        out = out + codebooks[t, codes[:, i] * K + codes[:, j]]
+        out = out + codebooks[t, _bucket_ids(codes[:, i], codes[:, j], K)]
     return out
 
 

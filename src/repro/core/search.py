@@ -34,9 +34,17 @@ from repro.kernels import ops
 
 @dataclasses.dataclass
 class SearchIndex:
-    """Everything needed at query time (built by `build_index`)."""
+    """Everything needed at query time (built by `build_index`).
+
+    ``codes`` is packed uint8 whenever the alphabet fits a byte (K <= 256
+    — every paper setting): the packed bytes are the HBM-resident form the
+    ADC kernels scan directly, 4x smaller than the historical int32. The
+    scoring results are bit-identical either way (`kernels/ops` widens
+    in-kernel). `repro.index.store.IndexStore` persists this layout to
+    disk and round-trips it exactly.
+    """
     ivf: ivf_mod.IVFIndex
-    codes: jnp.ndarray                 # (N, M) QINCo2 codes (of residuals)
+    codes: jnp.ndarray                 # (N, M) uint8|int32 QINCo2 codes
     aq_books: jnp.ndarray              # (M, K, d) unitary look-up decoder
     aq_norms: jnp.ndarray              # (N,) ||xhat_aq||^2 (w/ centroid)
     pw: pw_mod.PairwiseDecoder         # pairwise decoder over [codes, I~]
@@ -46,9 +54,19 @@ class SearchIndex:
 
     @property
     def ext_codes(self):
-        """codes ++ centroid RQ codes I~ per vector: (N, M + M~)."""
+        """codes ++ centroid RQ codes I~ per vector: (N, M + M~) int32.
+
+        Materializes the FULL database widened to int32 — a fit-time /
+        offline-evaluation utility. The serving path (`search` step 3)
+        instead gathers the shortlist rows first and widens only those,
+        so the packed uint8 codes stay the HBM-resident form.
+        M~ = 0 (no centroid RQ codes) degrades to the plain codes.
+        """
+        codes = self.codes.astype(jnp.int32)
+        if self.ivf.centroid_codes is None:
+            return codes
         tilde = self.ivf.centroid_codes[self.ivf.assignments]
-        return jnp.concatenate([self.codes, tilde], axis=1)
+        return jnp.concatenate([codes, tilde], axis=1)
 
 
 jax.tree_util.register_dataclass(
@@ -61,13 +79,16 @@ jax.tree_util.register_dataclass(
 def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
                 m_tilde: int = 2, n_pair_books: int = None,
                 encode_fn=None, encode_chunk: int = 4096,
-                backend: str = "auto", verbose: bool = False) -> SearchIndex:
+                backend: str = "auto", pack: bool = True,
+                verbose: bool = False) -> SearchIndex:
     """Encode the database and fit the cascade decoders.
 
     Database encoding runs through the chunked `encode_dataset` driver, so
     databases larger than a device batch reuse one compiled executable.
+    With ``pack`` (default) codes are stored packed uint8 when K <= 256.
     """
     from repro.core import encode as enc
+    from repro.index import codes as pc
     n_pair_books = n_pair_books or 2 * cfg.M
     k1, k2 = jax.random.split(key)
     ivf = ivf_mod.build_ivf(k1, xb, k_ivf, m_tilde=m_tilde, K=cfg.K)
@@ -76,6 +97,8 @@ def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
         qinco_params, v, cfg, cfg.A_eval, cfg.B_eval, chunk=encode_chunk,
         backend=backend)[0])
     codes = jnp.asarray(encode_fn(resid))
+    if pack and pc.packable(cfg.K):
+        codes = pc.pack_codes(codes, cfg.K)
 
     # unitary AQ decoder on the residual codes
     aq_books = aq_mod.fit_aq(codes, resid, cfg.M, cfg.K)
@@ -83,9 +106,11 @@ def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
         ivf.assignments]
     aq_norms = jnp.sum(recon_aq * recon_aq, axis=-1)
 
-    # pairwise decoder over [QINCo2 codes ++ centroid RQ codes]
-    tilde = ivf.centroid_codes[ivf.assignments]
-    ext = jnp.concatenate([codes, tilde], axis=1)
+    # pairwise decoder over [QINCo2 codes ++ centroid RQ codes (if any)]
+    ext = codes.astype(jnp.int32)
+    if ivf.centroid_codes is not None:
+        ext = jnp.concatenate([ext, ivf.centroid_codes[ivf.assignments]],
+                              axis=1)
     pw = pw_mod.fit_pairwise(ext, xb, cfg.K, n_pair_books, verbose=verbose)
     recon_pw = pw.decode(ext)
     pw_norms = jnp.sum(recon_pw * recon_pw, axis=-1)
@@ -125,7 +150,7 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
     # 2. ADC over candidates (unitary AQ LUT + centroid term) ----------------
     lut_ext = _adc_lut_with_centroids(index, q)           # (Q, M+1, K')
     codes_ext = jnp.concatenate(
-        [index.codes[cand],
+        [index.codes[cand].astype(jnp.int32),
          index.ivf.assignments[cand][..., None]], axis=-1)  # (Q, C, M+1)
     score = ops.adc_scores(codes_ext, lut_ext,
                            norms=index.aq_norms[cand], backend=backend)
@@ -133,8 +158,14 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
     s1, keep1 = jax.lax.top_k(score, n_short_aq)          # (Q, n_short_aq)
     ids1 = jnp.take_along_axis(cand, keep1, axis=1)
     # 3. pairwise decoder re-rank --------------------------------------------
+    # gather the shortlist rows BEFORE widening: only (Q, n_short_aq, M+M~)
+    # leaves the packed code matrix, never an (N, ...) int32 temporary
     plut = pw_mod.pairwise_lut(index.pw.codebooks, q)     # (Q, M', K^2)
-    score2 = ops.pairwise_scores(index.ext_codes[ids1], plut,
+    ext1 = index.codes[ids1].astype(jnp.int32)
+    if index.ivf.centroid_codes is not None:              # M~ = 0 degrades
+        tilde1 = index.ivf.centroid_codes[index.ivf.assignments[ids1]]
+        ext1 = jnp.concatenate([ext1, tilde1], axis=-1)
+    score2 = ops.pairwise_scores(ext1, plut,
                                  index.pw.pairs, cfg.K,
                                  norms=index.pw_norms[ids1], backend=backend)
     score2 = jnp.where(s1 > -jnp.inf, score2, -jnp.inf)

@@ -1,0 +1,252 @@
+"""Resumable streaming index builder (the billion-vector encode driver).
+
+Two phases:
+
+  `prepare`  — fit phase, run once: IVF centroids (kmeans on a training
+               sample), AQ + pairwise cascade decoders fit on the sample's
+               codes, everything persisted as the store's global state.
+               Idempotent: re-running against an initialized store is a
+               no-op, so a restarted job just falls through to `build`.
+
+  `build`    — stream phase: walks the database shard by shard. Each shard
+               is coarse-assigned (with capacity spill continued across
+               shards via the running fill counts), encoded through the
+               chunked `encode_dataset` driver (double-buffered host<->
+               device staging), scored for cascade norms, and written
+               atomically. A cursor (next shard + fill counts) is
+               persisted after every shard, so a killed build restarts
+               mid-dataset instead of from zero — and produces the SAME
+               index an uninterrupted run would: shard content depends
+               only on (global state, shard slice, fill-at-shard-entry),
+               all of which resume deterministically.
+
+Hook `checkpoint.manager.PreemptionGuard` in via ``guard=`` to turn
+SIGTERM into a clean stop at the next shard edge.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.qinco2 import QincoConfig
+from repro.core import aq as aq_mod
+from repro.core import encode as enc
+from repro.core import ivf as ivf_mod
+from repro.core import pairwise as pw_mod
+from repro.core.kmeans import kmeans
+from repro.core import rq as rq_mod
+from repro.index.codes import PackedCodes, pack_codes
+from repro.index.store import IndexStore
+
+
+class StreamingIndexBuilder:
+    def __init__(self, directory, *, shard_size: int = 1 << 16,
+                 encode_chunk: int = 4096, backend: str = "auto",
+                 verbose: bool = False):
+        self.store = IndexStore(directory)
+        self.shard_size = shard_size
+        self.encode_chunk = encode_chunk
+        self.backend = backend
+        self.verbose = verbose
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(f"[index.builder] {msg}", flush=True)
+
+    # -- phase 1: fit --------------------------------------------------------
+
+    def prepare(self, key, sample, qinco_params, cfg: QincoConfig, *,
+                n_total: int, k_ivf: int = 64, m_tilde: int = 2,
+                n_pair_books: Optional[int] = None, cap_factor: float = 2.0,
+                kmeans_iters: int = 10) -> None:
+        """Fit IVF + cascade decoders on ``sample`` and initialize the store.
+
+        ``n_total`` is the final database size (caps are sized for it; the
+        stream phase then writes exactly ceil(n_total / shard_size) shards).
+        At demonstration scale pass the whole database as the sample for
+        the best decoder fit. (The fit is NOT bit-identical to
+        `search.build_index`'s even then: key derivation and the
+        spill-before-fit ordering differ — equivalence guarantees in this
+        module are between builder runs, interrupted or not.)
+        """
+        from repro.index.codes import packable
+        if not packable(cfg.K):       # fail BEFORE the expensive fit phase
+            raise ValueError(f"streaming builds store packed uint8 codes; "
+                             f"K={cfg.K} > 256 is not supported")
+        if self.store.exists():
+            self._log(f"store {self.store.dir} already initialized; "
+                      f"resuming with its global state")
+            return
+        n_pair_books = n_pair_books or 2 * cfg.M
+        sample = np.asarray(sample)
+        k1, k2 = jax.random.split(key)
+
+        cent, _ = kmeans(k1, jnp.asarray(sample), k_ivf, kmeans_iters)
+        centroid_codes = centroid_rq_books = None
+        if m_tilde > 0:
+            books = rq_mod.rq_train(k2, cent, m_tilde, cfg.K)
+            centroid_codes, _ = rq_mod.rq_encode(books, cent, B=4)
+            centroid_rq_books = books
+
+        # encode the sample to fit the approximate decoders on its codes
+        assign = ivf_mod.assign_to_centroids(cent, sample)
+        resid = sample - np.asarray(cent)[assign]
+        codes, _, _ = enc.encode_dataset(
+            qinco_params, resid, cfg, cfg.A_eval, cfg.B_eval,
+            chunk=self.encode_chunk, backend=self.backend)
+        codes = jnp.asarray(codes)
+        aq_books = aq_mod.fit_aq(codes, jnp.asarray(resid), cfg.M, cfg.K)
+        if m_tilde > 0:
+            tilde = jnp.asarray(centroid_codes)[assign]
+            ext = jnp.concatenate([codes, tilde], axis=1)
+        else:
+            ext = codes
+        pw = pw_mod.fit_pairwise(ext, jnp.asarray(sample), cfg.K,
+                                 n_pair_books, verbose=self.verbose)
+
+        cap = ivf_mod.bucket_cap(n_total, k_ivf, cap_factor)
+        global_tree = {
+            "centroids": cent,
+            "centroid_codes": centroid_codes,
+            "centroid_rq_books": centroid_rq_books,
+            "aq_books": aq_books,
+            "pw_codebooks": pw.codebooks,
+            "qinco_params": qinco_params,
+        }
+        self.store.initialize(
+            cfg=cfg, global_tree=global_tree, n_total=n_total,
+            shard_size=self.shard_size, k_ivf=k_ivf, cap=cap,
+            pw_pairs=pw.pairs,
+            extra={"m_tilde": m_tilde, "cap_factor": cap_factor,
+                   "fit_sample_size": int(len(sample))})
+        self._log(f"prepared store: {n_total} vectors / "
+                  f"{self.store.manifest['n_shards']} shards, k_ivf={k_ivf}")
+
+    # -- phase 2: stream -----------------------------------------------------
+
+    def _check_db_fingerprint(self, xb) -> None:
+        """Refuse to resume against a DIFFERENT same-length database.
+
+        Shards already on disk came from the original dataset; mixing in a
+        substitute would finalize a silently corrupt index. A hash of a
+        few fixed rows is recorded on the first build call and verified on
+        every resume."""
+        import hashlib
+        n = len(xb)
+        probe_rows = sorted({0, n // 3, 2 * n // 3, n - 1})
+        h = hashlib.sha256()
+        for r in probe_rows:
+            h.update(np.ascontiguousarray(
+                np.asarray(xb[r], np.float32)).tobytes())
+        fp = h.hexdigest()
+        extra = self.store.manifest["extra"]
+        if "db_fingerprint" not in extra:
+            self.store.update_extra(db_fingerprint=fp)
+        elif extra["db_fingerprint"] != fp:
+            raise ValueError(
+                f"database content mismatch: store {self.store.dir} was "
+                f"built from a different dataset (fingerprint "
+                f"{extra['db_fingerprint'][:12]}… != {fp[:12]}…); resuming "
+                f"would produce a corrupt mixed-content index")
+
+    def _resume_state(self):
+        """(next_shard, fill) from the cursor, validated against the shards
+        actually on disk (which are ground truth)."""
+        store = self.store
+        done = store.done_shards()
+        cur = store.read_cursor()
+        if cur is not None and cur["next_shard"] == done:
+            return done, np.asarray(cur["fill"], np.int64)
+        # cursor stale/missing (e.g. killed between shard rename and cursor
+        # write): rebuild fill counts from the completed shards' assignments
+        k_ivf = store.manifest["k_ivf"]
+        fill = np.zeros(k_ivf, np.int64)
+        for sid in range(done):
+            fill += np.bincount(store.open_shard(sid)["assign"],
+                                minlength=k_ivf)
+        return done, fill
+
+    def build(self, xb, *, guard=None, max_shards: Optional[int] = None,
+              progress=None) -> bool:
+        """Stream ``xb`` (array-like, sliceable) into shards; resume from
+        the cursor. Returns True when the store is complete.
+
+        ``guard``: a `PreemptionGuard` — checked at shard edges.
+        ``max_shards``: stop after N newly-built shards (tests simulate a
+        kill with this). ``progress``: optional callback(shard_id, dt_s).
+        """
+        store = self.store
+        m = store.manifest
+        if m["complete"]:
+            return True
+        if len(xb) != m["n_total"]:
+            raise ValueError(f"database has {len(xb)} rows; store was "
+                             f"initialized for {m['n_total']}")
+        self._check_db_fingerprint(xb)
+        cfg = QincoConfig(**m["cfg"])
+        g = store.load_global_tree()
+        cent = np.asarray(g["centroids"])
+        aq_books = jnp.asarray(g["aq_books"])
+        pw = pw_mod.PairwiseDecoder(
+            pairs=tuple(tuple(p) for p in m["pw_pairs"]),
+            codebooks=jnp.asarray(g["pw_codebooks"]), K=m["K"])
+        params = jax.tree.map(jnp.asarray, g["qinco_params"])
+        tilde_books = g["centroid_codes"]
+
+        start, fill = self._resume_state()
+        if start:
+            self._log(f"resuming at shard {start}/{m['n_shards']}")
+        built = 0
+        for sid in range(start, m["n_shards"]):
+            t0 = time.time()
+            lo = sid * m["shard_size"]
+            hi = lo + store.shard_rows(sid)
+            x_s = np.asarray(xb[lo:hi], np.float32)
+
+            raw = ivf_mod.assign_to_centroids(cent, x_s)
+            assign, fill = ivf_mod.assign_with_spill(x_s, cent, raw,
+                                                     m["cap"], fill)
+            resid = x_s - cent[assign]
+            codes, _, _ = enc.encode_dataset(
+                params, resid, cfg, cfg.A_eval, cfg.B_eval,
+                chunk=min(self.encode_chunk, len(resid)),
+                backend=self.backend)
+            codes_j = jnp.asarray(codes)
+
+            recon_aq = (aq_mod.aq_decode(aq_books, codes_j)
+                        + jnp.asarray(cent)[assign])
+            aq_norms = jnp.sum(recon_aq * recon_aq, axis=-1)
+            if tilde_books is not None:
+                ext = jnp.concatenate(
+                    [codes_j, jnp.asarray(tilde_books)[assign]], axis=1)
+            else:
+                ext = codes_j
+            recon_pw = pw.decode(ext)
+            pw_norms = jnp.sum(recon_pw * recon_pw, axis=-1)
+
+            store.write_shard(
+                sid, codes=PackedCodes(pack_codes(codes, m["K"]), m["K"]),
+                assign=assign, aq_norms=np.asarray(aq_norms),
+                pw_norms=np.asarray(pw_norms))
+            store.write_cursor(sid + 1, fill)
+            built += 1
+            dt = time.time() - t0
+            self._log(f"shard {sid + 1}/{m['n_shards']}: {hi - lo} vectors "
+                      f"in {dt:.2f}s ({(hi - lo) / dt:.0f} vec/s)")
+            if progress is not None:
+                progress(sid, dt)
+            if guard is not None and guard.should_checkpoint():
+                self._log("preemption requested; stopping at shard edge")
+                return False
+            if max_shards is not None and built >= max_shards:
+                return sid + 1 == m["n_shards"] and self._finalize()
+        return self._finalize()
+
+    def _finalize(self) -> bool:
+        self.store.finalize()
+        self._log("store complete")
+        return True

@@ -1,0 +1,94 @@
+"""Packed code containers: uint8 end-to-end (ROADMAP "pack codes int8").
+
+QINCo2 codes have alphabet K <= 256 in every paper setting (8/16-byte
+regimes), i.e. one byte per quantization step. The repo historically kept
+codes as int32 `(N, M)` arrays — 4x the HBM footprint and 4x the
+host->device wire of the information content. `PackedCodes` makes uint8
+the canonical at-rest representation; `kernels/ops.adc_scores` /
+`pairwise_scores` consume the packed bytes directly (widening to int32
+only inside the kernel), so packed bytes are what lives in HBM.
+
+Works on both numpy (host/store side) and jax (device side) arrays: all
+helpers preserve the input's array namespace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CODE_DTYPE = np.uint8          # the packed on-disk / HBM code dtype
+MAX_PACKED_K = 256             # alphabet that fits one byte
+
+
+def packable(K: int) -> bool:
+    """True when a K-ary alphabet fits the packed byte representation."""
+    return 0 < K <= MAX_PACKED_K
+
+
+def pack_codes(codes, K: int):
+    """Narrow integer codes to uint8. codes: (..., M) int, values in
+    [0, K); K must be <= 256. numpy in -> numpy out, jax in -> jax out."""
+    if not packable(K):
+        raise ValueError(
+            f"cannot pack alphabet K={K} into uint8 (max {MAX_PACKED_K}); "
+            f"keep int32 codes for larger alphabets")
+    return codes.astype(CODE_DTYPE)
+
+
+def unpack_codes(codes):
+    """Widen packed codes back to int32 (for arithmetic on code values)."""
+    return codes.astype(np.int32)
+
+
+@dataclasses.dataclass
+class PackedCodes:
+    """A `(N, M)` uint8 code matrix plus the metadata that makes the raw
+    bytes self-describing (alphabet, packing invariants).
+
+    This is the unit the store shards and the builder emits: `.codes` is
+    exactly what `store.write_shard` puts on disk and what `ops.adc_scores`
+    scans in HBM.
+    """
+    codes: Any                   # (N, M) uint8 (np.ndarray or jax array)
+    K: int                       # code alphabet (values are < K <= 256)
+
+    def __post_init__(self):
+        if self.codes.dtype != CODE_DTYPE:
+            raise ValueError(f"PackedCodes wants {np.dtype(CODE_DTYPE)} "
+                             f"codes, got {self.codes.dtype}")
+        if not packable(self.K):
+            raise ValueError(f"alphabet K={self.K} does not fit uint8")
+
+    @classmethod
+    def pack(cls, codes, K: int) -> "PackedCodes":
+        return cls(pack_codes(codes, K), K)
+
+    def unpack(self):
+        return unpack_codes(self.codes)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def nbytes(self) -> int:
+        """Storage footprint: exactly N * M bytes (1 byte/step)."""
+        return int(np.prod(self.codes.shape))
+
+    @property
+    def bytes_per_vector(self) -> int:
+        return int(self.codes.shape[-1])
+
+    def __len__(self) -> int:
+        return int(self.codes.shape[0])
+
+    def __getitem__(self, sl) -> "PackedCodes":
+        return PackedCodes(self.codes[sl], self.K)
+
+
+jax.tree_util.register_dataclass(
+    PackedCodes, data_fields=("codes",), meta_fields=("K",))

@@ -1,0 +1,397 @@
+"""On-disk sharded index format: JSON manifest + raw per-shard files.
+
+Layout (format_version 1 — see docs/INDEX_FORMAT.md):
+
+    store_dir/
+      manifest.json            format version, cfg, decoder metadata,
+                               shard table, treespec, `complete` flag
+      global/step_000000000/   non-sharded arrays (centroids, codebooks,
+                               QINCo2 params) via checkpoint.CheckpointManager
+      shards/shard_00000/      per-vector arrays, raw little-endian:
+        codes.u8                 (rows, M)  packed uint8 QINCo2 codes
+        assign.i32               (rows,)    IVF bucket of each vector
+        aq_norms.f32             (rows,)    ||xhat_aq||^2 (w/ centroid)
+        pw_norms.f32             (rows,)    ||xhat_pw||^2
+
+Guarantees:
+  - `save(index)` -> `load()` round-trips `SearchIndex` exactly: same
+    bytes in every array, bit-identical `search()` results. The bucket
+    table is NOT stored — it is reconstructed from assignments via
+    `ivf.buckets_from_assignments`, which reproduces the build-time fill
+    order exactly.
+  - Shard writes are atomic (tmp dir + rename), so a killed builder never
+    leaves a half-written shard behind; shard presence on disk IS the
+    resume cursor ground truth.
+  - Reads are mmap-backed (np.memmap): loading touches the code bytes
+    once, on the way to the device, with no intermediate parse/copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.qinco2 import QincoConfig
+from repro.index.codes import CODE_DTYPE, PackedCodes, pack_codes
+
+FORMAT_VERSION = 1
+
+# sharded per-vector fields: name -> (file, dtype, trailing shape lambda)
+_SHARD_FIELDS = {
+    "codes": ("codes.u8", np.uint8),
+    "assign": ("assign.i32", np.int32),
+    "aq_norms": ("aq_norms.f32", np.float32),
+    "pw_norms": ("pw_norms.f32", np.float32),
+}
+
+
+# ---------------------------------------------------------------------------
+# treespec: JSON-serializable structure description for the global tree
+# ---------------------------------------------------------------------------
+
+
+def tree_spec(tree) -> Any:
+    """Describe a pytree of dicts/lists/arrays/None as JSON. Leaves are
+    recorded positionally; the walk order matches jax.tree flattening
+    (dict keys sorted), so `tree_unflatten_spec` can consume the flat
+    leaf list a `CheckpointManager.restore_flat` returns."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, dict):
+        return {"t": "dict",
+                "children": {k: tree_spec(tree[k]) for k in sorted(tree)}}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "list" if isinstance(tree, list) else "tuple",
+                "children": [tree_spec(v) for v in tree]}
+    return {"t": "leaf"}
+
+
+def tree_unflatten_spec(spec, leaves: List[Any]) -> Any:
+    """Rebuild the tree described by `tree_spec` from flat leaves."""
+    it = iter(leaves)
+
+    def walk(s):
+        if s["t"] == "none":
+            return None
+        if s["t"] == "dict":
+            return {k: walk(s["children"][k]) for k in sorted(s["children"])}
+        if s["t"] in ("list", "tuple"):
+            out = [walk(c) for c in s["children"]]
+            return out if s["t"] == "list" else tuple(out)
+        try:
+            return next(it)
+        except StopIteration:
+            raise ValueError(
+                f"treespec expects more leaves than the {len(leaves)} "
+                f"provided (truncated/corrupted checkpoint?)") from None
+
+    tree = walk(spec)
+    leftover = sum(1 for _ in it)
+    if leftover:
+        raise ValueError(f"{leftover} leaves beyond what the treespec "
+                         f"describes (store/treespec mismatch)")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+
+class IndexStore:
+    """Reader/writer for the persistent packed-code index format."""
+
+    def __init__(self, directory):
+        self.dir = Path(directory)
+        self._manifest: Optional[dict] = None
+
+    # -- paths ---------------------------------------------------------------
+
+    @property
+    def manifest_path(self) -> Path:
+        return self.dir / "manifest.json"
+
+    def shard_dir(self, shard_id: int) -> Path:
+        return self.dir / "shards" / f"shard_{shard_id:05d}"
+
+    def exists(self) -> bool:
+        return self.manifest_path.exists()
+
+    @property
+    def manifest(self) -> dict:
+        if self._manifest is None:
+            self._manifest = json.loads(self.manifest_path.read_text())
+            v = self._manifest.get("format_version")
+            if v != FORMAT_VERSION:
+                raise ValueError(
+                    f"store {self.dir} has format_version={v}; this reader "
+                    f"understands {FORMAT_VERSION} (see INDEX_FORMAT.md)")
+        return self._manifest
+
+    # -- writer side ---------------------------------------------------------
+
+    def initialize(self, *, cfg: QincoConfig, global_tree: dict,
+                   n_total: int, shard_size: int, k_ivf: int, cap: int,
+                   pw_pairs, extra: Optional[dict] = None) -> None:
+        """Write the global (non-sharded) state + an incomplete manifest.
+
+        Idempotent-unsafe by design: refuses to clobber an existing store
+        (delete the directory to rebuild from scratch)."""
+        from repro.index.codes import packable
+        if not packable(cfg.K):
+            # fail in milliseconds, not after an hours-long fit phase: the
+            # v1 format stores codes.u8 only
+            raise ValueError(
+                f"index store format v{FORMAT_VERSION} stores packed uint8 "
+                f"codes; alphabet K={cfg.K} > 256 is not representable")
+        if self.exists():
+            raise FileExistsError(f"store already initialized at {self.dir}")
+        self.dir.mkdir(parents=True, exist_ok=True)
+        (self.dir / "shards").mkdir(exist_ok=True)
+        CheckpointManager(self.dir / "global", keep=1).save(0, global_tree)
+        n_shards = -(-n_total // shard_size)
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "cfg": dataclasses.asdict(cfg),
+            "n_total": int(n_total),
+            "shard_size": int(shard_size),
+            "n_shards": int(n_shards),
+            "M": int(cfg.M),
+            "K": int(cfg.K),
+            "code_dtype": str(np.dtype(CODE_DTYPE)),
+            "k_ivf": int(k_ivf),
+            "cap": int(cap),
+            "pw_pairs": [list(p) for p in pw_pairs],
+            "treespec": tree_spec(global_tree),
+            "complete": False,
+            "extra": extra or {},
+        }
+        self._write_manifest(manifest)
+
+    def _write_manifest(self, manifest: dict) -> None:
+        tmp = self.manifest_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(manifest, indent=1))
+        os.rename(tmp, self.manifest_path)        # atomic publish
+        self._manifest = manifest
+
+    def update_extra(self, **kv) -> None:
+        """Merge keys into the manifest's free-form `extra` (atomic)."""
+        m = self.manifest
+        self._write_manifest(dict(m, extra=dict(m["extra"], **kv)))
+
+    def shard_rows(self, shard_id: int) -> int:
+        m = self.manifest
+        lo = shard_id * m["shard_size"]
+        return min(m["shard_size"], m["n_total"] - lo)
+
+    def shard_done(self, shard_id: int) -> bool:
+        return (self.shard_dir(shard_id) / _SHARD_FIELDS["codes"][0]).exists()
+
+    def write_shard(self, shard_id: int, *, codes: PackedCodes, assign,
+                    aq_norms, pw_norms) -> None:
+        """Atomically persist one shard (tmp dir + rename)."""
+        rows = self.shard_rows(shard_id)
+        arrays = {
+            "codes": np.ascontiguousarray(np.asarray(codes.codes)),
+            "assign": np.asarray(assign, np.int32),
+            "aq_norms": np.asarray(aq_norms, np.float32),
+            "pw_norms": np.asarray(pw_norms, np.float32),
+        }
+        if arrays["codes"].dtype != CODE_DTYPE:
+            raise ValueError(f"shard codes must be {np.dtype(CODE_DTYPE)}")
+        for name, arr in arrays.items():
+            if arr.shape[0] != rows:
+                raise ValueError(f"shard {shard_id} field {name}: "
+                                 f"{arr.shape[0]} rows, expected {rows}")
+        final = self.shard_dir(shard_id)
+        tmp = final.with_name(f".tmp_{final.name}")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for name, arr in arrays.items():
+            arr.tofile(tmp / _SHARD_FIELDS[name][0])
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    def finalize(self) -> None:
+        """Flip the manifest to complete once every shard is on disk."""
+        missing = [s for s in range(self.manifest["n_shards"])
+                   if not self.shard_done(s)]
+        if missing:
+            raise ValueError(f"cannot finalize: shards missing {missing}")
+        self._write_manifest(dict(self.manifest, complete=True))
+
+    # -- cursor (builder resume) --------------------------------------------
+
+    @property
+    def cursor_path(self) -> Path:
+        return self.dir / "cursor.json"
+
+    def write_cursor(self, next_shard: int, fill) -> None:
+        """Fast-path resume state (next shard + running bucket fill).
+
+        Advisory only: shard presence on disk is ground truth; a stale or
+        missing cursor just costs a re-scan of completed shards."""
+        tmp = self.cursor_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"next_shard": int(next_shard),
+                                   "fill": [int(f) for f in fill]}))
+        os.rename(tmp, self.cursor_path)
+
+    def read_cursor(self) -> Optional[dict]:
+        if not self.cursor_path.exists():
+            return None
+        try:
+            return json.loads(self.cursor_path.read_text())
+        except (ValueError, OSError):
+            return None
+
+    # -- reader side ---------------------------------------------------------
+
+    def open_shard(self, shard_id: int) -> Dict[str, np.ndarray]:
+        """mmap views over one shard's raw files (zero-copy until touched)."""
+        rows = self.shard_rows(shard_id)
+        d = self.shard_dir(shard_id)
+        M = self.manifest["M"]
+        out = {}
+        for name, (fname, dtype) in _SHARD_FIELDS.items():
+            shape = (rows, M) if name == "codes" else (rows,)
+            out[name] = np.memmap(d / fname, dtype=dtype, mode="r",
+                                  shape=shape)
+        return out
+
+    def done_shards(self) -> int:
+        """Number of completed shards, counted as the on-disk prefix."""
+        n = 0
+        while n < self.manifest["n_shards"] and self.shard_done(n):
+            n += 1
+        return n
+
+    def load_arrays(self, *, n_shards: Optional[int] = None
+                    ) -> Dict[str, np.ndarray]:
+        """Per-vector arrays over the first ``n_shards`` shards (default:
+        all). Each shard's mmap view is read directly into its slice of
+        one preallocated buffer per field — a single host copy, no
+        intermediate concatenate."""
+        m = self.manifest
+        if n_shards is None:
+            n_shards = m["n_shards"]
+        rows = sum(self.shard_rows(s) for s in range(n_shards))
+        out = {}
+        for name, (_, dtype) in _SHARD_FIELDS.items():
+            shape = (rows, m["M"]) if name == "codes" else (rows,)
+            out[name] = np.empty(shape, dtype)
+        lo = 0
+        for sid in range(n_shards):
+            sh = self.open_shard(sid)
+            hi = lo + self.shard_rows(sid)
+            for name in _SHARD_FIELDS:
+                out[name][lo:hi] = sh[name]
+            lo = hi
+        return out
+
+    def load_global_tree(self) -> dict:
+        leaves, _ = CheckpointManager(self.dir / "global",
+                                      keep=1).restore_flat(0)
+        return tree_unflatten_spec(self.manifest["treespec"], leaves)
+
+    def load(self, *, allow_partial: bool = False, device: bool = True):
+        """Reconstruct the full `SearchIndex` (bit-identical round trip).
+
+        With ``allow_partial`` an incomplete store loads the completed
+        shard prefix: the index covers the first `done_shards()` worth of
+        vectors (database ids are shard-order, so the prefix is a valid
+        sub-database)."""
+        from repro.core import ivf as ivf_mod
+        from repro.core import pairwise as pw_mod
+        from repro.core import search as search_mod
+
+        m = self.manifest
+        if not m["complete"] and not allow_partial:
+            raise ValueError(
+                f"store {self.dir} is incomplete (builder still running or "
+                f"killed); pass allow_partial=True to read anyway")
+        g = self.load_global_tree()
+        arrs = self.load_arrays(
+            n_shards=None if m["complete"] else self.done_shards())
+        cfg = QincoConfig(**m["cfg"])
+        buckets, mask = ivf_mod.buckets_from_assignments(
+            arrs["assign"], m["k_ivf"], m["cap"])
+        as_dev = jnp.asarray if device else np.asarray
+        ivf = ivf_mod.IVFIndex(
+            centroids=as_dev(g["centroids"]),
+            buckets=as_dev(buckets),
+            bucket_mask=as_dev(mask),
+            assignments=as_dev(arrs["assign"]),
+            centroid_codes=(None if g["centroid_codes"] is None
+                            else as_dev(g["centroid_codes"])),
+            centroid_rq_books=(None if g["centroid_rq_books"] is None
+                               else as_dev(g["centroid_rq_books"])))
+        pw = pw_mod.PairwiseDecoder(
+            pairs=tuple(tuple(p) for p in m["pw_pairs"]),
+            codebooks=as_dev(g["pw_codebooks"]), K=m["K"])
+        qinco_params = jax.tree.map(as_dev, g["qinco_params"])
+        return search_mod.SearchIndex(
+            ivf=ivf, codes=as_dev(arrs["codes"]),
+            aq_books=as_dev(g["aq_books"]),
+            aq_norms=as_dev(arrs["aq_norms"]), pw=pw,
+            pw_norms=as_dev(arrs["pw_norms"]),
+            qinco_params=qinco_params, cfg=cfg)
+
+    # -- one-shot save of an in-memory index ---------------------------------
+
+    @classmethod
+    def save(cls, directory, index, *, shard_size: int = 1 << 20,
+             extra: Optional[dict] = None) -> "IndexStore":
+        """Persist an in-memory `SearchIndex` through the same writer path
+        the streaming builder uses (initialize -> write_shard* -> finalize),
+        so one code path defines the format."""
+        store = cls(directory)
+        n = int(index.codes.shape[0])
+        shard_size = max(1, min(shard_size, n))
+        ivf = index.ivf
+        global_tree = {
+            "centroids": ivf.centroids,
+            "centroid_codes": ivf.centroid_codes,
+            "centroid_rq_books": ivf.centroid_rq_books,
+            "aq_books": index.aq_books,
+            "pw_codebooks": index.pw.codebooks,
+            "qinco_params": index.qinco_params,
+        }
+        store.initialize(
+            cfg=index.cfg, global_tree=global_tree, n_total=n,
+            shard_size=shard_size, k_ivf=int(ivf.centroids.shape[0]),
+            cap=int(ivf.buckets.shape[1]), pw_pairs=index.pw.pairs,
+            extra=extra)
+        codes = np.asarray(index.codes)
+        if codes.dtype != CODE_DTYPE:
+            codes = pack_codes(codes, index.cfg.K)     # narrow legacy int32
+        assign = np.asarray(ivf.assignments)
+        aq_norms = np.asarray(index.aq_norms)
+        pw_norms = np.asarray(index.pw_norms)
+        for sid in range(store.manifest["n_shards"]):
+            lo = sid * shard_size
+            hi = lo + store.shard_rows(sid)
+            store.write_shard(
+                sid, codes=PackedCodes(codes[lo:hi], index.cfg.K),
+                assign=assign[lo:hi], aq_norms=aq_norms[lo:hi],
+                pw_norms=pw_norms[lo:hi])
+        store.finalize()
+        return store
+
+    # -- stats ---------------------------------------------------------------
+
+    def disk_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.dir.rglob("*")
+                   if p.is_file())
+
+    def bytes_per_vector(self) -> float:
+        return self.disk_bytes() / max(1, self.manifest["n_total"])

@@ -9,6 +9,10 @@ TPU gathers are slow, so the TPU-native form is:
 i.e. a (TQ, M*K) x (M*K, TN) matmul on the systolic array. The one-hot
 expansion is built in VMEM from an iota comparison (broadcast + reshape:
 no gather anywhere). This is the billion-scale search hot loop.
+
+Codes may be packed uint8 (K <= 256, `index/codes.py`): the packed bytes
+are what crosses HBM -> VMEM (4x less wire than int32) and are widened to
+int32 only inside the kernel, right before the iota comparison.
 """
 from __future__ import annotations
 
@@ -19,8 +23,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _code_wire_dtype(codes):
+    """Packed uint8 stays uint8 across the HBM->VMEM boundary; any other
+    integer dtype is normalized to int32."""
+    if codes.dtype == jnp.uint8:
+        return codes
+    return codes.astype(jnp.int32)
+
+
 def _kernel(codes_ref, lut_ref, out_ref):
-    codes = codes_ref[...]                                # (TN, M) int32
+    codes = codes_ref[...].astype(jnp.int32)              # (TN, M)
     lut = lut_ref[...].astype(jnp.float32)                # (TQ, M*K)
     tn, M = codes.shape
     MK = lut.shape[1]
@@ -34,7 +46,7 @@ def _kernel(codes_ref, lut_ref, out_ref):
 
 
 def _kernel_batched(codes_ref, lut_ref, out_ref):
-    codes = codes_ref[...]                                # (TQ, TC, M) int32
+    codes = codes_ref[...].astype(jnp.int32)              # (TQ, TC, M)
     lut = lut_ref[...].astype(jnp.float32)                # (TQ, M*K)
     tq, tc, M = codes.shape
     MK = lut.shape[1]
@@ -51,7 +63,8 @@ def _kernel_batched(codes_ref, lut_ref, out_ref):
                    static_argnames=("tile_q", "tile_c", "interpret"))
 def adc_scores_batched(codes, lut, *, tile_q: int = 8, tile_c: int = 256,
                        interpret: bool = True):
-    """Per-query candidate scan: codes (Q, C, M) int32; lut (Q, M, K) ->
+    """Per-query candidate scan: codes (Q, C, M) int (uint8 or int32);
+    lut (Q, M, K) ->
     (Q, C) scores. Same one-hot MXU form as `adc_scores`, batched over Q —
     the shape of the IVF-shortlist steps of the search cascade, where each
     query scores its own candidate set rather than the whole database."""
@@ -76,7 +89,7 @@ def adc_scores_batched(codes, lut, *, tile_q: int = 8, tile_c: int = 256,
         out_specs=pl.BlockSpec((tile_q, tile_c), lambda qi, ci: (qi, ci)),
         out_shape=jax.ShapeDtypeStruct((Q + pq, C + pc), jnp.float32),
         interpret=interpret,
-    )(codes.astype(jnp.int32), lut_flat)
+    )(_code_wire_dtype(codes), lut_flat)
     return out[:Q, :C]
 
 
@@ -84,7 +97,7 @@ def adc_scores_batched(codes, lut, *, tile_q: int = 8, tile_c: int = 256,
                    static_argnames=("tile_q", "tile_n", "interpret"))
 def adc_scores(codes, lut, *, tile_q: int = 64, tile_n: int = 256,
                interpret: bool = True):
-    """codes: (N, M) int32; lut: (Q, M, K) -> (Q, N) scores."""
+    """codes: (N, M) int (uint8 or int32); lut: (Q, M, K) -> (Q, N)."""
     N, M = codes.shape
     Q, _, K = lut.shape
     tile_q = min(tile_q, Q)
@@ -105,5 +118,5 @@ def adc_scores(codes, lut, *, tile_q: int = 64, tile_n: int = 256,
         out_specs=pl.BlockSpec((tile_q, tile_n), lambda qi, ni: (qi, ni)),
         out_shape=jax.ShapeDtypeStruct((Q + pq, N + pn), jnp.float32),
         interpret=interpret,
-    )(codes.astype(jnp.int32), lut_flat)
+    )(_code_wire_dtype(codes), lut_flat)
     return out[:Q, :N]

@@ -27,6 +27,10 @@ Contract highlights:
     query against a shared code matrix (database scan, one (Q, N) tile
     grid); ``(Q, C, M)`` scores each query against its own candidate list
     (IVF shortlists, batched one-hot matvec).
+  - Codes may be **packed uint8** (K <= 256; see `index/codes.py`) or
+    int32 — results are bit-identical. On the pallas path the packed
+    bytes are what crosses HBM -> VMEM (4x less wire than int32); the
+    widening to int32 happens inside the kernel body.
   - `pairwise_scores` reuses the same one-hot ADC machinery on the
     K^2-alphabet combined codes of the pairwise decoder (paper Eq. 8-9):
     bucket indices i*K+j are formed here and fed to the ADC backend.
@@ -98,8 +102,8 @@ def adc_scores(codes, lut, *, norms=None, backend: str = "auto",
     """Additive-decoder inner products (one-hot MXU form on the pallas
     path, gather form on the xla fallback).
 
-    codes (N, M) int32, lut (Q, M, K)          -> (Q, N)  [shared codes]
-    codes (Q, C, M) int32, lut (Q, M, K)       -> (Q, C)  [per-query codes]
+    codes (N, M) uint8|int32, lut (Q, M, K)    -> (Q, N)  [shared codes]
+    codes (Q, C, M) uint8|int32, lut (Q, M, K) -> (Q, C)  [per-query codes]
 
     With ``norms`` (||xhat||^2, shaped (N,) or (Q, C) to match) the result
     is the score ``2 * ip - norms``; otherwise the raw inner products.
@@ -138,7 +142,11 @@ def adc_scores(codes, lut, *, norms=None, backend: str = "auto",
 
 def pairwise_buckets(codes, pairs, K: int):
     """Combined codes I^{i,j} = I^i * K + I^j over the selected column
-    pairs. codes (..., M_all) int32 -> (..., M') int32 with alphabet K^2."""
+    pairs. codes (..., M_all) int -> (..., M') int32 with alphabet K^2.
+
+    Codes are widened BEFORE the multiply: packed uint8 columns would
+    wrap at 256 (the K^2 alphabet needs up to 16 bits)."""
+    codes = codes.astype(jnp.int32)
     return jnp.stack([codes[..., i] * K + codes[..., j] for i, j in pairs],
                      axis=-1)
 

@@ -23,7 +23,9 @@ def l2_topk_ref(r, cb, A: int):
 
 
 def adc_ref(codes, lut):
-    """codes: (N, M) int32; lut: (Q, M, K) -> scores (Q, N) = sum_m lut[q,m,codes[n,m]]."""
+    """codes: (N, M) int (uint8 packed or int32); lut: (Q, M, K) ->
+    scores (Q, N) = sum_m lut[q,m,codes[n,m]]."""
+    codes = codes.astype(jnp.int32)
     return jnp.sum(jnp.take_along_axis(
         lut[:, None], codes[None, ..., None], axis=3)[..., 0], axis=2)
 
@@ -31,12 +33,13 @@ def adc_ref(codes, lut):
 def adc_onehot_ref(codes, lut):
     """`adc_ref` as the one-hot einsum (the kernel's own matmul form)."""
     K = lut.shape[2]
-    oh = jax.nn.one_hot(codes, K, dtype=jnp.float32)      # (N, M, K)
+    oh = jax.nn.one_hot(codes.astype(jnp.int32), K, dtype=jnp.float32)
     return jnp.einsum("qmk,nmk->qn", lut.astype(jnp.float32), oh)
 
 
 def adc_batched_ref(codes, lut):
-    """Per-query candidates: codes (Q, C, M) int32; lut (Q, M, K) -> (Q, C)."""
+    """Per-query candidates: codes (Q, C, M) int; lut (Q, M, K) -> (Q, C)."""
+    codes = codes.astype(jnp.int32)
     return jnp.sum(jnp.take_along_axis(
         lut[:, None], codes[..., None], axis=3)[..., 0], axis=2)
 

@@ -1,0 +1,398 @@
+"""The `repro.index` subsystem contract:
+
+- packed uint8 codes are the stored and kernel-consumed representation,
+  bit-identical to int32 through every backend and the full cascade;
+- `build_ivf` never drops vectors on bucket overflow (spill regression);
+- `IndexStore.save -> load` round-trips `SearchIndex` bit-identically;
+- an interrupted `StreamingIndexBuilder` run resumes from its shard
+  cursor and produces the same index as an uninterrupted run;
+- `SearchServer` micro-batched serving returns the direct-search results.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qinco2 import tiny
+from repro.core import ivf, search, training
+from repro.index import IndexStore, PackedCodes, StreamingIndexBuilder
+from repro.index import codes as pcodes
+from repro.kernels import ops
+
+from conftest import clustered
+
+
+SEARCH_KW = dict(n_probe=4, n_short_aq=16, n_short_pw=8, topk=3)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """Small clustered database + untrained (init-only) QINCo2 params —
+    parity and round-trip properties hold regardless of training."""
+    rng = np.random.default_rng(11)
+    xb = clustered(rng, 1100, 16, k=16)       # non-tile-multiple N
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), xb[:400], cfg)
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params, cfg,
+                             k_ivf=8, m_tilde=2, n_pair_books=4,
+                             encode_chunk=512)
+    q = jnp.asarray(xb[:13] + 0.02)
+    return xb, cfg, params, idx, q
+
+
+# ---------------------------------------------------------------------------
+# packed codes
+# ---------------------------------------------------------------------------
+
+
+def test_build_index_packs_codes(world):
+    _, cfg, _, idx, _ = world
+    assert idx.codes.dtype == jnp.uint8
+    assert idx.codes.shape[1] == cfg.M        # 1 byte/step on the wire
+
+
+def test_packed_codes_container():
+    rng = np.random.default_rng(0)
+    c = PackedCodes.pack(rng.integers(0, 200, size=(10, 8)), 256)
+    assert c.nbytes == 80 and c.bytes_per_vector == 8 and len(c) == 10
+    assert c[2:5].shape == (3, 8)
+    np.testing.assert_array_equal(c.unpack(), c.codes.astype(np.int32))
+    with pytest.raises(ValueError):
+        pcodes.pack_codes(np.zeros((2, 2), np.int32), 512)
+    with pytest.raises(ValueError):
+        PackedCodes(np.zeros((2, 2), np.int32), 16)   # not packed dtype
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_packed_search_topk_identical(world, backend):
+    """uint8 vs int32 codes -> bit-identical search() top-k, on a
+    non-tile-multiple N, under both dispatch backends."""
+    _, cfg, _, idx, q = world
+    idx32 = dataclasses.replace(idx, codes=idx.codes.astype(jnp.int32))
+    i8, s8 = search.search(idx, q, cfg=cfg, backend=backend, **SEARCH_KW)
+    i32, s32 = search.search(idx32, q, cfg=cfg, backend=backend, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i8), np.asarray(i32))
+    np.testing.assert_array_equal(np.asarray(s8), np.asarray(s32))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas", "xla_onehot"])
+def test_adc_scores_uint8_parity_shared(backend):
+    rng = np.random.default_rng(5)
+    codes = jnp.asarray(rng.integers(0, 16, size=(37, 4)).astype(np.uint8))
+    lut = jnp.asarray(rng.normal(size=(5, 4, 16)).astype(np.float32))
+    norms = jnp.asarray((rng.normal(size=(37,)) ** 2).astype(np.float32))
+    s8 = ops.adc_scores(codes, lut, norms=norms, backend=backend,
+                        tile_q=4, tile_n=16)
+    s32 = ops.adc_scores(codes.astype(jnp.int32), lut, norms=norms,
+                         backend=backend, tile_q=4, tile_n=16)
+    np.testing.assert_array_equal(np.asarray(s8), np.asarray(s32))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_adc_scores_uint8_parity_batched(backend):
+    rng = np.random.default_rng(6)
+    codes = jnp.asarray(rng.integers(0, 16, size=(5, 21, 4)).astype(np.uint8))
+    lut = jnp.asarray(rng.normal(size=(5, 4, 16)).astype(np.float32))
+    s8 = ops.adc_scores(codes, lut, backend=backend, tile_q=4, tile_n=16)
+    s32 = ops.adc_scores(codes.astype(jnp.int32), lut, backend=backend,
+                         tile_q=4, tile_n=16)
+    np.testing.assert_array_equal(np.asarray(s8), np.asarray(s32))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_pairwise_uint8_no_byte_overflow(backend):
+    """K=32 buckets reach 32*31+31 > 255: the widen-before-multiply in
+    `pairwise_buckets` is what keeps uint8 codes correct."""
+    rng = np.random.default_rng(7)
+    K = 32
+    codes = jnp.asarray(rng.integers(0, K, size=(41, 5)).astype(np.uint8))
+    lut = jnp.asarray(rng.normal(size=(3, 2, K * K)).astype(np.float32))
+    pairs = ((0, 3), (1, 4))
+    s8 = ops.pairwise_scores(codes, lut, pairs, K, backend=backend,
+                             tile_q=2, tile_n=16)
+    s32 = ops.pairwise_scores(codes.astype(jnp.int32), lut, pairs, K,
+                              backend=backend, tile_q=2, tile_n=16)
+    np.testing.assert_array_equal(np.asarray(s8), np.asarray(s32))
+
+
+# ---------------------------------------------------------------------------
+# IVF overflow spill (regression: vectors used to become unsearchable)
+# ---------------------------------------------------------------------------
+
+
+def test_build_ivf_spills_instead_of_dropping():
+    """Skewed assignment (one tight cluster, cap_factor=1) overflows the
+    favorite bucket; every vector must still land in exactly one bucket."""
+    rng = np.random.default_rng(3)
+    n = 200
+    x = (rng.normal(size=(n, 8)) * 0.01 + 1.0).astype(np.float32)
+    idx = ivf.build_ivf(jax.random.key(0), jnp.asarray(x), 8, cap_factor=1.0)
+    mask = np.asarray(idx.bucket_mask)
+    assert mask.sum() == n                       # nothing dropped
+    ids = np.sort(np.asarray(idx.buckets)[mask])
+    np.testing.assert_array_equal(ids, np.arange(n))
+    # assignments agree with the bucket a vector actually lives in
+    assign = np.asarray(idx.assignments)
+    for i in (0, 57, n - 1):
+        row = np.asarray(idx.buckets)[assign[i]][mask[assign[i]]]
+        assert i in row
+    # capacity respected everywhere
+    assert mask.sum(axis=1).max() <= idx.buckets.shape[1]
+
+
+def test_assign_with_spill_streaming_fill_continues():
+    """Passing running fill counts across calls == one big call."""
+    rng = np.random.default_rng(4)
+    x = (rng.normal(size=(60, 4)) * 0.01).astype(np.float32)
+    cent = rng.normal(size=(4, 4)).astype(np.float32)
+    cent[0] = 0.0                                # everyone's favorite
+    raw = np.zeros(60, np.int32)
+    a_all, f_all = ivf.assign_with_spill(x, cent, raw, cap=20)
+    a1, f1 = ivf.assign_with_spill(x[:30], cent, raw[:30], cap=20)
+    a2, f2 = ivf.assign_with_spill(x[30:], cent, raw[30:], cap=20, fill=f1)
+    np.testing.assert_array_equal(a_all, np.concatenate([a1, a2]))
+    np.testing.assert_array_equal(f_all, f2)
+
+
+def _spill_reference(xb, centroids, assign, cap, fill=None):
+    """The naive sequential loop `assign_with_spill` must match exactly."""
+    assign = np.asarray(assign).astype(np.int32).copy()
+    fill = (np.zeros(len(centroids), np.int64) if fill is None
+            else np.asarray(fill, np.int64).copy())
+    for i in range(len(assign)):
+        b = assign[i]
+        if fill[b] >= cap:
+            d2 = np.sum((xb[i] - centroids) ** 2, axis=-1)
+            b = next(int(nb) for nb in np.argsort(d2, kind="stable")
+                     if fill[nb] < cap)
+            assign[i] = b
+        fill[b] += 1
+    return assign, fill
+
+
+@pytest.mark.parametrize("seed,skew", [(0, 0.9), (1, 0.5), (2, 0.99)])
+def test_assign_with_spill_matches_naive_reference(seed, skew):
+    """The risky-rows-only walk == the naive per-row loop, including
+    cascading spills (spilled rows filling up secondary buckets)."""
+    rng = np.random.default_rng(seed)
+    n, k, cap = 200, 6, 50
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    cent = rng.normal(size=(k, 4)).astype(np.float32)
+    raw = np.where(rng.random(n) < skew, 0,
+                   rng.integers(0, k, n)).astype(np.int32)
+    fill0 = rng.integers(0, 10, k).astype(np.int64)   # fits k*cap total
+    a_ref, f_ref = _spill_reference(x, cent, raw, cap, fill0)
+    a_new, f_new = ivf.assign_with_spill(x, cent, raw, cap, fill0)
+    np.testing.assert_array_equal(a_ref, a_new)
+    np.testing.assert_array_equal(f_ref, f_new)
+
+
+def test_buckets_from_assignments_matches_build():
+    rng = np.random.default_rng(5)
+    x = clustered(rng, 300, 8, k=8)
+    idx = ivf.build_ivf(jax.random.key(1), jnp.asarray(x), 8)
+    b, m = ivf.buckets_from_assignments(np.asarray(idx.assignments), 8,
+                                        idx.buckets.shape[1])
+    np.testing.assert_array_equal(b, np.asarray(idx.buckets))
+    np.testing.assert_array_equal(m, np.asarray(idx.bucket_mask))
+
+
+# ---------------------------------------------------------------------------
+# store round trip
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_bit_identical(world, tmp_path):
+    _, cfg, _, idx, q = world
+    store = IndexStore.save(tmp_path / "idx", idx, shard_size=400)
+    assert store.manifest["complete"]
+    loaded = store.load()
+    assert loaded.codes.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(loaded.codes),
+                                  np.asarray(idx.codes))
+    np.testing.assert_array_equal(np.asarray(loaded.ivf.buckets),
+                                  np.asarray(idx.ivf.buckets))
+    i1, s1 = search.search(idx, q, cfg=cfg, **SEARCH_KW)
+    i2, s2 = search.search(loaded, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_store_refuses_incomplete_and_wrong_version(world, tmp_path):
+    _, cfg, _, idx, _ = world
+    store = IndexStore.save(tmp_path / "idx", idx, shard_size=400)
+    import json
+    m = json.loads(store.manifest_path.read_text())
+    m["complete"] = False
+    store.manifest_path.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="incomplete"):
+        IndexStore(tmp_path / "idx").load()
+    assert IndexStore(tmp_path / "idx").load(allow_partial=True) is not None
+    m["format_version"] = 99
+    store.manifest_path.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="format_version"):
+        IndexStore(tmp_path / "idx").load()
+
+
+def test_store_mmap_shard_views(world, tmp_path):
+    """open_shard returns mmap views with the exact stored bytes."""
+    _, cfg, _, idx, _ = world
+    store = IndexStore.save(tmp_path / "idx", idx, shard_size=400)
+    sh0 = store.open_shard(0)
+    assert isinstance(sh0["codes"], np.memmap)
+    np.testing.assert_array_equal(np.asarray(sh0["codes"]),
+                                  np.asarray(idx.codes[:400]))
+    assert store.shard_rows(store.manifest["n_shards"] - 1) == 1100 - 2 * 400
+    assert store.bytes_per_vector() > cfg.M    # codes + norms + overhead
+
+
+def test_checkpoint_restore_flat(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    tree = {"b": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "a": {"x": np.ones(4, np.int32)}}
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(0, tree, extra={"tag": 1})
+    leaves, extra = mgr.restore_flat(0)
+    assert extra == {"tag": 1}
+    # flat order is jax order (dict keys sorted): a/x then b
+    np.testing.assert_array_equal(leaves[0], tree["a"]["x"])
+    np.testing.assert_array_equal(leaves[1], tree["b"])
+
+
+def test_treespec_roundtrip():
+    from repro.index.store import tree_spec, tree_unflatten_spec
+    tree = {"p": {"w": np.ones(2), "b": np.zeros(3)}, "none": None,
+            "seq": [np.arange(2), np.arange(3)]}
+    leaves, _ = jax.tree.flatten(tree)
+    rebuilt = tree_unflatten_spec(tree_spec(tree), leaves)
+    assert rebuilt["none"] is None
+    np.testing.assert_array_equal(rebuilt["p"]["w"], tree["p"]["w"])
+    np.testing.assert_array_equal(rebuilt["seq"][1], tree["seq"][1])
+
+
+# ---------------------------------------------------------------------------
+# streaming builder: resume == uninterrupted
+# ---------------------------------------------------------------------------
+
+
+def _make_builder(path, xb, params, cfg):
+    b = StreamingIndexBuilder(path, shard_size=300, encode_chunk=256)
+    b.prepare(jax.random.key(3), xb, params, cfg, n_total=len(xb),
+              k_ivf=8, m_tilde=2, n_pair_books=4)
+    return b
+
+
+def test_builder_interrupted_resume_matches_uninterrupted(world, tmp_path):
+    xb, cfg, params, _, q = world
+    # run A: killed after 2 of 4 shards, then resumed by a fresh builder
+    a = _make_builder(tmp_path / "a", xb, params, cfg)
+    assert not a.build(xb, max_shards=2)
+    assert not IndexStore(tmp_path / "a").manifest["complete"]
+    a2 = _make_builder(tmp_path / "a", xb, params, cfg)   # fresh "process"
+    assert a2.build(xb)
+    # run B: uninterrupted
+    b = _make_builder(tmp_path / "b", xb, params, cfg)
+    assert b.build(xb)
+    ia = IndexStore(tmp_path / "a").load()
+    ib = IndexStore(tmp_path / "b").load()
+    np.testing.assert_array_equal(np.asarray(ia.codes), np.asarray(ib.codes))
+    np.testing.assert_array_equal(np.asarray(ia.ivf.assignments),
+                                  np.asarray(ib.ivf.assignments))
+    i1, s1 = search.search(ia, q, cfg=cfg, **SEARCH_KW)
+    i2, s2 = search.search(ib, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_builder_rejects_unpackable_alphabet_early(tmp_path):
+    """K > 256 must fail in milliseconds (before the fit phase), not at
+    the first shard write hours later."""
+    cfg = tiny(K=512)
+    b = StreamingIndexBuilder(tmp_path / "k")
+    with pytest.raises(ValueError, match="256"):
+        b.prepare(jax.random.key(0), np.zeros((4, 16), np.float32), {},
+                  cfg, n_total=4)
+
+
+def test_partial_store_loads_completed_prefix(world, tmp_path):
+    """allow_partial on a genuinely half-built store: the completed shard
+    prefix loads and is searchable (regression: used to FileNotFoundError
+    on the first missing shard)."""
+    xb, cfg, params, _, _ = world
+    a = _make_builder(tmp_path / "a", xb, params, cfg)
+    assert not a.build(xb, max_shards=2)
+    partial = IndexStore(tmp_path / "a").load(allow_partial=True)
+    assert partial.codes.shape[0] == 600               # 2 shards x 300
+    q = jnp.asarray(xb[:5] + 0.02)
+    ids, _ = search.search(partial, q, cfg=cfg, **SEARCH_KW)
+    assert np.asarray(ids).max() < 600                 # prefix ids only
+
+
+def test_builder_m_tilde_zero_end_to_end(world, tmp_path):
+    """m_tilde=0 (no centroid RQ codes) must survive build -> load ->
+    search (regression: search() crashed on None centroid_codes)."""
+    xb, cfg, params, _, q = world
+    b = StreamingIndexBuilder(tmp_path / "z", shard_size=600,
+                              encode_chunk=256)
+    b.prepare(jax.random.key(5), xb, params, cfg, n_total=len(xb),
+              k_ivf=8, m_tilde=0, n_pair_books=4)
+    assert b.build(xb)
+    idx0 = IndexStore(tmp_path / "z").load()
+    assert idx0.ivf.centroid_codes is None
+    assert idx0.ext_codes.shape[1] == cfg.M            # degrades to codes
+    ids, dists = search.search(idx0, q, cfg=cfg, **SEARCH_KW)
+    assert np.isfinite(np.asarray(dists)).all()
+
+
+def test_builder_refuses_resume_on_different_database(world, tmp_path):
+    """Resuming a half-built store against a different same-length dataset
+    must fail instead of finalizing a mixed-content index."""
+    xb, cfg, params, _, _ = world
+    a = _make_builder(tmp_path / "a", xb, params, cfg)
+    assert not a.build(xb, max_shards=1)
+    other = np.asarray(xb) + 1.0                       # same shape, new data
+    a2 = _make_builder(tmp_path / "a", xb, params, cfg)
+    with pytest.raises(ValueError, match="different dataset"):
+        a2.build(other)
+    assert _make_builder(tmp_path / "a", xb, params, cfg).build(xb)
+
+
+def test_builder_resume_survives_stale_cursor(world, tmp_path):
+    """Killed between shard rename and cursor write: fill counts are
+    rebuilt from the on-disk shards (disk is ground truth)."""
+    xb, cfg, params, _, _ = world
+    a = _make_builder(tmp_path / "a", xb, params, cfg)
+    assert not a.build(xb, max_shards=2)
+    IndexStore(tmp_path / "a").cursor_path.unlink()       # lose the cursor
+    a2 = _make_builder(tmp_path / "a", xb, params, cfg)
+    assert a2.build(xb)
+    b = _make_builder(tmp_path / "b", xb, params, cfg)
+    assert b.build(xb)
+    ia = IndexStore(tmp_path / "a").load()
+    ib = IndexStore(tmp_path / "b").load()
+    np.testing.assert_array_equal(np.asarray(ia.codes), np.asarray(ib.codes))
+    np.testing.assert_array_equal(np.asarray(ia.aq_norms),
+                                  np.asarray(ib.aq_norms))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def test_search_server_matches_direct_search(world, tmp_path):
+    from repro.launch.serve_search import SearchServer, synthetic_stream
+    _, cfg, _, idx, q = world
+    srv = SearchServer(idx, micro_batch=8, topk=3, n_probe=4,
+                       n_short_aq=16, n_short_pw=8)
+    ids, dists = srv.search_batch(np.asarray(q)[:5])      # partial batch
+    ref_q = jnp.concatenate([q[:5], jnp.zeros((3, q.shape[1]))])
+    ref_ids, ref_d = search.search(idx, ref_q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(ids, np.asarray(ref_ids)[:5])
+    np.testing.assert_array_equal(dists, np.asarray(ref_d)[:5])
+    stats = srv.serve_stream(*synthetic_stream(idx, 24, 2000.0))
+    assert stats.n_queries == 24 and stats.n_batches >= 3
+    assert stats.p99_ms >= stats.p50_ms > 0
+    assert 0 < stats.mean_batch_occupancy <= 1

@@ -1,13 +1,19 @@
 """Encode/search throughput: the `kernels/ops` dispatch backends compared
-(xla reference path vs pallas kernels) on the two paper hot loops —
-beam-search encoding (§3.2) and ADC/pairwise candidate scoring (§3.3).
+(xla reference path vs pallas kernels) on the paper hot loops — beam-search
+encoding (§3.2), the fused f_theta step network it runs A*B times per
+vector per step, ADC/pairwise candidate scoring (§3.3), the fused
+adc_topk shortlist, and the full-decode re-rank (Fig. 3 step 4).
 
 On TPU the pallas column is the native-kernel path; on CPU it runs in
 interpret mode (expected to be much slower — the column is then a
-correctness/coverage signal, not a speed claim; the printed rows say which
-mode was measured).
+correctness/coverage signal, not a speed claim; every row records which
+mode was measured). `main(json_path=...)` writes the rows as
+machine-readable JSON so the perf trajectory has data points
+(`benchmarks/run.py --only backends` -> BENCH_kernels.json).
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +22,7 @@ import numpy as np
 from benchmarks.common import bench_data, timeit_us
 from repro.configs.qinco2 import tiny
 from repro.core import encode as enc
-from repro.core import training
+from repro.core import qinco, training
 from repro.kernels import ops
 
 BACKENDS = ("xla", "pallas")
@@ -40,37 +46,68 @@ def run(dim=16, M=4, K=16, n_db=2048, n_q=32, seed=0, *,
         rng.normal(size=(n_q, len(pairs), K * K)).astype(np.float32))
     r = jnp.asarray(rng.normal(size=(1024, dim)).astype(np.float32))
     cb = params["pre_codebooks"][0]
+    fm = qinco.step_params_at(params, 0)
+    fcb = params["codebooks"][0]
+    # fused-op shapes: a beam-expansion tile and a re-rank decode batch
+    n_f = 1024
+    c_rows = jnp.asarray(rng.normal(size=(n_f, dim)).astype(np.float32))
+    x_rows = jnp.asarray(rng.normal(size=(n_f, dim)).astype(np.float32))
+    eidx = jnp.asarray(
+        rng.integers(0, K, size=(256, 8)).astype(np.int32))   # (NB, A)
+    ex = jnp.asarray(rng.normal(size=(256, dim)).astype(np.float32))
+    dcodes = codes[:512]
 
     rows = []
+
+    def add(op, be, t_us, n):
+        rows.append({"op": op, "backend": be,
+                     "mode": mode if be == "pallas" else "-",
+                     "us_per_vec": t_us / n})
+
     for be in backends:
-        tag = f"{be}" if be == "xla" else f"{be}/{mode}"
         t = timeit_us(lambda x: enc.encode(params, x, cfg, 8, 8,
                                            backend=be)[0], xbj, reps=reps)
-        rows.append({"op": "encode(A=8,B=8)", "backend": tag,
-                     "us_per_vec": t / len(xbj)})
+        add("encode(A=8,B=8)", be, t, len(xbj))
         t = timeit_us(lambda rr: ops.l2_topk(rr, cb, 8, backend=be)[0], r,
                       reps=reps)
-        rows.append({"op": "l2_topk(A=8)", "backend": tag,
-                     "us_per_vec": t / len(r)})
+        add("l2_topk(A=8)", be, t, len(r))
+        t = timeit_us(lambda cc, xx: ops.f_theta(fm, cc, xx, backend=be),
+                      c_rows, x_rows, reps=reps)
+        add(f"f_theta({n_f})", be, t, n_f)
+        t = timeit_us(lambda ii, xx: ops.f_theta(fm, fcb, xx, idx=ii,
+                                                 backend=be),
+                      eidx, ex, reps=reps)
+        add("f_theta_gather(256x8)", be, t, eidx.shape[0] * eidx.shape[1])
+        t = timeit_us(lambda c: qinco.decode(params, c, cfg, backend=be),
+                      dcodes, reps=reps)
+        add(f"decode({len(dcodes)})", be, t, len(dcodes))
         t = timeit_us(lambda c: ops.adc_scores(c, lut, norms=norms,
                                                backend=be), codes, reps=reps)
-        rows.append({"op": f"adc_scores({n_q}x{n_db})", "backend": tag,
-                     "us_per_vec": t / n_db})
+        add(f"adc_scores({n_q}x{n_db})", be, t, n_db)
+        t = timeit_us(lambda c: ops.adc_topk(c, lut, 16, norms=norms,
+                                             backend=be)[0], codes,
+                      reps=reps)
+        add(f"adc_topk({n_q}x{n_db},k=16)", be, t, n_db)
         t = timeit_us(lambda c: ops.pairwise_scores(c, plut, pairs, K,
                                                     backend=be), codes,
                       reps=reps)
-        rows.append({"op": f"pairwise_scores({n_q}x{n_db})", "backend": tag,
-                     "us_per_vec": t / n_db})
+        add(f"pairwise_scores({n_q}x{n_db})", be, t, n_db)
     return rows
 
 
-def main(fast=True):
+def main(fast=True, json_path=None):
     rows = run(n_db=1024 if fast else 8192, reps=2 if fast else 5)
-    print("op,backend,us_per_vec")
+    print("op,backend,mode,us_per_vec")
     for r in rows:
-        print(f"{r['op']},{r['backend']},{r['us_per_vec']:.3f}")
+        print(f"{r['op']},{r['backend']},{r['mode']},"
+              f"{r['us_per_vec']:.3f}")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump({"device": jax.default_backend(), "rows": rows}, f,
+                      indent=2)
+        print(f"[kernel_backends] wrote {json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    main(fast=False, json_path="BENCH_kernels.json")

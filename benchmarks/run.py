@@ -85,10 +85,14 @@ def _f6(fast):
 def _backends(fast):
     from benchmarks import kernel_backends as kb
     print("\n== ops dispatch: xla vs pallas backends ==")
-    rows = kb.main(fast=fast)
+    rows = kb.main(fast=fast, json_path="BENCH_kernels.json")
     xla_enc = [r for r in rows
                if r["op"].startswith("encode") and r["backend"] == "xla"]
-    return f"encode_xla={xla_enc[0]['us_per_vec']:.1f}us/vec"
+    fused = [r for r in rows
+             if r["op"].startswith("f_theta(") and r["backend"] == "xla"]
+    return (f"encode_xla={xla_enc[0]['us_per_vec']:.1f}us/vec;"
+            f"f_theta_xla={fused[0]['us_per_vec']:.2f}us/vec;"
+            f"json=BENCH_kernels.json")
 
 
 def _index(fast):

@@ -43,6 +43,13 @@ finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
 
+# kernel-backend smoke: xla vs pallas per-op timings for every dispatch op
+# (incl. the fused f_theta / adc_topk paths) -> BENCH_kernels.json, so each
+# CI run leaves a machine-readable perf data point
+python -m benchmarks.run --only backends
+test -s BENCH_kernels.json \
+    && echo "[ci] kernel backends smoke OK (BENCH_kernels.json written)"
+
 if [ "${QUICK:-0}" = "1" ]; then
     exec python -m pytest -q -m "not slow" "$@"
 fi

@@ -62,7 +62,18 @@ def preselect(gm, r, xhat, pre_cb, A: int, cfg: QincoConfig,
     if A >= cfg.K:      # exhaustive: the candidate list is the identity
         return jnp.broadcast_to(jnp.arange(cfg.K), (N, Bb, cfg.K))
     if cfg.Ls >= 1 and gm is not None:
-        cand = qinco.f_apply(gm, pre_cb, xhat[..., None, :], cfg)  # (N,B,K,d)
+        if ops.resolve_backend(backend) == "pallas":
+            # indexed-form ops.f_theta: ship (N, B, K) int32 indices and
+            # gather in-kernel, instead of broadcast-materializing the
+            # (N, B, K, d) candidate tensor into HBM for the kernel launch
+            idx_all = jnp.broadcast_to(jnp.arange(cfg.K), (N, Bb, cfg.K))
+            cand = ops.f_theta(gm, pre_cb, xhat, idx=idx_all,
+                               backend=backend)             # (N, B, K, d)
+        else:
+            # gathered form: the shared (K, d) pre-codebook is in-projected
+            # once, then broadcast against the (N, B, 1, d) beam
+            cand = ops.f_theta(gm, pre_cb, xhat[..., None, :],
+                               backend=backend)             # (N, B, K, d)
         d2 = jnp.sum(jnp.square(r[..., None, :] - cand), axis=-1)
         _, idx = lax.top_k(-d2, A)
         return idx
@@ -87,8 +98,11 @@ def _beam_step(state: BeamState, xs, *, x, cfg: QincoConfig, A: int, B: int,
     N, Bb, d = state.xhat.shape
     r = x[:, None, :] - state.xhat                        # (N, B, d)
     idx = preselect(xs.get("g"), r, state.xhat, xs["pre"], A, cfg, backend)
-    cand = xs["cb"][idx]                                  # (N, B, A, d)
-    f_out = qinco.f_apply(xs["f"], cand, state.xhat[..., None, :], cfg)
+    # indexed-form ops.f_theta: the A*B expansion is one flattened tiled
+    # launch — the codebook gather happens inside the kernel, so only the
+    # (N, B, A) indices cross HBM, never a (N, B, A, d) candidate tensor
+    f_out = ops.f_theta(xs["f"], xs["cb"], state.xhat, idx=idx,
+                        backend=backend)                  # (N, B, A, d)
     new_xhat = state.xhat[..., None, :] + f_out           # (N, B, A, d)
     new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
     # expansions of not-yet-populated beams must not be selectable

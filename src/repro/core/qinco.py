@@ -24,6 +24,7 @@ import numpy as np
 from jax import lax
 
 from repro.configs.qinco2 import QincoConfig
+from repro.kernels import ops
 from repro.models.common import ParamSpec, init_params, is_spec
 
 
@@ -82,36 +83,23 @@ def init_from_rq(params, rq_codebooks, key, noise: float = 0.025):
 # ---------------------------------------------------------------------------
 
 
-def f_apply(step_params, c, xhat, cfg: QincoConfig):
+def f_apply(step_params, c, xhat, cfg: QincoConfig, *,
+            backend: str = "auto"):
     """f_theta^m. c: (..., d); xhat: (..., d) -> (..., d).
 
     Batch dims of c and xhat broadcast jointly (the encoder passes
     c=(N,B,A,d) against xhat=(N,B,1,d); the L_s>=1 pre-selector passes
-    c=(1,1,K,d))."""
-    p = step_params
-    if "in_proj" in p:
-        c_emb = c @ p["in_proj"]
-    else:
-        c_emb = c
-    bshape = jnp.broadcast_shapes(c_emb.shape[:-1], xhat.shape[:-1])
-    c_emb = jnp.broadcast_to(c_emb, bshape + c_emb.shape[-1:])
-    xb = jnp.broadcast_to(xhat, bshape + (cfg.d,))
-    v = c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ p["concat_w"] \
-        + p["concat_b"]
-
-    def block(v, wb):
-        w1, w2 = wb
-        return v + jax.nn.relu(v @ w1) @ w2, None
-
-    v, _ = lax.scan(block, v, (p["blocks_w1"], p["blocks_w2"]))
-    if "out_proj" in p:
-        return c + v @ p["out_proj"]
-    return c + v
+    c=(1,1,K,d)). Dispatches through `kernels/ops.f_theta` — the fused
+    Pallas step-network kernel on the kernel backend, the historical
+    (bit-identical) jnp path on ``backend="xla"``.
+    """
+    return ops.f_theta(step_params, c, xhat, backend=backend)
 
 
-def g_apply(params, m_params_g, c, xhat, cfg: QincoConfig):
+def g_apply(params, m_params_g, c, xhat, cfg: QincoConfig, *,
+            backend: str = "auto"):
     """g_phi^m (only for L_s >= 1)."""
-    return f_apply(m_params_g, c, xhat, cfg)
+    return f_apply(m_params_g, c, xhat, cfg, backend=backend)
 
 
 def step_params_at(params, m):
@@ -124,30 +112,42 @@ def step_params_at(params, m):
 # ---------------------------------------------------------------------------
 
 
-def decode(params, codes, cfg: QincoConfig):
-    """codes: (N, M) int32 -> (N, d) reconstruction."""
+def decode(params, codes, cfg: QincoConfig, *, backend: str = "auto"):
+    """codes: (N, M) int (uint8 packed or int32) -> (N, d) reconstruction.
+
+    Each step runs the indexed form of `ops.f_theta`: the per-step code
+    column goes into the kernel as indices (packed uint8 stays uint8 on
+    the wire) and the codebook gather happens in-kernel.
+    """
     N = codes.shape[0]
     xhat0 = jnp.zeros((N, cfg.d), jnp.float32)
 
     def step(xhat, xs):
         fm, cb, idx = xs
-        c = cb[idx]                               # (N, d)
-        return xhat + f_apply(fm, c, xhat, cfg), None
+        f = ops.f_theta(fm, cb, xhat, idx=idx[:, None],
+                        backend=backend)[:, 0]    # (N, d)
+        return xhat + f, None
 
     xhat, _ = lax.scan(step, xhat0,
                        (params["f"], params["codebooks"], codes.T))
     return xhat
 
 
-def decode_partial(params, codes, cfg: QincoConfig):
+def decode_partial(params, codes, cfg: QincoConfig, *,
+                   backend: str = "xla"):
     """Per-step reconstructions (N, M, d) — used for training loss and the
-    dynamic-rate evaluation (paper Fig. S3)."""
+    dynamic-rate evaluation (paper Fig. S3).
+
+    Defaults to the xla backend: this is the differentiated path
+    (`encode.train_forward` takes its gradient) and the fused Pallas
+    forward kernel defines no VJP.
+    """
     N = codes.shape[0]
     xhat0 = jnp.zeros((N, cfg.d), jnp.float32)
 
     def step(xhat, xs):
         fm, cb, idx = xs
-        new = xhat + f_apply(fm, cb[idx], xhat, cfg)
+        new = xhat + f_apply(fm, cb[idx], xhat, cfg, backend=backend)
         return new, new
 
     _, traj = lax.scan(step, xhat0,

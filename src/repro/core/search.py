@@ -172,8 +172,12 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
     _, keep2 = jax.lax.top_k(score2, n_short_pw)
     ids2 = jnp.take_along_axis(ids1, keep2, axis=1)       # (Q, n_short_pw)
     # 4. full QINCo2 decode + exact distance ---------------------------------
+    # the decode scan re-ranks through the indexed ops.f_theta kernel: the
+    # shortlist's packed code columns go in as uint8 indices, the codebook
+    # gather + step network run fused per step
     flat = ids2.reshape(-1)
-    recon = qinco.decode(index.qinco_params, index.codes[flat], cfg)
+    recon = qinco.decode(index.qinco_params, index.codes[flat], cfg,
+                         backend=backend)
     recon = recon + index.ivf.centroids[index.ivf.assignments[flat]]
     recon = recon.reshape(Q, n_short_pw, -1)
     d2 = jnp.sum(jnp.square(q[:, None, :] - recon), axis=-1)
@@ -188,26 +192,29 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
 
 def make_distributed_adc(mesh, model_axis: str = "model",
                          backend: str = "auto"):
-    """Per-shard ADC top-k + all-gather merge, as a shard_map collective.
+    """Per-shard fused ADC+top-k + all-gather merge, as a shard_map
+    collective.
 
     db_codes: (N, M) sharded over `model_axis`; lut: (Q, M, K) replicated;
     norms: (N,) sharded. Returns (Q, k) global ids + scores. Each shard
-    scans its slice with the SAME shared-codes `ops.adc_scores` path as
-    local search, then merges shortlists via `collectives.distributed_topk`
-    (wire cost 2*Q*k instead of Q*N)."""
+    runs the fused `ops.adc_topk` kernel over its slice — the per-shard
+    (Q, N_loc) score matrix never leaves VMEM before shortlisting — then
+    the (Q, k) local lists merge via `collectives.merge_topk` (wire cost
+    2*Q*k instead of Q*N)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.parallel import compat
-    from repro.parallel.collectives import distributed_topk
+    from repro.parallel.collectives import merge_topk
 
     def fn(lut, db_codes, norms, k: int):
         nshard = mesh.shape[model_axis]
         nloc = db_codes.shape[0] // nshard
 
         def inner(lut, codes, norms):
-            scores = ops.adc_scores(codes, lut, norms=norms, backend=backend)
+            vals, loc = ops.adc_topk(codes, lut, k, norms=norms,
+                                     backend=backend)
             base = jax.lax.axis_index(model_axis) * nloc
-            return distributed_topk(scores, base, k, model_axis)
+            return merge_topk(vals, base + loc, k, model_axis)
 
         return compat.shard_map(
             inner, mesh=mesh,

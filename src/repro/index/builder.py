@@ -44,9 +44,18 @@ from repro.index.store import IndexStore
 
 
 class StreamingIndexBuilder:
+    """``backend`` selects the `kernels/ops` dispatch for the whole build
+    — the beam-search expansion inside `encode_dataset` runs through the
+    fused `ops.f_theta` kernel on TPU. ``tile_table`` (a
+    `kernels/tuning.py` JSON artifact) applies autotuned per-op tile
+    sizes before the first chunk compiles."""
+
     def __init__(self, directory, *, shard_size: int = 1 << 16,
                  encode_chunk: int = 4096, backend: str = "auto",
-                 verbose: bool = False):
+                 tile_table=None, verbose: bool = False):
+        if tile_table is not None:
+            from repro.kernels import tuning
+            tuning.load(tile_table)
         self.store = IndexStore(directory)
         self.shard_size = shard_size
         self.encode_chunk = encode_chunk

@@ -10,11 +10,18 @@ Layout (the dispatch contract — see `ops.py` for the full statement):
   - ``ref.py``     pure-jnp reference implementations: the oracles the
                    kernel tests compare against AND the ``backend="xla"``
                    fallbacks used on CPU/GPU.
+  - ``tuning.py``  the per-op tile-size table (autotune / save / load) —
+                   ops resolve their default tiles here.
   - ``l2_topk.py``        fused L2 distance + top-A pre-selection (Eq. 6).
   - ``adc_onehot.py``     one-hot MXU ADC scan, shared-codes and per-query
                           batched variants (Fig. 3; also serves the K^2
                           pairwise alphabet via `ops.pairwise_scores`).
-  - ``resmlp.py``         chained residual-MLP blocks of f_theta.
+  - ``adc_topk.py``       fused ADC scan + running local top-k: the score
+                          matrix never leaves VMEM before shortlisting
+                          (the distributed per-shard path).
+  - ``resmlp.py``         the fused f_theta step network (gather + concat
+                          projection + residual chain + in/out projections
+                          in one pallas_call) and the bare residual chain.
   - ``kv_dequant_attn.py`` decode attention over an RQ-compressed KV cache.
 
 Kernels compile natively on TPU and run with ``interpret=True`` elsewhere;

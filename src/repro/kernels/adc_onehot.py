@@ -31,18 +31,29 @@ def _code_wire_dtype(codes):
     return codes.astype(jnp.int32)
 
 
-def _kernel(codes_ref, lut_ref, out_ref):
-    codes = codes_ref[...].astype(jnp.int32)              # (TN, M)
-    lut = lut_ref[...].astype(jnp.float32)                # (TQ, M*K)
+def score_tile(codes, lut_flat):
+    """One (TQ, TN) ADC score tile: codes (TN, M) int (widened in-VMEM),
+    lut_flat (TQ, M*K) -> lut_flat @ onehot(codes).T on the MXU.
+
+    The shared kernel-body primitive for the shared-codes scan here AND
+    the fused `kernels/adc_topk.py` — both MUST compute score tiles
+    through this one function so the fused == unfused bitwise contract
+    is structural, not coincidental."""
+    codes = codes.astype(jnp.int32)
+    lut = lut_flat.astype(jnp.float32)
     tn, M = codes.shape
     MK = lut.shape[1]
     K = MK // M
     codes_b = jnp.broadcast_to(codes[:, :, None], (tn, M, K))
     kio = jax.lax.broadcasted_iota(jnp.int32, (tn, M, K), 2)
     onehot = (codes_b == kio).astype(jnp.float32).reshape(tn, MK)
-    out_ref[...] = jax.lax.dot_general(
+    return jax.lax.dot_general(
         lut, onehot, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)               # (TQ, TN)
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    out_ref[...] = score_tile(codes_ref[...], lut_ref[...])
 
 
 def _kernel_batched(codes_ref, lut_ref, out_ref):

@@ -1,0 +1,112 @@
+"""Fused ADC scoring + running local top-k (ROADMAP: 'scores never leave
+VMEM before shortlisting').
+
+The shared-codes ADC scan (`adc_onehot.adc_scores`) writes the full (Q, N)
+score matrix to HBM and then runs `lax.top_k` over it — at billion scale
+the score matrix is far larger than the shortlist that survives it. This
+kernel fuses the reduction into the scan: the grid is (Q_tiles, N_tiles)
+with N innermost (sequential on TPU), each step computes one (TQ, TN)
+score tile on the MXU exactly as `adc_scores` does, and merges it into a
+running (TQ, k) top-k held in a revisited output block. Only 2*Q*k values
+ever reach HBM — the shape the distributed per-shard search path ships
+over the wire anyway (`collectives.distributed_topk`).
+
+Selection is k sequential masked argmaxes (the `l2_topk` idiom — no sort,
+no gather: the winning global index is recovered by a masked sum). Because
+the running list keeps equal-valued entries in ascending-index order and
+earlier tiles precede later ones in the merge candidates, ties resolve
+lowest-index-first — bit-identical to `lax.top_k` over the full matrix.
+
+Codes may be packed uint8 (K <= 256): the packed bytes are what crosses
+HBM -> VMEM, widened in-kernel before the iota comparison.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adc_onehot import score_tile
+
+
+def _kernel(*refs, k: int, N: int, tile_n: int, has_norms: bool):
+    if has_norms:
+        codes_ref, lut_ref, norms_ref, v_ref, i_ref = refs
+    else:
+        codes_ref, lut_ref, v_ref, i_ref = refs
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        v_ref[...] = jnp.full(v_ref.shape, -jnp.inf, jnp.float32)
+        i_ref[...] = jnp.zeros(i_ref.shape, jnp.int32)
+
+    # one (TQ, TN) score tile through the SAME body as adc_onehot's scan
+    # (shared helper: fused == unfused stays bitwise by construction)
+    s = score_tile(codes_ref[...], lut_ref[...])
+    if has_norms:
+        s = 2.0 * s - norms_ref[...]                      # (1, TN) broadcast
+    gidx = ni * tile_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(gidx < N, s, -jnp.inf)                  # padded rows out
+
+    # -- merge into the running top-k (k masked argmaxes on the VPU) --------
+    cand_v = jnp.concatenate([v_ref[...], s], axis=1)     # (TQ, k + TN)
+    cand_i = jnp.concatenate([i_ref[...], gidx], axis=1)
+    pio = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
+    for a in range(k):                                    # static unroll
+        val = jnp.max(cand_v, axis=1)
+        arg = jnp.argmax(cand_v, axis=1).astype(jnp.int32)
+        hit = pio == arg[:, None]
+        v_ref[:, a] = val
+        i_ref[:, a] = jnp.sum(jnp.where(hit, cand_i, 0), axis=1)
+        cand_v = jnp.where(hit, -jnp.inf, cand_v)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n",
+                                             "interpret"))
+def adc_topk(codes, lut, k: int, *, norms=None, tile_q: int = 64,
+             tile_n: int = 256, interpret: bool = True):
+    """codes: (N, M) int (uint8 or int32); lut: (Q, M, K); k <= N ->
+    (vals (Q, k) f32 descending, ids (Q, k) int32). With ``norms`` the
+    merged values are the score surrogate ``2 * ip - norms``."""
+    N, M = codes.shape
+    Q, _, K = lut.shape
+    tile_q = min(tile_q, Q)
+    tile_n = min(tile_n, N)
+    pq, pn = (-Q) % tile_q, (-N) % tile_n
+    if pq:
+        lut = jnp.pad(lut, ((0, pq), (0, 0), (0, 0)))
+    if pn:
+        codes = jnp.pad(codes, ((0, pn), (0, 0)))
+    if codes.dtype != jnp.uint8:
+        codes = codes.astype(jnp.int32)
+    lut_flat = lut.reshape(Q + pq, M * K)
+    ins = [codes, lut_flat]
+    in_specs = [
+        pl.BlockSpec((tile_n, M), lambda qi, ni: (ni, 0)),
+        pl.BlockSpec((tile_q, M * K), lambda qi, ni: (qi, 0)),
+    ]
+    if norms is not None:
+        nrm = norms.reshape(1, N).astype(jnp.float32)
+        if pn:
+            nrm = jnp.pad(nrm, ((0, 0), (0, pn)))
+        ins.append(nrm)
+        in_specs.append(pl.BlockSpec((1, tile_n), lambda qi, ni: (0, ni)))
+    vals, ids = pl.pallas_call(
+        functools.partial(_kernel, k=k, N=N, tile_n=tile_n,
+                          has_norms=norms is not None),
+        grid=((Q + pq) // tile_q, (N + pn) // tile_n),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((tile_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q + pq, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q + pq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*ins)
+    return vals[:Q], ids[:Q]

@@ -19,34 +19,54 @@ Contract highlights:
 
   - Input padding/tiling is handled HERE, once. Callers may pass any
     N/Q/C — not just tile multiples; outputs are sliced back to caller
-    shapes and padded rows never leak into results.
+    shapes and padded rows never leak into results. Empty inputs (any
+    zero-sized batch dim) return early with correctly-shaped empties —
+    no op may divide by a degenerate tile size.
+  - Tile sizes default to the per-op `kernels/tuning.py` table (the one
+    place TPU autotuning writes results); explicit arguments still win.
+    Resolution happens in the non-jitted facade wrapper, at call time —
+    so `tuning.load`/`set_tiles` affects the NEXT call (fresh jit key on
+    the concrete tile ints) instead of being baked into a stale
+    executable keyed on tile=None.
   - Scoring ops accept an optional ``norms`` operand and then return the
     asymmetric-distance surrogate ``2 * <q, xhat> - ||xhat||^2`` directly,
     so callers never re-implement score assembly.
   - `adc_scores` dispatches on the codes rank: ``(N, M)`` scores every
     query against a shared code matrix (database scan, one (Q, N) tile
     grid); ``(Q, C, M)`` scores each query against its own candidate list
-    (IVF shortlists, batched one-hot matvec).
+    (IVF shortlists, batched one-hot matvec). `adc_topk` is the fused
+    shared-codes variant that reduces each score tile to a running local
+    top-k without leaving VMEM (the distributed per-shard shape).
   - Codes may be **packed uint8** (K <= 256; see `index/codes.py`) or
     int32 — results are bit-identical. On the pallas path the packed
     bytes are what crosses HBM -> VMEM (4x less wire than int32); the
-    widening to int32 happens inside the kernel body.
+    widening to int32 happens inside the kernel body. The same rule
+    applies to `f_theta`'s candidate indices.
   - `pairwise_scores` reuses the same one-hot ADC machinery on the
     K^2-alphabet combined codes of the pairwise decoder (paper Eq. 8-9):
     bucket indices i*K+j are formed here and fed to the ADC backend.
+  - `f_theta` is the QINCo2 step network (Eq. 10-13) — gather, concat
+    projection, residual chain, and in/out projections fused into one
+    `pallas_call` on the kernel backend, bit-identical to the historical
+    `qinco.f_apply` jnp path on the xla backend. Every step-network hot
+    path (beam expansion, decode, re-ranking) dispatches through it.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import adc_onehot as _adc
+from repro.kernels import adc_topk as _adct
 from repro.kernels import kv_dequant_attn as _kva
 from repro.kernels import l2_topk as _l2
 from repro.kernels import ref as _ref
 from repro.kernels import resmlp as _rm
+from repro.kernels import tuning
 
 BACKENDS = ("auto", "pallas", "xla", "xla_onehot")
 
@@ -78,15 +98,99 @@ def _interpret() -> bool:
 
 
 @partial(jax.jit, static_argnames=("A", "backend", "tile_n", "interpret"))
-def l2_topk(r, cb, A: int, *, backend: str = "auto", tile_n: int = 256,
-            interpret: bool | None = None):
-    """r: (N, d); cb: (K, d) -> (idx (N, A) int32, d2 (N, A)) ascending."""
+def _l2_topk_impl(r, cb, A: int, *, backend, tile_n, interpret):
     A = min(A, cb.shape[0])
+    if r.shape[0] == 0 or A == 0:
+        return (jnp.zeros((r.shape[0], A), jnp.int32),
+                jnp.zeros((r.shape[0], A), jnp.float32))
     if resolve_backend(backend) != "pallas":
         return _ref.l2_topk_ref(r, cb, A)
     if interpret is None:
         interpret = _interpret()
     return _l2.l2_topk(r, cb, A, tile_n=tile_n, interpret=interpret)
+
+
+def l2_topk(r, cb, A: int, *, backend: str = "auto", tile_n: int = None,
+            interpret: bool | None = None):
+    """r: (N, d); cb: (K, d) -> (idx (N, A) int32, d2 (N, A)) ascending."""
+    # tile sizes resolve HERE, outside the jit cache, so a tuning.load /
+    # set_tiles takes effect on the next call rather than being baked
+    # into an executable keyed on tile=None (same pattern for every op)
+    return _l2_topk_impl(r, cb, A, backend=backend,
+                         tile_n=tuning.tile("l2_topk", "tile_n", tile_n),
+                         interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Step network f_theta (paper Eq. 10-13; beam expansion / decode hot loop)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend", "tile_n", "interpret"))
+def _f_theta_impl(step_params, c, xhat, *, idx, backend, tile_n,
+                  interpret):
+    p = step_params
+    d = xhat.shape[-1]
+    L = p["blocks_w1"].shape[0]
+    be = resolve_backend(backend)
+    if interpret is None:
+        interpret = _interpret()
+    if idx is None:
+        bshape = jnp.broadcast_shapes(c.shape[:-1], xhat.shape[:-1])
+        n = math.prod(bshape)
+        if be != "pallas" or n == 0 or L == 0:
+            return _ref.f_theta_ref(p, c, xhat)
+        cf = jnp.broadcast_to(c, bshape + (d,)).reshape(n, d)
+        xf = jnp.broadcast_to(xhat, bshape + (d,)).reshape(n, d)
+        out = _rm.f_theta_fused(
+            cf, xf, p["concat_w"], p["concat_b"], p["blocks_w1"],
+            p["blocks_w2"], p.get("in_proj"), p.get("out_proj"),
+            tile_n=tile_n, interpret=interpret)
+        return out.reshape(bshape + (d,))
+    A = idx.shape[-1]
+    lead = idx.shape[:-1]
+    n = math.prod(lead)
+    if be != "pallas" or n == 0 or A == 0 or L == 0:
+        return _ref.f_theta_gather_ref(p, c, idx, xhat)
+    out = _rm.f_theta_gather(
+        idx.reshape(n, A), c, xhat.reshape(n, d), p["concat_w"],
+        p["concat_b"], p["blocks_w1"], p["blocks_w2"], p.get("in_proj"),
+        p.get("out_proj"), tile_n=tile_n, interpret=interpret)
+    return out.reshape(lead + (A, d))
+
+
+def f_theta(step_params, c, xhat, *, idx=None, backend: str = "auto",
+            tile_n: int = None, interpret: bool | None = None):
+    """Fused QINCo2 step network f_theta^m. Two call forms:
+
+    gathered (``idx=None``): c (..., d) candidates broadcast jointly with
+        xhat (..., d) -> (..., d). The in-projection runs BEFORE the
+        broadcast on the xla path (a shared (K, d) candidate list is
+        projected once — the L_s >= 1 pre-selector shape). The pallas
+        path flattens the broadcast into one (N', d) tiled launch and
+        projects per row: for heavily-broadcast shared candidates prefer
+        the indexed form (broadcast `arange(K)` indices), which ships
+        4-byte indices instead of d-float rows.
+
+    indexed (``idx`` given): c = codebook (K, d); idx (..., A) int (uint8
+        packed or int32) with idx.shape[:-1] == xhat.shape[:-1]; xhat
+        (..., d) -> (..., A, d) = f(codebook[idx], xhat[..., None, :]).
+        On the pallas path the codebook gather happens in-kernel, so only
+        the indices — never the (..., A, d) candidate expansion — cross
+        HBM. This is the beam-search expansion / decode / re-rank form.
+
+    ``backend="xla"`` is bit-identical to the pre-refactor
+    `qinco.f_apply`; both backends keep every intermediate of one row tile
+    resident across the concat/residual/projection stages.
+    """
+    if idx is not None and idx.shape[:-1] != xhat.shape[:-1]:
+        raise ValueError(f"indexed f_theta wants idx (..., A) matching "
+                         f"xhat (..., d) batch dims; got {idx.shape} vs "
+                         f"{xhat.shape}")
+    op = "f_theta" if idx is None else "f_theta_gather"
+    return _f_theta_impl(step_params, c, xhat, idx=idx, backend=backend,
+                         tile_n=tuning.tile(op, "tile_n", tile_n),
+                         interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -96,22 +200,16 @@ def l2_topk(r, cb, A: int, *, backend: str = "auto", tile_n: int = 256,
 
 @partial(jax.jit, static_argnames=("backend", "tile_q", "tile_n",
                                    "interpret"))
-def adc_scores(codes, lut, *, norms=None, backend: str = "auto",
-               tile_q: int = 64, tile_n: int = 256,
-               interpret: bool | None = None):
-    """Additive-decoder inner products (one-hot MXU form on the pallas
-    path, gather form on the xla fallback).
-
-    codes (N, M) uint8|int32, lut (Q, M, K)    -> (Q, N)  [shared codes]
-    codes (Q, C, M) uint8|int32, lut (Q, M, K) -> (Q, C)  [per-query codes]
-
-    With ``norms`` (||xhat||^2, shaped (N,) or (Q, C) to match) the result
-    is the score ``2 * ip - norms``; otherwise the raw inner products.
-    """
+def _adc_scores_impl(codes, lut, *, norms, backend, tile_q, tile_n,
+                     interpret):
     be = resolve_backend(backend)
     if interpret is None:
         interpret = _interpret()
     if codes.ndim == 2:
+        N, M = codes.shape
+        Q = lut.shape[0]
+        if N == 0 or Q == 0 or M == 0:
+            return jnp.zeros((Q, N), jnp.float32)
         if be == "xla":
             ip = _ref.adc_ref(codes, lut)
         elif be == "xla_onehot":
@@ -122,17 +220,79 @@ def adc_scores(codes, lut, *, norms=None, backend: str = "auto",
         if norms is not None:
             return 2.0 * ip - norms[None, :]
         return ip
-    if codes.ndim != 3:
-        raise ValueError(f"codes must be (N, M) or (Q, C, M); got "
-                         f"{codes.shape}")
+    Q, C, M = codes.shape
+    if Q == 0 or C == 0 or M == 0:
+        return jnp.zeros((Q, C), jnp.float32)
     if be in ("xla", "xla_onehot"):
         ip = _ref.adc_batched_ref(codes, lut)
     else:
-        ip = _adc.adc_scores_batched(codes, lut, tile_q=min(tile_q, 8),
+        ip = _adc.adc_scores_batched(codes, lut, tile_q=tile_q,
                                      tile_c=tile_n, interpret=interpret)
     if norms is not None:
         return 2.0 * ip - norms
     return ip
+
+
+def adc_scores(codes, lut, *, norms=None, backend: str = "auto",
+               tile_q: int = None, tile_n: int = None,
+               interpret: bool | None = None):
+    """Additive-decoder inner products (one-hot MXU form on the pallas
+    path, gather form on the xla fallback).
+
+    codes (N, M) uint8|int32, lut (Q, M, K)    -> (Q, N)  [shared codes]
+    codes (Q, C, M) uint8|int32, lut (Q, M, K) -> (Q, C)  [per-query codes]
+
+    With ``norms`` (||xhat||^2, shaped (N,) or (Q, C) to match) the result
+    is the score ``2 * ip - norms``; otherwise the raw inner products.
+    """
+    if codes.ndim == 2:
+        tile_q = tuning.tile("adc_scores", "tile_q", tile_q)
+        tile_n = tuning.tile("adc_scores", "tile_n", tile_n)
+    elif codes.ndim == 3:
+        tile_q = tuning.tile("adc_scores_batched", "tile_q", tile_q)
+        tile_n = tuning.tile("adc_scores_batched", "tile_c", tile_n)
+    else:
+        raise ValueError(f"codes must be (N, M) or (Q, C, M); got "
+                         f"{codes.shape}")
+    return _adc_scores_impl(codes, lut, norms=norms, backend=backend,
+                            tile_q=tile_q, tile_n=tile_n,
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "backend", "tile_q", "tile_n",
+                                   "interpret"))
+def _adc_topk_impl(codes, lut, k, *, norms, backend, tile_q, tile_n,
+                   interpret):
+    N = codes.shape[0]
+    Q = lut.shape[0]
+    k = min(k, N)
+    if N == 0 or Q == 0 or k == 0:
+        return (jnp.full((Q, k), -jnp.inf, jnp.float32),
+                jnp.zeros((Q, k), jnp.int32))
+    if resolve_backend(backend) != "pallas":
+        return _ref.adc_topk_ref(codes, lut, k, norms=norms)
+    if interpret is None:
+        interpret = _interpret()
+    return _adct.adc_topk(codes, lut, k, norms=norms, tile_q=tile_q,
+                          tile_n=tile_n, interpret=interpret)
+
+
+def adc_topk(codes, lut, k: int, *, norms=None, backend: str = "auto",
+             tile_q: int = None, tile_n: int = None,
+             interpret: bool | None = None):
+    """Fused shared-codes ADC scan + local top-k shortlist.
+
+    codes (N, M) uint8|int32; lut (Q, M, K) -> (vals (Q, k') f32
+    descending, ids (Q, k') int32) with k' = min(k, N). On the pallas
+    path the (Q, N) score matrix never reaches HBM: each (TQ, TN) tile is
+    merged into a running per-query top-k inside VMEM. Tie-breaking is
+    lowest-index-first on both backends (the `lax.top_k` contract).
+    With ``norms`` the merged values are ``2 * ip - norms``.
+    """
+    return _adc_topk_impl(codes, lut, k, norms=norms, backend=backend,
+                          tile_q=tuning.tile("adc_topk", "tile_q", tile_q),
+                          tile_n=tuning.tile("adc_topk", "tile_n", tile_n),
+                          interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -144,18 +304,19 @@ def pairwise_buckets(codes, pairs, K: int):
     """Combined codes I^{i,j} = I^i * K + I^j over the selected column
     pairs. codes (..., M_all) int -> (..., M') int32 with alphabet K^2.
 
-    Codes are widened BEFORE the multiply: packed uint8 columns would
-    wrap at 256 (the K^2 alphabet needs up to 16 bits)."""
+    One fused gather per operand (`take` over the static pair index
+    arrays) instead of 2*M' per-pair slices + a stack. Codes are widened
+    BEFORE the multiply: packed uint8 columns would wrap at 256 (the K^2
+    alphabet needs up to 16 bits)."""
     codes = codes.astype(jnp.int32)
-    return jnp.stack([codes[..., i] * K + codes[..., j] for i, j in pairs],
-                     axis=-1)
+    pi = jnp.asarray(np.array([i for i, _ in pairs], np.int32))
+    pj = jnp.asarray(np.array([j for _, j in pairs], np.int32))
+    return jnp.take(codes, pi, axis=-1) * K + jnp.take(codes, pj, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("pairs", "K", "backend", "tile_q",
-                                   "tile_n", "interpret"))
 def pairwise_scores(codes, lut, pairs, K: int, *, norms=None,
-                    backend: str = "auto", tile_q: int = 64,
-                    tile_n: int = 256, interpret: bool | None = None):
+                    backend: str = "auto", tile_q: int = None,
+                    tile_n: int = None, interpret: bool | None = None):
     """Pairwise additive-decoder scores, reusing the one-hot ADC matmul on
     the K^2-alphabet bucket codes.
 
@@ -174,9 +335,9 @@ def pairwise_scores(codes, lut, pairs, K: int, *, norms=None,
 
 
 @partial(jax.jit, static_argnames=("backend", "tile_n", "interpret"))
-def resmlp_chain(v, w1, w2, *, backend: str = "auto", tile_n: int = 256,
-                 interpret: bool | None = None):
-    """v: (N, de); w1: (L, de, dh); w2: (L, dh, de) -> (N, de)."""
+def _resmlp_chain_impl(v, w1, w2, *, backend, tile_n, interpret):
+    if v.shape[0] == 0 or w1.shape[0] == 0:
+        return v
     if resolve_backend(backend) != "pallas":
         return _ref.resmlp_ref(v, w1, w2)
     if interpret is None:
@@ -184,12 +345,24 @@ def resmlp_chain(v, w1, w2, *, backend: str = "auto", tile_n: int = 256,
     return _rm.resmlp_chain(v, w1, w2, tile_n=tile_n, interpret=interpret)
 
 
+def resmlp_chain(v, w1, w2, *, backend: str = "auto", tile_n: int = None,
+                 interpret: bool | None = None):
+    """v: (N, de); w1: (L, de, dh); w2: (L, dh, de) -> (N, de)."""
+    return _resmlp_chain_impl(
+        v, w1, w2, backend=backend,
+        tile_n=tuning.tile("resmlp_chain", "tile_n", tile_n),
+        interpret=interpret)
+
+
 def kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len, *,
                     backend: str = "auto", **kw):
     """Decode attention over an RQ-compressed KV cache."""
+    if q.shape[0] == 0 or codes_k.shape[1] == 0:
+        return jnp.zeros_like(q)
     if resolve_backend(backend) != "pallas":
         return _ref.kv_dequant_attn_ref(q, codes_k, codes_v, cb_k, cb_v,
                                         valid_len)
     kw.setdefault("interpret", _interpret())
+    kw.setdefault("tile_t", tuning.tile("kv_dequant_attn", "tile_t"))
     return _kva.kv_dequant_attn(q, codes_k, codes_v, cb_k, cb_v, valid_len,
                                 **kw)

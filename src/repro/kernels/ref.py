@@ -44,6 +44,56 @@ def adc_batched_ref(codes, lut):
         lut[:, None], codes[..., None], axis=3)[..., 0], axis=2)
 
 
+def f_theta_ref(step_params, c, xhat):
+    """QINCo2 step network f_theta^m (paper Eq. 10-13), gathered form.
+
+    c: (..., d); xhat: (..., d) -> (..., d). Batch dims broadcast jointly
+    AFTER the optional in-projection (so a shared (K, d) candidate list is
+    projected once, then broadcast — the L_s >= 1 pre-selector shape).
+    This is, verbatim, the pre-refactor `qinco.f_apply` math: the bitwise
+    contract for `ops.f_theta(backend="xla")` and the oracle the fused
+    Pallas kernel is tested against.
+    """
+    p = step_params
+    d = xhat.shape[-1]
+    if "in_proj" in p:
+        c_emb = c @ p["in_proj"]
+    else:
+        c_emb = c
+    bshape = jnp.broadcast_shapes(c_emb.shape[:-1], xhat.shape[:-1])
+    c_emb = jnp.broadcast_to(c_emb, bshape + c_emb.shape[-1:])
+    xb = jnp.broadcast_to(xhat, bshape + (d,))
+    v = c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ p["concat_w"] \
+        + p["concat_b"]
+
+    def block(v, wb):
+        w1, w2 = wb
+        return v + jax.nn.relu(v @ w1) @ w2, None
+
+    v, _ = jax.lax.scan(block, v, (p["blocks_w1"], p["blocks_w2"]))
+    if "out_proj" in p:
+        return c + v @ p["out_proj"]
+    return c + v
+
+
+def f_theta_gather_ref(step_params, codebook, idx, xhat):
+    """Indexed form: codebook (K, d); idx (..., A) int; xhat (..., d) ->
+    (..., A, d) = f_theta(codebook[idx], xhat[..., None, :])."""
+    return f_theta_ref(step_params, codebook[idx], xhat[..., None, :])
+
+
+def adc_topk_ref(codes, lut, k: int, *, norms=None):
+    """Fused-shortlist oracle: full (Q, N) ADC scores (gather form, with
+    the `2*ip - norms` surrogate when norms given) reduced by `lax.top_k`.
+    Returns (vals (Q, k) desc, ids (Q, k) int32); top_k tie-breaking (lowest
+    index first) is part of the contract the streaming kernel reproduces."""
+    s = adc_ref(codes, lut)
+    if norms is not None:
+        s = 2.0 * s - norms[None, :]
+    v, i = jax.lax.top_k(s, k)
+    return v, i.astype(jnp.int32)
+
+
 def resmlp_ref(v, w1, w2):
     """v: (N, de); w1: (L, de, dh); w2: (L, dh, de): chained residual MLPs."""
     L = w1.shape[0]

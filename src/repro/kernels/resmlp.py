@@ -1,13 +1,26 @@
-"""Fused QINCo residual-MLP chain (paper Eq. 12).
+"""Fused QINCo step-network kernels (paper Eq. 10-13).
 
-Evaluates v <- v + relu(v @ w1_l) @ w2_l for l = 0..L-1 without writing the
-intermediate v to HBM between blocks: the grid is (N_tiles, L) with L as the
-innermost (sequential on TPU) dimension, the activation tile stays resident
-in the output VMEM block across the L iterations, and only the two (de, dh)
+`resmlp_chain` is the bare residual chain (Eq. 12): v <- v + relu(v @
+w1_l) @ w2_l for l = 0..L-1 without writing the intermediate v to HBM
+between blocks. The grid is (N_tiles, L) with L as the innermost
+(sequential on TPU) dimension, the activation tile stays resident in a
+revisited VMEM block across the L iterations, and only the two (de, dh)
 weight slices stream in per step.
 
-This is the decoder hot loop: QINCo2 search re-ranking calls it n_short
-times per query, and encoding calls it A*B times per vector per step.
+`f_theta_fused` / `f_theta_gather` extend the same schedule to the FULL
+step network f_theta: the optional in-projection, the concat-projection
+input stage (Eq. 11), the L residual blocks, and the optional
+out-projection + candidate add (Eq. 13) all execute inside one
+`pallas_call` — the pre-stage fires at l == 0, the post-stage at
+l == L - 1, and the (tile, de) activation never round-trips HBM in
+between. `f_theta_gather` additionally performs the codebook gather
+in-kernel as a one-hot MXU matmul (exact: one selected row plus zeros),
+so the beam-search expansion ships (N*B, A) indices — packed uint8 stays
+uint8 across HBM -> VMEM — instead of the (N, B, A, d) candidate tensor.
+
+This is the decoder hot loop: QINCo2 search re-ranking decodes n_short
+candidates per query, and encoding runs A*B f_theta evaluations per
+vector per step.
 """
 from __future__ import annotations
 
@@ -16,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(v_ref, w1_ref, w2_ref, out_ref):
@@ -58,4 +72,174 @@ def resmlp_chain(v, w1, w2, *, tile_n: int = 256, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((Np, de), v.dtype),
         interpret=interpret,
     )(v, w1, w2)
+    return out[:N]
+
+
+# ---------------------------------------------------------------------------
+# Full step network f_theta, fused end to end
+# ---------------------------------------------------------------------------
+
+
+def _f_theta_kernel(*refs, L: int, has_proj: bool):
+    """Gathered form: candidates already materialized as (TN, d) rows.
+
+    v_ref is a VMEM scratch buffer carrying the activation across the
+    sequential L iterations of one row tile (scratch persists across grid
+    steps on TPU); it never reaches HBM."""
+    if has_proj:
+        (c_ref, x_ref, cw_ref, cb_ref, w1_ref, w2_ref, ip_ref, op_ref,
+         out_ref, v_ref) = refs
+    else:
+        (c_ref, x_ref, cw_ref, cb_ref, w1_ref, w2_ref,
+         out_ref, v_ref) = refs
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _concat_in():                                     # Eq. 10-11
+        c = c_ref[...]
+        c_emb = c @ ip_ref[...] if has_proj else c
+        cat = jnp.concatenate([c_emb, x_ref[...]], axis=-1)
+        v_ref[...] = c_emb + cat @ cw_ref[...] + cb_ref[...]
+
+    v = v_ref[...]                                        # Eq. 12
+    v_ref[...] = v + jax.nn.relu(v @ w1_ref[0]) @ w2_ref[0]
+
+    @pl.when(l == L - 1)
+    def _out():                                           # Eq. 13
+        vL = v_ref[...]
+        out_ref[...] = c_ref[...] + (vL @ op_ref[...] if has_proj else vL)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def f_theta_fused(c, x, concat_w, concat_b, w1, w2, in_proj=None,
+                  out_proj=None, *, tile_n: int = 128,
+                  interpret: bool = True):
+    """c, x: (N, d) flattened candidate/xhat rows -> (N, d). Callers own
+    the broadcast/flatten; padding happens here (padded rows sliced off).
+    """
+    N, d = c.shape
+    L, de, dh = w1.shape[0], w1.shape[1], w1.shape[2]
+    has_proj = in_proj is not None
+    tile_n = min(tile_n, N)
+    pad = (-N) % tile_n
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Np = N + pad
+    ins = [c, x, concat_w, concat_b.reshape(1, de), w1, w2]
+    in_specs = [
+        pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((d + de, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de, dh), lambda ni, li: (li, 0, 0)),
+        pl.BlockSpec((1, dh, de), lambda ni, li: (li, 0, 0)),
+    ]
+    if has_proj:
+        ins += [in_proj, out_proj]
+        in_specs += [
+            pl.BlockSpec((d, de), lambda ni, li: (0, 0)),
+            pl.BlockSpec((de, d), lambda ni, li: (0, 0)),
+        ]
+    out = pl.pallas_call(
+        functools.partial(_f_theta_kernel, L=L, has_proj=has_proj),
+        grid=(Np // tile_n, L),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile_n, de), jnp.float32)],
+        interpret=interpret,
+    )(*ins)
+    return out[:N]
+
+
+def _f_theta_gather_kernel(*refs, L: int, has_proj: bool):
+    """Indexed form: the codebook gather happens HERE (one-hot matmul —
+    exact, since each output row sums one selected codeword and zeros).
+    cg_ref (VMEM scratch) caches the gathered candidates across the L
+    iterations for the final `c +` add; v_ref (VMEM scratch) carries the
+    activations. Neither ever reaches HBM."""
+    if has_proj:
+        (idx_ref, cbk_ref, x_ref, cw_ref, cb_ref, w1_ref, w2_ref, ip_ref,
+         op_ref, out_ref, v_ref, cg_ref) = refs
+    else:
+        (idx_ref, cbk_ref, x_ref, cw_ref, cb_ref, w1_ref, w2_ref,
+         out_ref, v_ref, cg_ref) = refs
+    l = pl.program_id(1)
+    tn, A, de = v_ref.shape
+    d = out_ref.shape[-1]
+
+    @pl.when(l == 0)
+    def _gather_concat_in():                              # Eq. 10-11
+        idx = idx_ref[...].astype(jnp.int32)              # (TN, A)
+        K = cbk_ref.shape[0]
+        kio = jax.lax.broadcasted_iota(jnp.int32, (tn * A, K), 1)
+        onehot = (idx.reshape(tn * A)[:, None] == kio).astype(jnp.float32)
+        c = onehot @ cbk_ref[...]                         # (TN*A, d)
+        cg_ref[...] = c.reshape(tn, A, d)
+        c_emb = c @ ip_ref[...] if has_proj else c
+        xb = jnp.broadcast_to(x_ref[...][:, None, :],
+                              (tn, A, d)).reshape(tn * A, d)
+        v = c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ cw_ref[...] \
+            + cb_ref[...]
+        v_ref[...] = v.reshape(tn, A, de)
+
+    v = v_ref[...].reshape(tn * A, de)                    # Eq. 12
+    v = v + jax.nn.relu(v @ w1_ref[0]) @ w2_ref[0]
+    v_ref[...] = v.reshape(tn, A, de)
+
+    @pl.when(l == L - 1)
+    def _out():                                           # Eq. 13
+        vL = v_ref[...].reshape(tn * A, de)
+        f = vL @ op_ref[...] if has_proj else vL
+        out_ref[...] = cg_ref[...] + f.reshape(tn, A, d)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def f_theta_gather(idx, codebook, x, concat_w, concat_b, w1, w2,
+                   in_proj=None, out_proj=None, *, tile_n: int = 8,
+                   interpret: bool = True):
+    """idx: (N, A) int (uint8 packed or int32); codebook: (K, d);
+    x: (N, d) xhat rows, shared across each row's A expansions
+    -> (N, A, d) = f_theta(codebook[idx], x[:, None, :])."""
+    N, A = idx.shape
+    K, d = codebook.shape
+    L, de, dh = w1.shape[0], w1.shape[1], w1.shape[2]
+    has_proj = in_proj is not None
+    if idx.dtype != jnp.uint8:       # packed bytes stay bytes on the wire
+        idx = idx.astype(jnp.int32)
+    tile_n = min(tile_n, N)
+    pad = (-N) % tile_n
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))    # pad index 0: valid row,
+        x = jnp.pad(x, ((0, pad), (0, 0)))        # output sliced off below
+    Np = N + pad
+    ins = [idx, codebook, x, concat_w, concat_b.reshape(1, de), w1, w2]
+    in_specs = [
+        pl.BlockSpec((tile_n, A), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((K, d), lambda ni, li: (0, 0)),
+        pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((d + de, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de, dh), lambda ni, li: (li, 0, 0)),
+        pl.BlockSpec((1, dh, de), lambda ni, li: (li, 0, 0)),
+    ]
+    if has_proj:
+        ins += [in_proj, out_proj]
+        in_specs += [
+            pl.BlockSpec((d, de), lambda ni, li: (0, 0)),
+            pl.BlockSpec((de, d), lambda ni, li: (0, 0)),
+        ]
+    out = pl.pallas_call(
+        functools.partial(_f_theta_gather_kernel, L=L, has_proj=has_proj),
+        grid=(Np // tile_n, L),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_n, A, d), lambda ni, li: (ni, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, A, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile_n, A, de), jnp.float32),
+            pltpu.VMEM((tile_n, A, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*ins)
     return out[:N]

@@ -1,0 +1,132 @@
+"""Per-op tile-size table: the single place TPU autotuning writes results.
+
+Every Pallas entry point in `kernels/ops.py` resolves its tile sizes here
+when the caller does not pass them explicitly (explicit arguments always
+win — the parity tests sweep odd tiles that way). The table replaces the
+hardcoded ``tile_q=min(tile_q, 8)``-style constants that used to live at
+each call site, so a native-TPU tuning sweep has ONE artifact to produce:
+
+    table = autotune("adc_scores", {"tile_q": (32, 64), "tile_n": (256,
+                     512)}, bench_fn)
+    save("tiles.json")            # ship next to the index store
+    ...
+    load("tiles.json")            # serving / builder startup
+
+The defaults are the interpret-mode-validated shapes that also respect the
+TPU layout floors (lane dim 128, sublane 8); they are intentionally
+conservative — real MXU numbers should overwrite them via `set_tiles`.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+from typing import Callable, Dict, Iterable, Mapping
+
+DEFAULTS: Dict[str, Dict[str, int]] = {
+    "l2_topk":            {"tile_n": 256},
+    "adc_scores":         {"tile_q": 64, "tile_n": 256},
+    "adc_scores_batched": {"tile_q": 8, "tile_c": 256},
+    "adc_topk":           {"tile_q": 64, "tile_n": 256},
+    "resmlp_chain":       {"tile_n": 256},
+    "f_theta":            {"tile_n": 128},
+    "f_theta_gather":     {"tile_n": 8},
+    "kv_dequant_attn":    {"tile_t": 512},
+}
+
+_table: Dict[str, Dict[str, int]] = {op: dict(v) for op, v in
+                                     DEFAULTS.items()}
+
+
+def tile(op: str, name: str, override=None) -> int:
+    """Resolve one tile size: explicit caller value > table > error."""
+    if override is not None:
+        return override
+    try:
+        return _table[op][name]
+    except KeyError:
+        raise KeyError(f"no tile entry {op!r}/{name!r}; known ops: "
+                       f"{sorted(_table)}") from None
+
+
+def tiles(op: str) -> Dict[str, int]:
+    return dict(_table[op])
+
+
+def set_tiles(op: str, **sizes: int) -> None:
+    """Overwrite entries for ``op`` (autotuning writes through here)."""
+    if op not in _table:
+        raise KeyError(f"unknown op {op!r}; known ops: {sorted(_table)}")
+    for name, v in sizes.items():
+        if name not in _table[op]:
+            raise KeyError(f"op {op!r} has no tile parameter {name!r} "
+                           f"(has {sorted(_table[op])})")
+        if not isinstance(v, int) or v < 1:
+            raise ValueError(f"{op}/{name}: tile sizes are positive ints, "
+                             f"got {v!r}")
+        _table[op][name] = v
+
+
+def reset() -> None:
+    """Restore the built-in defaults (tests use this to stay hermetic)."""
+    for op, v in DEFAULTS.items():
+        _table[op] = dict(v)
+
+
+@contextlib.contextmanager
+def overridden(op: str, **sizes: int):
+    """Scoped `set_tiles` — restores the previous entries on exit."""
+    prev = tiles(op)
+    set_tiles(op, **sizes)
+    try:
+        yield
+    finally:
+        _table[op] = prev
+
+
+def save(path) -> None:
+    with open(path, "w") as f:
+        json.dump(_table, f, indent=2, sort_keys=True)
+
+
+def load(path) -> Dict[str, Dict[str, int]]:
+    """Merge a tuning artifact into the live table (unknown ops/params are
+    rejected — a stale artifact should fail loudly, not half-apply):
+    every entry is validated BEFORE any is written, so a bad artifact
+    leaves the table untouched."""
+    with open(path) as f:
+        data = json.load(f)
+    for op, sizes in data.items():          # validate-only pass, raw values
+        if op not in _table:
+            raise KeyError(f"unknown op {op!r} in {path}; known ops: "
+                           f"{sorted(_table)}")
+        for name, v in sizes.items():
+            if name not in _table[op]:
+                raise KeyError(f"op {op!r} has no tile parameter "
+                               f"{name!r} in {path}")
+            if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+                raise ValueError(f"{op}/{name} in {path}: tile sizes are "
+                                 f"positive ints, got {v!r}")
+    for op, sizes in data.items():
+        set_tiles(op, **sizes)
+    return tiles_all()
+
+
+def tiles_all() -> Dict[str, Dict[str, int]]:
+    return {op: dict(v) for op, v in _table.items()}
+
+
+def autotune(op: str, candidates: Mapping[str, Iterable[int]],
+             bench_fn: Callable[..., float], *, reps: int = 3) -> Dict:
+    """Grid-sweep ``candidates`` (param -> sizes), timing ``bench_fn``
+    (called with the tile kwargs, returns seconds) and write the argmin
+    into the table. Returns {"best": {...}, "results": [...]}."""
+    names = sorted(candidates)
+    results = []
+    for combo in itertools.product(*(candidates[n] for n in names)):
+        kw = dict(zip(names, combo))
+        t = min(bench_fn(**kw) for _ in range(reps))
+        results.append({"tiles": kw, "seconds": t})
+    best = min(results, key=lambda r: r["seconds"])
+    set_tiles(op, **best["tiles"])
+    return {"best": best["tiles"], "results": results}

@@ -47,11 +47,22 @@ class ServeStats:
 
 
 class SearchServer:
-    """One compiled cascade executable + a micro-batching front door."""
+    """One compiled cascade executable + a micro-batching front door.
+
+    The whole cascade — ADC/pairwise scoring and the step-4 neural
+    re-rank — dispatches through `kernels/ops` (`backend=`), so the
+    re-ranking decode runs the fused `ops.f_theta` kernel on TPU.
+    ``tile_table`` points at a `kernels/tuning.py` JSON artifact from a
+    native-TPU autotune sweep; it is applied BEFORE the warmup compile so
+    the one warmed executable already uses the tuned tile sizes.
+    """
 
     def __init__(self, index, *, micro_batch: int = 32, n_probe: int = 8,
                  n_short_aq: int = 64, n_short_pw: int = 16, topk: int = 10,
-                 backend: str = "auto"):
+                 backend: str = "auto", tile_table=None):
+        if tile_table is not None:
+            from repro.kernels import tuning
+            tuning.load(tile_table)
         self.index = index
         self.micro_batch = micro_batch
         self.d = int(index.ivf.centroids.shape[1])
@@ -154,6 +165,9 @@ def main(argv: Optional[list] = None) -> ServeStats:
     ap.add_argument("--n-short-pw", type=int, default=16)
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--tile-table", default=None,
+                    help="kernels/tuning.py JSON artifact (autotuned "
+                         "per-op tile sizes) to apply before warmup")
     args = ap.parse_args(argv)
 
     from repro.index import IndexStore
@@ -161,7 +175,7 @@ def main(argv: Optional[list] = None) -> ServeStats:
     server = SearchServer(
         index, micro_batch=args.micro_batch, n_probe=args.n_probe,
         n_short_aq=args.n_short_aq, n_short_pw=args.n_short_pw,
-        topk=args.topk, backend=args.backend)
+        topk=args.topk, backend=args.backend, tile_table=args.tile_table)
     q, arrivals = synthetic_stream(index, args.queries, args.rate)
     stats = server.serve_stream(q, arrivals,
                                 max_wait_s=args.max_wait_ms / 1e3)

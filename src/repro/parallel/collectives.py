@@ -14,16 +14,24 @@ import jax.numpy as jnp
 from repro.core.grad_compress import compressed_psum_pods  # noqa: F401
 
 
-def distributed_topk(scores_local, base_index, k: int, axis: str):
-    """Inside shard_map: local (Q, N_loc) scores -> global (Q, k) ids+scores.
+def merge_topk(vals_local, gids_local, k: int, axis: str):
+    """Inside shard_map: per-shard (Q, k) top-k lists (values + GLOBAL
+    ids) -> merged global (Q, k) ids+scores. The entry point for callers
+    that already shortlist locally (e.g. the fused `ops.adc_topk` kernel,
+    whose per-shard scores never leave VMEM).
 
     Wire cost: 2 * Q * k * (bytes) instead of gathering Q * N scores."""
-    s, i = jax.lax.top_k(scores_local, k)
-    gid = base_index + i
-    s_all = jax.lax.all_gather(s, axis, axis=1, tiled=True)
-    g_all = jax.lax.all_gather(gid, axis, axis=1, tiled=True)
+    s_all = jax.lax.all_gather(vals_local, axis, axis=1, tiled=True)
+    g_all = jax.lax.all_gather(gids_local, axis, axis=1, tiled=True)
     s2, i2 = jax.lax.top_k(s_all, k)
     return jnp.take_along_axis(g_all, i2, axis=1), s2
+
+
+def distributed_topk(scores_local, base_index, k: int, axis: str):
+    """Inside shard_map: local (Q, N_loc) scores -> global (Q, k)
+    ids+scores (the materialized-scores form of `merge_topk`)."""
+    s, i = jax.lax.top_k(scores_local, k)
+    return merge_topk(s, base_index + i, k, axis)
 
 
 def sp_decode_merge(m_loc, denom_loc, acc_loc, axis: str):

@@ -1,0 +1,77 @@
+"""Regenerate the golden outputs for the f_theta-dispatch parity suite.
+
+The .npz captured here was produced by the PRE-refactor code (direct-jnp
+`qinco.f_apply` step network, PR 2 tree) and is the fixed point the
+`ops.f_theta` refactor must reproduce bit-for-bit on the xla backend:
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+Only rerun this against a tree whose encode/decode/search outputs are
+already known-good — regenerating from a broken tree would just bake the
+breakage into the contract.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from conftest import clustered  # noqa: E402
+
+from repro.configs.qinco2 import tiny  # noqa: E402
+from repro.core import encode as enc  # noqa: E402
+from repro.core import qinco, search, training  # noqa: E402
+
+
+def capture():
+    out = {}
+    rng = np.random.default_rng(0)
+
+    # -- qinco2-shaped (de != d, projections) -------------------------------
+    x = clustered(rng, 192, 16)
+    cfg = tiny(epochs=1)  # d=16 de=24 dh=32 L=1 M=4 K=16
+    params = training.init_qinco2(jax.random.key(1), x, cfg)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, 4, 4)
+    out["q2_x"] = x
+    out["q2_codes"] = np.asarray(codes)
+    out["q2_xhat"] = np.asarray(xhat)
+    out["q2_recon"] = np.asarray(qinco.decode(params, codes, cfg))
+
+    # -- qinco1 mode (identity projections, greedy A=K B=1) -----------------
+    x1 = clustered(rng, 128, 8)
+    cfg1 = tiny(d=8, de=8, dh=16, M=3, K=8, qinco1_mode=True)
+    params1 = training.init_qinco2(jax.random.key(2), x1, cfg1)
+    codes1, xhat1, _ = enc.encode(params1, jnp.asarray(x1), cfg1, cfg1.K, 1)
+    out["q1_x"] = x1
+    out["q1_codes"] = np.asarray(codes1)
+    out["q1_xhat"] = np.asarray(xhat1)
+    out["q1_recon"] = np.asarray(qinco.decode(params1, codes1, cfg1))
+
+    # -- L_s >= 1 pre-selector ----------------------------------------------
+    xs = clustered(rng, 96, 12)
+    cfgs = tiny(d=12, de=16, dh=16, M=3, K=16, Ls=1)
+    paramss = training.init_qinco2(jax.random.key(3), xs, cfgs)
+    codess, xhats, _ = enc.encode(paramss, jnp.asarray(xs), cfgs, 4, 4)
+    out["ls_x"] = xs
+    out["ls_codes"] = np.asarray(codess)
+    out["ls_xhat"] = np.asarray(xhats)
+
+    # -- end-to-end search cascade ------------------------------------------
+    xb = clustered(rng, 400, 16)
+    idx = search.build_index(jax.random.key(4), jnp.asarray(xb), params, cfg,
+                             k_ivf=8, m_tilde=2, n_pair_books=4)
+    q = jnp.asarray(xb[:7] + 0.01)
+    ids, dists = search.search(idx, q, n_probe=4, n_short_aq=16,
+                               n_short_pw=8, topk=3, cfg=cfg)
+    out["srch_xb"] = xb
+    out["srch_ids"] = np.asarray(ids)
+    out["srch_dists"] = np.asarray(dists)
+    return out
+
+
+if __name__ == "__main__":
+    dst = pathlib.Path(__file__).with_name("qinco_golden.npz")
+    np.savez_compressed(dst, **capture())
+    print(f"wrote {dst} ({dst.stat().st_size} bytes)")

@@ -1,0 +1,454 @@
+"""The fused step-network dispatch contract (`ops.f_theta` / `ops.adc_topk`):
+
+- `ops.f_theta` is BIT-identical to the pre-refactor `qinco.f_apply` jnp
+  math on the xla backend AND in interpret-mode pallas (same primitive
+  sequence per row; the one-hot in-kernel gather is exact), across
+  de != d (projections), qinco1_mode (no projections), the L_s >= 1
+  pre-selector broadcast shape, and the indexed beam-expansion form;
+- encode / decode / search reproduce golden outputs captured from the
+  pre-refactor tree (tests/golden/make_golden.py) bit-for-bit;
+- `ops.adc_topk` fused scoring+shortlist == unfused `adc_scores` +
+  `lax.top_k` bit-identically on each backend (values AND tie-breaks);
+- every ops entry point survives empty inputs (the degenerate-shape
+  guard: no `Np // 0` grids).
+"""
+import pathlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import qinco, search, training
+from repro.kernels import ops, ref
+
+from conftest import clustered
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "qinco_golden.npz"
+
+
+def _f_apply_pre_refactor(step_params, c, xhat, d):
+    """Verbatim copy of the pre-refactor `qinco.f_apply` (PR 2 tree): the
+    bitwise oracle this suite holds `ops.f_theta` to."""
+    p = step_params
+    if "in_proj" in p:
+        c_emb = c @ p["in_proj"]
+    else:
+        c_emb = c
+    bshape = jnp.broadcast_shapes(c_emb.shape[:-1], xhat.shape[:-1])
+    c_emb = jnp.broadcast_to(c_emb, bshape + c_emb.shape[-1:])
+    xb = jnp.broadcast_to(xhat, bshape + (d,))
+    v = c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ p["concat_w"] \
+        + p["concat_b"]
+
+    def block(v, wb):
+        w1, w2 = wb
+        return v + jax.nn.relu(v @ w1) @ w2, None
+
+    v, _ = lax.scan(block, v, (p["blocks_w1"], p["blocks_w2"]))
+    if "out_proj" in p:
+        return c + v @ p["out_proj"]
+    return c + v
+
+
+def _step_params(rng, d, de, dh, L, proj):
+    p = {
+        "concat_w": jnp.asarray(
+            rng.normal(size=(d + de, de)).astype(np.float32) * 0.1),
+        "concat_b": jnp.asarray(
+            rng.normal(size=(de,)).astype(np.float32) * 0.1),
+        "blocks_w1": jnp.asarray(
+            rng.normal(size=(L, de, dh)).astype(np.float32) * 0.2),
+        "blocks_w2": jnp.asarray(
+            rng.normal(size=(L, dh, de)).astype(np.float32) * 0.2),
+    }
+    if proj:
+        p["in_proj"] = jnp.asarray(
+            rng.normal(size=(d, de)).astype(np.float32) * 0.2)
+        p["out_proj"] = jnp.asarray(
+            rng.normal(size=(de, d)).astype(np.float32) * 0.2)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# f_theta: bitwise vs the pre-refactor math
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,de,dh,L,proj", [
+    (16, 24, 32, 1, True),      # de != d: in/out projections (qinco2)
+    (12, 12, 16, 3, False),     # qinco1_mode: identity projections
+    (8, 48, 16, 2, True),       # deeper chain, wide embed
+])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_f_theta_gathered_bitwise(d, de, dh, L, proj, backend):
+    rng = np.random.default_rng(d * L)
+    p = _step_params(rng, d, de, dh, L, proj)
+    c = jnp.asarray(rng.normal(size=(37, d)).astype(np.float32))
+    xh = jnp.asarray(rng.normal(size=(37, d)).astype(np.float32))
+    want = _f_apply_pre_refactor(p, c, xh, d)
+    got = ops.f_theta(p, c, xh, backend=backend, tile_n=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_f_theta_preselector_broadcast_shape(backend):
+    """L_s >= 1 shape: shared (K, d) candidates against a (N, B, 1, d)
+    beam — the in-projection must run BEFORE the broadcast."""
+    rng = np.random.default_rng(9)
+    d, de, K, N, B = 12, 16, 16, 11, 3
+    p = _step_params(rng, d, de, de, 1, True)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    xh = jnp.asarray(rng.normal(size=(N, B, 1, d)).astype(np.float32))
+    want = _f_apply_pre_refactor(p, cb, xh, d)            # (N, B, K, d)
+    got = ops.f_theta(p, cb, xh, backend=backend, tile_n=32)
+    assert got.shape == (N, B, K, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("proj", [True, False])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_f_theta_indexed_bitwise(proj, backend):
+    """Indexed form (in-kernel codebook gather) == gather-then-apply."""
+    rng = np.random.default_rng(3 + proj)
+    d, de, dh, L, K, N, B, A = 16, 24 if proj else 16, 32, 2, 16, 9, 4, 5
+    p = _step_params(rng, d, de, dh, L, proj)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, K, size=(N, B, A)).astype(np.int32))
+    xh = jnp.asarray(rng.normal(size=(N, B, d)).astype(np.float32))
+    want = _f_apply_pre_refactor(p, cb[idx], xh[..., None, :], d)
+    got = ops.f_theta(p, cb, xh, idx=idx, backend=backend, tile_n=4)
+    assert got.shape == (N, B, A, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_f_theta_indexed_packed_uint8():
+    """Packed uint8 indices are the wire format; results match int32."""
+    rng = np.random.default_rng(11)
+    d, K, N = 8, 16, 21
+    p = _step_params(rng, d, 12, 16, 1, True)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    idx = rng.integers(0, K, size=(N, 1))
+    xh = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    for backend in ("xla", "pallas"):
+        a = ops.f_theta(p, cb, xh, idx=jnp.asarray(idx.astype(np.uint8)),
+                        backend=backend, tile_n=8)
+        b = ops.f_theta(p, cb, xh, idx=jnp.asarray(idx.astype(np.int32)),
+                        backend=backend, tile_n=8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_f_apply_routes_through_dispatch():
+    """qinco.f_apply is now a thin shim over ops.f_theta (same bits)."""
+    rng = np.random.default_rng(1)
+    cfg = tiny()
+    x = clustered(rng, 64, cfg.d)
+    params = training.init_qinco2(jax.random.key(0), x, cfg)
+    fm = qinco.step_params_at(params, 0)
+    c = jnp.asarray(rng.normal(size=(64, cfg.d)).astype(np.float32))
+    xh = jnp.asarray(rng.normal(size=(64, cfg.d)).astype(np.float32))
+    got = qinco.f_apply(fm, c, xh, cfg, backend="pallas")
+    want = _f_apply_pre_refactor(fm, c, xh, cfg.d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end golden equivalence (outputs captured pre-refactor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_encode_decode_match_golden_qinco2(golden, backend):
+    x = golden["q2_x"]
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), x, cfg)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, 4, 4,
+                                backend=backend)
+    np.testing.assert_array_equal(np.asarray(codes), golden["q2_codes"])
+    np.testing.assert_array_equal(np.asarray(xhat), golden["q2_xhat"])
+    recon = qinco.decode(params, codes, cfg, backend=backend)
+    np.testing.assert_array_equal(np.asarray(recon), golden["q2_recon"])
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_encode_decode_match_golden_qinco1(golden, backend):
+    x = golden["q1_x"]
+    cfg = tiny(d=8, de=8, dh=16, M=3, K=8, qinco1_mode=True)
+    params = training.init_qinco2(jax.random.key(2), x, cfg)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, cfg.K, 1,
+                                backend=backend)
+    np.testing.assert_array_equal(np.asarray(codes), golden["q1_codes"])
+    np.testing.assert_array_equal(np.asarray(xhat), golden["q1_xhat"])
+    recon = qinco.decode(params, codes, cfg, backend=backend)
+    np.testing.assert_array_equal(np.asarray(recon), golden["q1_recon"])
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_encode_match_golden_preselector(golden, backend):
+    x = golden["ls_x"]
+    cfg = tiny(d=12, de=16, dh=16, M=3, K=16, Ls=1)
+    params = training.init_qinco2(jax.random.key(3), x, cfg)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, 4, 4,
+                                backend=backend)
+    np.testing.assert_array_equal(np.asarray(codes), golden["ls_codes"])
+    np.testing.assert_array_equal(np.asarray(xhat), golden["ls_xhat"])
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_search_matches_golden(golden, backend):
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), golden["q2_x"], cfg)
+    xb = golden["srch_xb"]
+    idx = search.build_index(jax.random.key(4), jnp.asarray(xb), params,
+                             cfg, k_ivf=8, m_tilde=2, n_pair_books=4)
+    q = jnp.asarray(xb[:7] + 0.01)
+    ids, dists = search.search(idx, q, n_probe=4, n_short_aq=16,
+                               n_short_pw=8, topk=3, cfg=cfg,
+                               backend=backend)
+    np.testing.assert_array_equal(np.asarray(ids), golden["srch_ids"])
+    np.testing.assert_array_equal(np.asarray(dists), golden["srch_dists"])
+
+
+# ---------------------------------------------------------------------------
+# adc_topk: fused == unfused, bit-identically, per backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,tiles", [
+    ("xla", {}),
+    ("pallas", dict(tile_q=4, tile_n=32)),
+])
+@pytest.mark.parametrize("with_norms", [True, False])
+def test_adc_topk_fused_equals_unfused(backend, tiles, with_norms):
+    """The fusion must not change a bit vs the same backend's adc_scores
+    + lax.top_k — values AND tie-break order (lowest index first)."""
+    rng = np.random.default_rng(42)
+    N, M, K, Q, k = 137, 4, 16, 9, 10
+    codes = jnp.asarray(rng.integers(0, K, size=(N, M)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(Q, M, K)).astype(np.float32))
+    norms = (jnp.asarray((rng.normal(size=(N,)) ** 2).astype(np.float32))
+             if with_norms else None)
+    s = ops.adc_scores(codes, lut, norms=norms, backend=backend, **tiles)
+    v0, i0 = lax.top_k(s, k)
+    v1, i1 = ops.adc_topk(codes, lut, k, norms=norms, backend=backend,
+                          **tiles)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_adc_topk_tie_break_lowest_index():
+    """Duplicate database rows score identically — both backends must
+    shortlist the earliest copies, in index order (the top_k contract)."""
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 8, size=(5, 3)).astype(np.int32)
+    codes = jnp.asarray(np.tile(base, (8, 1)))            # 8 copies each
+    lut = jnp.asarray(rng.normal(size=(3, 3, 8)).astype(np.float32))
+    vx, ix = ops.adc_topk(codes, lut, 12, backend="xla")
+    vp, ip = ops.adc_topk(codes, lut, 12, backend="pallas", tile_q=2,
+                          tile_n=8)
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ip))
+    np.testing.assert_allclose(np.asarray(vx), np.asarray(vp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_adc_topk_cross_backend_ids_agree():
+    rng = np.random.default_rng(6)
+    codes = jnp.asarray(rng.integers(0, 16, size=(200, 4)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(7, 4, 16)).astype(np.float32))
+    norms = jnp.asarray((rng.normal(size=(200,)) ** 2).astype(np.float32))
+    vx, ix = ops.adc_topk(codes, lut, 16, norms=norms, backend="xla")
+    vp, ip = ops.adc_topk(codes, lut, 16, norms=norms, backend="pallas",
+                          tile_q=4, tile_n=64)
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ip))
+    np.testing.assert_allclose(np.asarray(vx), np.asarray(vp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_adc_topk_k_clamped_to_n():
+    codes = jnp.asarray(np.zeros((3, 2), np.int32))
+    lut = jnp.ones((2, 2, 4), jnp.float32)
+    for backend in ("xla", "pallas"):
+        v, i = ops.adc_topk(codes, lut, 10, backend=backend)
+        assert v.shape == (2, 3) and i.shape == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# pairwise_buckets: vectorized gather == per-pair slices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(41, 6), (5, 9, 6), (0, 6)])
+def test_pairwise_buckets_matches_slice_reference(shape):
+    rng = np.random.default_rng(sum(shape))
+    K = 16
+    pairs = ((0, 3), (1, 5), (4, 2), (3, 3))
+    codes = jnp.asarray(rng.integers(0, K, size=shape).astype(np.uint8))
+    got = ops.pairwise_buckets(codes, pairs, K)
+    c32 = codes.astype(jnp.int32)
+    want = jnp.stack([c32[..., i] * K + c32[..., j] for i, j in pairs], -1)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pairwise_buckets_empty_pairs():
+    codes = jnp.zeros((7, 4), jnp.int32)
+    got = ops.pairwise_buckets(codes, (), 16)
+    assert got.shape == (7, 0)
+
+
+# ---------------------------------------------------------------------------
+# empty-input guards (the resmlp_chain N == 0 crash class)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_empty_inputs_all_ops(backend):
+    f32 = np.float32
+    # resmlp_chain: the original Np // tile_n == 0 crash
+    v = jnp.zeros((0, 8), f32)
+    w1 = jnp.zeros((2, 8, 16), f32)
+    w2 = jnp.zeros((2, 16, 8), f32)
+    assert ops.resmlp_chain(v, w1, w2, backend=backend).shape == (0, 8)
+    # l2_topk
+    i, d2 = ops.l2_topk(jnp.zeros((0, 8), f32), jnp.zeros((16, 8), f32), 4,
+                        backend=backend)
+    assert i.shape == (0, 4) and d2.shape == (0, 4)
+    # adc_scores, shared + batched
+    lut = jnp.zeros((3, 4, 16), f32)
+    assert ops.adc_scores(jnp.zeros((0, 4), np.int32), lut,
+                          backend=backend).shape == (3, 0)
+    assert ops.adc_scores(jnp.zeros((3, 0, 4), np.int32), lut,
+                          backend=backend).shape == (3, 0)
+    # adc_topk
+    v, i = ops.adc_topk(jnp.zeros((0, 4), np.int32), lut, 5,
+                        backend=backend)
+    assert v.shape == (3, 0) and i.shape == (3, 0)
+    # pairwise_scores with empty codes
+    plut = jnp.zeros((3, 2, 256), f32)
+    s = ops.pairwise_scores(jnp.zeros((0, 6), np.int32), plut,
+                            ((0, 1), (2, 3)), 16, backend=backend)
+    assert s.shape == (3, 0)
+    # f_theta, gathered + indexed
+    rng = np.random.default_rng(0)
+    p = _step_params(rng, 8, 12, 16, 1, True)
+    out = ops.f_theta(p, jnp.zeros((0, 8), f32), jnp.zeros((0, 8), f32),
+                      backend=backend)
+    assert out.shape == (0, 8)
+    out = ops.f_theta(p, jnp.zeros((16, 8), f32), jnp.zeros((0, 8), f32),
+                      idx=jnp.zeros((0, 4), np.int32), backend=backend)
+    assert out.shape == (0, 4, 8)
+    # kv_dequant_attn with an empty batch
+    q = jnp.zeros((0, 1, 2, 8), f32)
+    ck = jnp.zeros((0, 16, 1, 2), np.int32)
+    cb = jnp.zeros((1, 2, 8, 8), f32)
+    assert ops.kv_dequant_attn(q, ck, ck, cb, cb, 4,
+                               backend=backend).shape == q.shape
+
+
+# ---------------------------------------------------------------------------
+# tuning table
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_table_resolution(tmp_path):
+    from repro.kernels import tuning
+    try:
+        assert tuning.tile("adc_scores", "tile_q") == 64
+        assert tuning.tile("adc_scores", "tile_q", 16) == 16  # explicit wins
+        with tuning.overridden("adc_scores", tile_q=32):
+            assert tuning.tile("adc_scores", "tile_q") == 32
+        assert tuning.tile("adc_scores", "tile_q") == 64
+        # save -> load round trip, applied to the live table
+        tuning.set_tiles("f_theta", tile_n=64)
+        p = tmp_path / "tiles.json"
+        tuning.save(p)
+        tuning.reset()
+        assert tuning.tile("f_theta", "tile_n") == 128
+        tuning.load(p)
+        assert tuning.tile("f_theta", "tile_n") == 64
+        # stale artifacts fail loudly
+        with pytest.raises(KeyError):
+            tuning.set_tiles("no_such_op", tile_n=8)
+        with pytest.raises(KeyError):
+            tuning.set_tiles("adc_scores", tile_z=8)
+        with pytest.raises(ValueError):
+            tuning.set_tiles("adc_scores", tile_q=0)
+    finally:
+        tuning.reset()
+
+
+def test_set_tiles_applies_after_first_compile(monkeypatch):
+    """Tile resolution lives in the non-jitted facade wrapper: a table
+    change AFTER an op has compiled must reach the kernel on the next
+    call (fresh jit key), not replay the stale executable."""
+    from repro.kernels import resmlp as rm
+    from repro.kernels import tuning
+    seen = []
+    orig = rm.resmlp_chain
+
+    def spy(v, w1, w2, *, tile_n, interpret):
+        seen.append(tile_n)
+        return orig(v, w1, w2, tile_n=tile_n, interpret=interpret)
+
+    monkeypatch.setattr(rm, "resmlp_chain", spy)
+    v = jnp.ones((16, 8), np.float32)
+    w1 = jnp.zeros((1, 8, 8), np.float32)
+    w2 = jnp.zeros((1, 8, 8), np.float32)
+    try:
+        ops.resmlp_chain(v, w1, w2, backend="pallas")
+        tuning.set_tiles("resmlp_chain", tile_n=4)
+        ops.resmlp_chain(v, w1, w2, backend="pallas")
+        assert seen == [256, 4], seen
+    finally:
+        tuning.reset()
+
+
+def test_tuning_load_is_atomic(tmp_path):
+    """A partially-bad artifact must fail without half-applying."""
+    import json
+    from repro.kernels import tuning
+    p = tmp_path / "stale.json"
+    p.write_text(json.dumps({"adc_scores": {"tile_q": 32},
+                             "bogus_op": {"tile_n": 8}}))
+    try:
+        with pytest.raises(KeyError):
+            tuning.load(p)
+        assert tuning.tile("adc_scores", "tile_q") == 64  # untouched
+    finally:
+        tuning.reset()
+
+
+def test_tuning_table_drives_dispatch():
+    """An op picks up table overrides when the caller passes no tiles."""
+    from repro.kernels import tuning
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 8, size=(40, 3)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(5, 3, 8)).astype(np.float32))
+    want = ref.adc_ref(codes, lut)
+    try:
+        with tuning.overridden("adc_scores", tile_q=2, tile_n=16):
+            got = ops.adc_scores(codes, lut, backend="pallas")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        tuning.reset()
+
+
+def test_encode_empty_batch():
+    """The full encoder path survives N == 0 (regression for the
+    degenerate-shape crash class)."""
+    rng = np.random.default_rng(2)
+    cfg = tiny()
+    params = training.init_qinco2(
+        jax.random.key(0), clustered(rng, 64, cfg.d), cfg)
+    codes, xhat, _ = enc.encode(params, jnp.zeros((0, cfg.d), np.float32),
+                                cfg, 4, 4, backend="pallas")
+    assert codes.shape == (0, cfg.M) and xhat.shape == (0, cfg.d)

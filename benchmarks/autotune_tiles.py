@@ -1,0 +1,100 @@
+"""`tuning.autotune` sweep -> a committed tile-table artifact.
+
+Produces the first checked-in tile-table artifact
+(`benchmarks/tile_tables/interpret_cpu.json`): a grid sweep over the
+fused-op tile sizes — including the beam-step ops `f_theta_err` and
+`preselect_topk` — with the winners written into the live table and the
+WHOLE table persisted via `tuning.save` (so the artifact is loadable by
+`serve_search --tile-table` and `StreamingIndexBuilder(tile_table=)`).
+
+On CPU the sweep runs the kernels in interpret mode: the numbers rank
+interpreter overhead, not MXU behavior, so the artifact is a format/
+plumbing fixture and a template — a native-TPU run of this same script
+(`python -m benchmarks.autotune_tiles --out tile_tables/tpu_v4.json`)
+produces the real thing. The artifact records its provenance in the ops
+it covers; `tuning.load` validates every entry before applying any.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import qinco, training
+from repro.kernels import ops, tuning
+
+
+def sweep(fast=True, verbose=True):
+    """Autotune the pallas ops the encode/search hot paths launch.
+    Returns {op: {"best": ..., "results": [...]}} and leaves the winners
+    in the live tuning table."""
+    dim, M, K = 16, 4, 16
+    seed = 0
+    rng = np.random.default_rng(seed)
+    cfg = tiny(d=dim, M=M, K=K, epochs=1, batch_size=256)
+    x0 = jnp.asarray(rng.normal(size=(512, dim)).astype(np.float32))
+    params = training.init_qinco2(jax.random.key(seed), x0, cfg)
+    fm = qinco.step_params_at(params, 0)
+    fcb = params["codebooks"][0]
+    pcb = params["pre_codebooks"][0]
+
+    n = 256 if fast else 2048
+    reps = 2 if fast else 5
+    B, A = 4, 8
+    xh = jnp.asarray(rng.normal(size=(n, B, dim)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, K, size=(n, B, A)).astype(np.int32))
+    xt = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    err = jnp.asarray((rng.normal(size=(n, B)) ** 2).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, K, size=(n, M)).astype(np.int32))
+    lut = jnp.asarray(rng.normal(size=(8, M, K)).astype(np.float32))
+
+    cands = (4, 8, 16) if fast else (4, 8, 16, 32)
+    jobs = {
+        "f_theta_err": ({"tile_n": cands}, lambda **kw: timeit_us(
+            lambda ii: ops.f_theta_err(fm, fcb, xh, ii, xt, err,
+                                       backend="pallas", **kw)[0],
+            idx, reps=reps) * 1e-6),
+        "preselect_topk": ({"tile_n": cands}, lambda **kw: timeit_us(
+            lambda xx: ops.preselect_topk(fm, pcb, xx, r, A,
+                                          backend="pallas", **kw)[0],
+            xt, reps=reps) * 1e-6),
+        "f_theta_gather": ({"tile_n": cands}, lambda **kw: timeit_us(
+            lambda ii: ops.f_theta(fm, fcb, xt, idx=ii[:, 0],
+                                   backend="pallas", **kw),
+            idx, reps=reps) * 1e-6),
+        "adc_topk": ({"tile_q": (4, 8), "tile_n": (64, 128)},
+                     lambda **kw: timeit_us(
+            lambda cc: ops.adc_topk(cc, lut, 8, backend="pallas", **kw)[0],
+            codes, reps=reps) * 1e-6),
+    }
+    out = {}
+    for op, (cand_grid, bench) in jobs.items():
+        out[op] = tuning.autotune(op, cand_grid, bench, reps=1)
+        if verbose:
+            print(f"[autotune] {op}: best={out[op]['best']} over "
+                  f"{len(out[op]['results'])} candidates", flush=True)
+    return out
+
+
+def main(out_path="benchmarks/tile_tables/interpret_cpu.json", fast=True):
+    sweep(fast=fast)
+    p = pathlib.Path(out_path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tuning.save(p)
+    print(f"[autotune] wrote {p} (device={jax.default_backend()})")
+    return p
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/tile_tables/"
+                                     "interpret_cpu.json")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(args.out, fast=not args.full)

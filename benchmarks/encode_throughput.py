@@ -1,0 +1,77 @@
+"""Encode throughput across the (A, B) grid: fused vs unfused beam steps.
+
+Encoding is QINCo2's dominant database-build cost (paper §3.2), and since
+the fused-selection PR every beam step can run either as the single-launch
+`ops.preselect_topk` / `ops.f_theta_err` path (``fused=True``, the
+default — nothing (A*B)-wide or K-wide leaves VMEM) or as the historical
+`ops.f_theta` + `lax.top_k` composite (``fused=False``). This section
+times both on both dispatch backends over the three encode modes —
+QINCo1-greedy (A=K, B=1), pre-selection (A<K, B=1), beam (B>1) — and
+reports vectors/second per row.
+
+On TPU the pallas rows are the native-kernel path and the fused-vs-unfused
+delta is the HBM-traffic claim; on CPU the pallas rows run in interpret
+mode (a correctness/coverage signal, not a speed claim — every row records
+which mode was measured). `main(json_path=...)` writes the rows as
+machine-readable JSON (`benchmarks/run.py --only encode` ->
+BENCH_encode.json) so the encode perf trajectory has data points.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_data, timeit_us
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import training
+
+BACKENDS = ("xla", "pallas")
+# (A, B) grid: greedy (A=K), pre-selection (A<K, B=1), small + eval beams
+GRID = ((16, 1), (4, 1), (4, 4), (8, 8))
+
+
+def run(dim=16, M=4, K=16, n=256, seed=0, *, backends=BACKENDS, grid=GRID,
+        reps=3):
+    xt, xb, _, _ = bench_data("bigann", dim=dim, n_db=max(n, 512),
+                              n_query=8, seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, epochs=1, batch_size=256)
+    params = training.init_qinco2(jax.random.key(seed), xt, cfg)
+    xbj = jnp.asarray(xb[:n])
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+
+    rows = []
+    for be in backends:
+        for A, B in grid:
+            for fused in (True, False):
+                t = timeit_us(
+                    lambda x: enc.encode(params, x, cfg, A, B, backend=be,
+                                         fused=fused)[0], xbj, reps=reps)
+                rows.append({
+                    "op": f"encode(A={A},B={B})", "backend": be,
+                    "fused": fused,
+                    "mode": mode if be == "pallas" else "-",
+                    "us_per_vec": t / n,
+                    "vecs_per_s": 1e6 * n / t,
+                })
+    return rows
+
+
+def main(fast=True, json_path=None):
+    rows = run(n=256 if fast else 2048, reps=3 if fast else 7)
+    print("op,backend,fused,mode,us_per_vec,vecs_per_s")
+    for r in rows:
+        print(f"{r['op']},{r['backend']},{int(r['fused'])},{r['mode']},"
+              f"{r['us_per_vec']:.3f},{r['vecs_per_s']:.0f}")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump({"device": jax.default_backend(), "rows": rows}, f,
+                      indent=2)
+        print(f"[encode_throughput] wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False, json_path="BENCH_encode.json")

@@ -56,6 +56,15 @@ def run(dim=16, M=4, K=16, n_db=2048, n_q=32, seed=0, *,
         rng.integers(0, K, size=(256, 8)).astype(np.int32))   # (NB, A)
     ex = jnp.asarray(rng.normal(size=(256, dim)).astype(np.float32))
     dcodes = codes[:512]
+    # fused beam-step shapes: one full (N, B, A) expansion + pre-selection
+    bB, bA = 4, 8
+    bxh = jnp.asarray(rng.normal(size=(128, bB, dim)).astype(np.float32))
+    bidx = jnp.asarray(
+        rng.integers(0, K, size=(128, bB, bA)).astype(np.int32))
+    bx = jnp.asarray(rng.normal(size=(128, dim)).astype(np.float32))
+    berr = jnp.asarray((rng.normal(size=(128, bB)) ** 2).astype(np.float32))
+    pxh = jnp.asarray(rng.normal(size=(512, dim)).astype(np.float32))
+    pre = jnp.asarray(rng.normal(size=(512, dim)).astype(np.float32))
 
     rows = []
 
@@ -78,6 +87,14 @@ def run(dim=16, M=4, K=16, n_db=2048, n_q=32, seed=0, *,
                                                  backend=be),
                       eidx, ex, reps=reps)
         add("f_theta_gather(256x8)", be, t, eidx.shape[0] * eidx.shape[1])
+        t = timeit_us(lambda ii, xx: ops.f_theta_err(fm, fcb, bxh, ii, xx,
+                                                     berr, backend=be)[0],
+                      bidx, bx, reps=reps)
+        add(f"f_theta_err(128x{bB}x{bA})", be, t, 128 * bB * bA)
+        t = timeit_us(lambda xx, rr: ops.preselect_topk(fm, cb, xx, rr, 8,
+                                                        backend=be)[0],
+                      pxh, pre, reps=reps)
+        add("preselect_topk(512,A=8)", be, t, 512)
         t = timeit_us(lambda c: qinco.decode(params, c, cfg, backend=be),
                       dcodes, reps=reps)
         add(f"decode({len(dcodes)})", be, t, len(dcodes))

@@ -20,12 +20,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=[None, "t3", "t4", "s2", "f5", "f6", "roofline",
-                             "backends", "index"])
+                             "backends", "encode", "index"])
     args = ap.parse_args()
     fast = not args.full
     sections = {
         "t3": _t3, "t4": _t4, "s2": _s2, "f5": _f5, "f6": _f6,
-        "roofline": _roof, "backends": _backends, "index": _index,
+        "roofline": _roof, "backends": _backends, "encode": _encode,
+        "index": _index,
     }
     todo = [args.only] if args.only else list(sections)
     print("name,us_per_call,derived")
@@ -93,6 +94,22 @@ def _backends(fast):
     return (f"encode_xla={xla_enc[0]['us_per_vec']:.1f}us/vec;"
             f"f_theta_xla={fused[0]['us_per_vec']:.2f}us/vec;"
             f"json=BENCH_kernels.json")
+
+
+def _encode(fast):
+    from benchmarks import encode_throughput as et
+    print("\n== encode throughput: fused vs unfused beam steps ==")
+    rows = et.main(fast=fast, json_path="BENCH_encode.json")
+
+    def vps(be, fused):               # the widest-beam row: most work,
+        sel = [r for r in rows        # least relative timing noise
+               if r["backend"] == be and r["fused"] == fused]
+        return sel[-1]["vecs_per_s"]
+    r_pallas = vps("pallas", True) / vps("pallas", False)
+    r_xla = vps("xla", True) / vps("xla", False)
+    return (f"beam_fused_over_unfused_pallas={r_pallas:.2f};"
+            f"beam_fused_over_unfused_xla={r_xla:.2f};"
+            f"json=BENCH_encode.json")
 
 
 def _index(fast):

@@ -50,6 +50,12 @@ python -m benchmarks.run --only backends
 test -s BENCH_kernels.json \
     && echo "[ci] kernel backends smoke OK (BENCH_kernels.json written)"
 
+# encode-throughput smoke: fused vs unfused beam steps across the (A, B)
+# grid on both backends -> BENCH_encode.json (the encode perf trajectory)
+python -m benchmarks.run --only encode
+test -s BENCH_encode.json \
+    && echo "[ci] encode throughput smoke OK (BENCH_encode.json written)"
+
 if [ "${QUICK:-0}" = "1" ]; then
     exec python -m pytest -q -m "not slow" "$@"
 fi

@@ -13,10 +13,19 @@ not-yet-populated hypotheses carrying err = +inf so that flat top-k over
 the B*A expansions reproduces the growing-beam (min(B, A^m)) semantics of
 the reference implementation exactly.
 
-Pre-selection (Eq. 6, L_s = 0) runs through the `kernels/ops.l2_topk`
-dispatch; `encode_dataset` is the chunked driver for database-scale
-encoding (static chunk shapes, donated chunk buffers, optional shard_map
-over a data axis).
+The beam step is FUSED end to end on the kernel backend (``fused=True``,
+the default): pre-selection runs through `ops.l2_topk` (Eq. 6, L_s = 0)
+or the fused `ops.preselect_topk` (L_s >= 1: g_phi + distance + top-A in
+one launch), and the expansion/scoring/selection runs through
+`ops.f_theta_err` — the (N, B, A, d) candidate expansion and the
+per-expansion error tensor never round-trip HBM before top-k.
+``fused=False`` keeps the historical unfused composite (`ops.f_theta` +
+`lax.top_k`), bit-identical per backend — the comparison baseline for
+the parity suite and `benchmarks/encode_throughput.py`.
+
+`encode_dataset` is the chunked driver for database-scale encoding
+(static chunk shapes, donated chunk buffers, optional shard_map over a
+data axis).
 """
 from __future__ import annotations
 
@@ -51,23 +60,40 @@ jax.tree_util.register_dataclass(
     BeamState, data_fields=("xhat", "err", "codes"), meta_fields=())
 
 
+def _identity_idx(K: int, shape):
+    """The exhaustive candidate list 0..K-1, broadcast to ``shape + (K,)``.
+    Packed uint8 when the alphabet fits a byte (K <= 256 — every paper
+    setting): the indexed `ops.f_theta`/`ops.f_theta_err` forms consume
+    the bytes directly, so the pre-selector wire cost drops 4x vs the
+    historical int32 identity tensor."""
+    dt = jnp.uint8 if K <= 256 else jnp.int32
+    return jnp.broadcast_to(jnp.arange(K, dtype=dt), shape + (K,))
+
+
 def preselect(gm, r, xhat, pre_cb, A: int, cfg: QincoConfig,
-              backend: str = "auto"):
+              backend: str = "auto", *, fused: bool = True):
     """Top-A candidate indices (N, B, A) by distance to C~ (Eq. 6).
 
     gm: the step's g_phi params (None when L_s = 0). A >= K short-circuits
     to the identity candidate list (exhaustive search, QINCo greedy mode).
+    With ``fused`` the L_s >= 1 path runs the single-launch
+    `ops.preselect_topk` (g_phi + distance + top-A, nothing K-wide leaves
+    VMEM); unfused keeps the historical f_theta + `lax.top_k` composite.
     """
     N, Bb, d = r.shape
     if A >= cfg.K:      # exhaustive: the candidate list is the identity
-        return jnp.broadcast_to(jnp.arange(cfg.K), (N, Bb, cfg.K))
+        return _identity_idx(cfg.K, (N, Bb))
     if cfg.Ls >= 1 and gm is not None:
+        if fused:
+            idx, _ = ops.preselect_topk(gm, pre_cb, xhat, r, A,
+                                        backend=backend)
+            return idx
         if ops.resolve_backend(backend) == "pallas":
-            # indexed-form ops.f_theta: ship (N, B, K) int32 indices and
+            # indexed-form ops.f_theta: ship (N, B, K) packed indices and
             # gather in-kernel, instead of broadcast-materializing the
             # (N, B, K, d) candidate tensor into HBM for the kernel launch
-            idx_all = jnp.broadcast_to(jnp.arange(cfg.K), (N, Bb, cfg.K))
-            cand = ops.f_theta(gm, pre_cb, xhat, idx=idx_all,
+            cand = ops.f_theta(gm, pre_cb, xhat,
+                               idx=_identity_idx(cfg.K, (N, Bb)),
                                backend=backend)             # (N, B, K, d)
         else:
             # gathered form: the shared (K, d) pre-codebook is in-projected
@@ -93,37 +119,48 @@ def _stacked_step_inputs(params):
 
 
 def _beam_step(state: BeamState, xs, *, x, cfg: QincoConfig, A: int, B: int,
-               backend: str) -> Tuple[BeamState, None]:
+               backend: str, fused: bool = True) -> Tuple[BeamState, None]:
     """Expand each beam with its top-A candidates, keep the best B (Fig. 2)."""
     N, Bb, d = state.xhat.shape
     r = x[:, None, :] - state.xhat                        # (N, B, d)
-    idx = preselect(xs.get("g"), r, state.xhat, xs["pre"], A, cfg, backend)
-    # indexed-form ops.f_theta: the A*B expansion is one flattened tiled
-    # launch — the codebook gather happens inside the kernel, so only the
-    # (N, B, A) indices cross HBM, never a (N, B, A, d) candidate tensor
-    f_out = ops.f_theta(xs["f"], xs["cb"], state.xhat, idx=idx,
-                        backend=backend)                  # (N, B, A, d)
-    new_xhat = state.xhat[..., None, :] + f_out           # (N, B, A, d)
-    new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
-    # expansions of not-yet-populated beams must not be selectable
-    new_err = jnp.where(jnp.isinf(state.err)[..., None], jnp.inf, new_err)
-
+    idx = preselect(xs.get("g"), r, state.xhat, xs["pre"], A, cfg, backend,
+                    fused=fused)
     Acur = idx.shape[-1]
-    flat_err = new_err.reshape(N, Bb * Acur)
-    top_err, flat_idx = lax.top_k(-flat_err, Bb)          # (N, B)
+    if fused:
+        # single-launch ops.f_theta_err: expansion, scoring, and the flat
+        # top-B all happen on the VMEM-resident tile — only the (N, B, A)
+        # indices go in and only the (N, B)-and-smaller selections plus
+        # the winning (N, B, d) reconstructions come out
+        err, flat_idx, xhat = ops.f_theta_err(
+            xs["f"], xs["cb"], state.xhat, idx, x, state.err,
+            backend=backend)
+    else:
+        # unfused composite: indexed-form ops.f_theta (the codebook gather
+        # still happens inside the kernel) + full-width error + lax.top_k
+        f_out = ops.f_theta(xs["f"], xs["cb"], state.xhat, idx=idx,
+                            backend=backend)              # (N, B, A, d)
+        new_xhat = state.xhat[..., None, :] + f_out       # (N, B, A, d)
+        new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
+        # expansions of not-yet-populated beams must not be selectable
+        new_err = jnp.where(jnp.isinf(state.err)[..., None], jnp.inf,
+                            new_err)
+        flat_err = new_err.reshape(N, Bb * Acur)
+        top_err, flat_idx = lax.top_k(-flat_err, Bb)      # (N, B)
+        err = -top_err
+        xhat = jnp.take_along_axis(
+            new_xhat.reshape(N, Bb * Acur, d), flat_idx[..., None], axis=1)
     b_idx = flat_idx // Acur
-    xhat = jnp.take_along_axis(
-        new_xhat.reshape(N, Bb * Acur, d), flat_idx[..., None], axis=1)
     sel_code = jnp.take_along_axis(
         idx.reshape(N, Bb * Acur), flat_idx, axis=1)      # (N, B)
     codes = jnp.take_along_axis(state.codes, b_idx[..., None], axis=1)
     codes = lax.dynamic_update_slice(
         codes, sel_code[..., None].astype(codes.dtype), (0, 0, xs["m"]))
-    return BeamState(xhat=xhat, err=-top_err, codes=codes), None
+    return BeamState(xhat=xhat, err=err, codes=codes), None
 
 
 def _encode_impl(params, x, cfg: QincoConfig, A: Optional[int] = None,
-                 B: Optional[int] = None, backend: str = "auto"):
+                 B: Optional[int] = None, backend: str = "auto",
+                 fused: bool = True):
     """Beam-search encode. x: (N, d) -> (codes (N, M), xhat (N, d), mse)."""
     A = A or cfg.A_eval
     B = B or cfg.B_eval
@@ -136,7 +173,8 @@ def _encode_impl(params, x, cfg: QincoConfig, A: Optional[int] = None,
                       jnp.inf).astype(x.dtype) * jnp.ones((N, 1), x.dtype),
         codes=jnp.zeros((N, B, cfg.M), jnp.int32),
     )
-    step = partial(_beam_step, x=x, cfg=cfg, A=A, B=B, backend=backend)
+    step = partial(_beam_step, x=x, cfg=cfg, A=A, B=B, backend=backend,
+                   fused=fused)
     state, _ = lax.scan(step, init, _stacked_step_inputs(params))
 
     best = jnp.argmin(state.err, axis=1)
@@ -146,21 +184,22 @@ def _encode_impl(params, x, cfg: QincoConfig, A: Optional[int] = None,
     return codes_best, xhat_best, mse
 
 
-encode = jax.jit(_encode_impl, static_argnames=("cfg", "A", "B", "backend"))
+encode = jax.jit(_encode_impl, static_argnames=("cfg", "A", "B", "backend",
+                                                "fused"))
 encode.__doc__ = _encode_impl.__doc__
 
 # chunk variant: the incoming chunk buffer is donated (same shape/dtype as
 # the returned xhat, so XLA can reuse it) — used only by encode_dataset,
 # whose chunks are freshly device_put host slices.
 _encode_chunk = jax.jit(_encode_impl, static_argnames=("cfg", "A", "B",
-                                                       "backend"),
+                                                       "backend", "fused"),
                         donate_argnums=(1,))
 
 
 def encode_dataset(params, x, cfg: QincoConfig, A: Optional[int] = None,
                    B: Optional[int] = None, *, chunk: int = 4096,
-                   backend: str = "auto", mesh=None, data_axis: str = "data",
-                   out_codes=None):
+                   backend: str = "auto", fused: bool = True, mesh=None,
+                   data_axis: str = "data", out_codes=None):
     """Encode a database larger than a device batch, chunk by chunk.
 
     Every chunk has the same static shape (the tail is zero-padded and
@@ -184,9 +223,11 @@ def encode_dataset(params, x, cfg: QincoConfig, A: Optional[int] = None,
     if mesh is not None:
         nsh = mesh.shape[data_axis]
         chunk = max(nsh, chunk - chunk % nsh)
-        fn = _make_sharded_chunk_encoder(cfg, A, B, backend, mesh, data_axis)
+        fn = _make_sharded_chunk_encoder(cfg, A, B, backend, fused, mesh,
+                                         data_axis)
     else:
-        fn = partial(_encode_chunk, cfg=cfg, A=A, B=B, backend=backend)
+        fn = partial(_encode_chunk, cfg=cfg, A=A, B=B, backend=backend,
+                     fused=fused)
 
     codes = out_codes if out_codes is not None else np.empty((N, cfg.M),
                                                              np.int32)
@@ -214,7 +255,7 @@ def encode_dataset(params, x, cfg: QincoConfig, A: Optional[int] = None,
     return codes, xhat, mse
 
 
-def _make_sharded_chunk_encoder(cfg, A, B, backend, mesh, data_axis):
+def _make_sharded_chunk_encoder(cfg, A, B, backend, fused, mesh, data_axis):
     from jax.sharding import PartitionSpec as P
 
     from repro.parallel import compat
@@ -222,7 +263,7 @@ def _make_sharded_chunk_encoder(cfg, A, B, backend, mesh, data_axis):
     def run(params, xc):
         def local(params, x_loc):
             codes, xhat, mse = _encode_impl(params, x_loc, cfg, A, B,
-                                            backend)
+                                            backend, fused)
             # per-shard means are equal-weighted (chunks divide evenly
             # over the axis), so pmean == the chunk-global mean — and the
             # out_spec below promises a replicated scalar

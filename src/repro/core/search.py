@@ -142,11 +142,22 @@ def _adc_lut_with_centroids(index: SearchIndex, q):
 def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
            n_short_pw: int = 16, topk: int = 1, cfg: QincoConfig = None,
            backend: str = "auto"):
-    """Full cascade. q: (Q, d) -> (ids (Q, topk), dists (Q, topk))."""
+    """Full cascade. q: (Q, d) -> (ids (Q, topk'), dists (Q, topk')).
+
+    Shortlist sizes are clamped to what the probe can actually supply:
+    ``n_short_aq`` to the candidate count of the probed buckets,
+    ``n_short_pw`` to the (clamped) ``n_short_aq``, and ``topk`` to the
+    (clamped) ``n_short_pw`` — a `lax.top_k` wider than its input is a
+    trace-time error, and a small index must not force callers to
+    hand-size every shortlist. topk' = the clamped ``topk``.
+    """
     cfg = cfg or index.cfg
     Q = q.shape[0]
     # 1. IVF probe ----------------------------------------------------------
     top_b, cand, cmask = ivf_mod.probe(index.ivf, q, n_probe)
+    n_short_aq = min(n_short_aq, cand.shape[1])
+    n_short_pw = min(n_short_pw, n_short_aq)
+    topk = min(topk, n_short_pw)
     # 2. ADC over candidates (unitary AQ LUT + centroid term) ----------------
     lut_ext = _adc_lut_with_centroids(index, q)           # (Q, M+1, K')
     codes_ext = jnp.concatenate(

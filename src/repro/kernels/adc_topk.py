@@ -11,8 +11,9 @@ running (TQ, k) top-k held in a revisited output block. Only 2*Q*k values
 ever reach HBM — the shape the distributed per-shard search path ships
 over the wire anyway (`collectives.distributed_topk`).
 
-Selection is k sequential masked argmaxes (the `l2_topk` idiom — no sort,
-no gather: the winning global index is recovered by a masked sum). Because
+Selection is k sequential masked argmaxes (`beam_topk.masked_topk`, the
+shared selection primitive of every fused-shortlist kernel — no sort, no
+gather: the winning global index is recovered by a masked sum). Because
 the running list keeps equal-valued entries in ascending-index order and
 earlier tiles precede later ones in the merge candidates, ties resolve
 lowest-index-first — bit-identical to `lax.top_k` over the full matrix.
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.adc_onehot import score_tile
+from repro.kernels.beam_topk import masked_topk
 
 
 def _kernel(*refs, k: int, N: int, tile_n: int, has_norms: bool):
@@ -54,14 +56,9 @@ def _kernel(*refs, k: int, N: int, tile_n: int, has_norms: bool):
     # -- merge into the running top-k (k masked argmaxes on the VPU) --------
     cand_v = jnp.concatenate([v_ref[...], s], axis=1)     # (TQ, k + TN)
     cand_i = jnp.concatenate([i_ref[...], gidx], axis=1)
-    pio = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
-    for a in range(k):                                    # static unroll
-        val = jnp.max(cand_v, axis=1)
-        arg = jnp.argmax(cand_v, axis=1).astype(jnp.int32)
-        hit = pio == arg[:, None]
-        v_ref[:, a] = val
-        i_ref[:, a] = jnp.sum(jnp.where(hit, cand_i, 0), axis=1)
-        cand_v = jnp.where(hit, -jnp.inf, cand_v)
+    vals, ids = masked_topk(cand_v, k, idx=cand_i)
+    v_ref[...] = vals
+    i_ref[...] = ids
 
 
 @functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n",

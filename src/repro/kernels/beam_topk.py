@@ -1,0 +1,170 @@
+"""Fused beam-search selection kernels (ROADMAP: 'the (N, B, A, d)
+expansion tensor also stops round-tripping HBM before top-k').
+
+Two pieces live here:
+
+`masked_topk` is the SHARED kernel-body selection primitive — the running
+masked-argmax idiom that `kernels/adc_topk.py` and `kernels/l2_topk.py`
+each used to inline, factored out so the fused beam ops reuse one
+implementation. It reproduces `lax.top_k` exactly, including the case the
+inlined loops never had to face: when the surviving candidates tie at
+-inf (a beam whose hypotheses are all still unpopulated), `lax.top_k`
+emits the remaining positions in ascending order, whereas a bare
+argmax-over-masked loop would return position 0 repeatedly. A per-row
+`taken` mask (instead of destructive -inf masking) makes the tie-break
+bit-identical in every case.
+
+`preselect_topk` is the fused pre-selector for the L_s >= 1 encode path
+(paper Eq. 6): the g_phi candidate network evaluated on ALL K codewords,
+the squared distance to the step residual, and the top-A selection in ONE
+`pallas_call`. The grid is (N_tiles, L_s) with L_s innermost (sequential
+on TPU); the (tile, K, 128) activation lives in VMEM scratch across the
+L_s iterations and the (tile, K) score block is reduced in place — neither
+the (N, B, K, d) candidate tensor nor the (N, B, K) score matrix ever
+reaches HBM. Only the selected (N, A) indices and distances do.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import stepnet
+
+
+def masked_topk(neg, k: int, idx=None):
+    """Select the k largest entries per row of ``neg`` (R, C), bit-identical
+    to ``lax.top_k(neg, k)`` — values AND tie-break (lowest position first,
+    including ties at -inf).
+
+    Returns (vals (R, k) descending, ids (R, k) int32). ``ids`` are the
+    column positions, or ``idx[r, pos]`` when an ``idx`` (R, C) int32 map
+    is given (the adc_topk running-merge shape, where positions carry
+    global database ids). Static unroll over k — kernel-body safe.
+    """
+    R, C = neg.shape
+    cio = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    taken = jnp.zeros((R, C), jnp.bool_)
+    vals, ids = [], []
+    for _ in range(k):                                    # static unroll
+        masked = jnp.where(taken, -jnp.inf, neg)
+        vmax = jnp.max(masked, axis=1)
+        # eligible = not-yet-taken entries achieving the max; argmax of the
+        # bool mask = first True = lowest position (the lax.top_k order,
+        # correct even when every survivor is -inf)
+        elig = jnp.logical_and(jnp.logical_not(taken),
+                               masked == vmax[:, None])
+        arg = jnp.argmax(elig, axis=1).astype(jnp.int32)
+        hit = cio == arg[:, None]
+        vals.append(vmax)
+        ids.append(arg if idx is None
+                   else jnp.sum(jnp.where(hit, idx, 0), axis=1))
+        taken = jnp.logical_or(taken, hit)
+    return jnp.stack(vals, axis=1), jnp.stack(ids, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused g_phi pre-selection: candidate network + L2 + top-A (Eq. 6, L_s >= 1)
+# ---------------------------------------------------------------------------
+
+
+def _preselect_kernel(*refs, Ls: int, A: int, has_proj: bool):
+    """All-K candidate evaluation + in-VMEM top-A. The candidate 'gather'
+    is the identity (every row scores the full codebook), so no index
+    tensor crosses HBM at all; v_ref (VMEM scratch) carries the (tile, K,
+    de) activations across the sequential L_s iterations."""
+    if has_proj:
+        (cbk_ref, xh_ref, r_ref, cw_ref, cb_ref, w1_ref, w2_ref, ip_ref,
+         op_ref, idx_ref, d2_ref, v_ref) = refs
+    else:
+        (cbk_ref, xh_ref, r_ref, cw_ref, cb_ref, w1_ref, w2_ref,
+         idx_ref, d2_ref, v_ref) = refs
+    l = pl.program_id(1)
+    tn, K, de = v_ref.shape
+    d = cbk_ref.shape[1]
+
+    @pl.when(l == 0)
+    def _concat_in():                                     # Eq. 10-11
+        c = cbk_ref[...]                                  # (K, d)
+        # the codebook is shared across rows: in-project once per tile,
+        # then broadcast (same bits as per-row projection — same matmul)
+        c_emb = c @ ip_ref[...] if has_proj else c        # (K, de)
+        dec = c_emb.shape[-1]
+        ce = jnp.broadcast_to(c_emb[None], (tn, K, dec)).reshape(tn * K, dec)
+        xb = jnp.broadcast_to(xh_ref[...][:, None, :],
+                              (tn, K, d)).reshape(tn * K, d)
+        v = stepnet.concat_in(ce, xb, cw_ref[...], cb_ref[...])
+        v_ref[...] = v.reshape(tn, K, de)
+
+    v = v_ref[...].reshape(tn * K, de)                    # Eq. 12
+    v = stepnet.residual_block(v, w1_ref[0], w2_ref[0])
+    v_ref[...] = v.reshape(tn, K, de)
+
+    @pl.when(l == Ls - 1)
+    def _score_select():                                  # Eq. 13 + Eq. 6
+        vL = v_ref[...].reshape(tn * K, de)
+        cb_flat = jnp.broadcast_to(cbk_ref[...][None],
+                                   (tn, K, d)).reshape(tn * K, d)
+        cand = stepnet.out_add(
+            cb_flat, vL,
+            op_ref[...] if has_proj else None).reshape(tn, K, d)
+        d2 = jnp.sum(jnp.square(r_ref[...][:, None, :] - cand),
+                     axis=-1)                             # (tn, K)
+        vals, args = masked_topk(-d2, A)
+        idx_ref[...] = args
+        d2_ref[...] = -vals
+
+
+@functools.partial(jax.jit, static_argnames=("A", "tile_n", "interpret"))
+def preselect_topk(codebook, xhat, r, A: int, concat_w, concat_b, w1, w2,
+                   in_proj=None, out_proj=None, *, tile_n: int = 8,
+                   interpret: bool = True):
+    """codebook: (K, d) pre-codebook C~; xhat, r: (N, d) flattened beam
+    rows -> (idx (N, A) int32, d2 (N, A) f32 ascending) — the top-A of
+    ||r - g_phi(C~_k | xhat)||^2 over all K codewords, tie-break
+    bit-identical to `lax.top_k(-d2, A)`."""
+    N, d = xhat.shape
+    K = codebook.shape[0]
+    Ls, de, dh = w1.shape[0], w1.shape[1], w1.shape[2]
+    has_proj = in_proj is not None
+    tile_n = min(tile_n, N)
+    pad = (-N) % tile_n
+    if pad:
+        xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+    Np = N + pad
+    ins = [codebook, xhat, r, concat_w, concat_b.reshape(1, de), w1, w2]
+    in_specs = [
+        pl.BlockSpec((K, d), lambda ni, li: (0, 0)),
+        pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((d + de, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de, dh), lambda ni, li: (li, 0, 0)),
+        pl.BlockSpec((1, dh, de), lambda ni, li: (li, 0, 0)),
+    ]
+    if has_proj:
+        ins += [in_proj, out_proj]
+        in_specs += [
+            pl.BlockSpec((d, de), lambda ni, li: (0, 0)),
+            pl.BlockSpec((de, d), lambda ni, li: (0, 0)),
+        ]
+    idx, d2 = pl.pallas_call(
+        functools.partial(_preselect_kernel, Ls=Ls, A=A, has_proj=has_proj),
+        grid=(Np // tile_n, Ls),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tile_n, A), lambda ni, li: (ni, 0)),
+            pl.BlockSpec((tile_n, A), lambda ni, li: (ni, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, A), jnp.int32),
+            jax.ShapeDtypeStruct((Np, A), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((tile_n, K, de), jnp.float32)],
+        interpret=interpret,
+    )(*ins)
+    return idx[:N], d2[:N]

@@ -7,7 +7,8 @@ distance matrix never reaches HBM.
 
 Tiling: grid over N; per tile the codebook (K, d) and its squared norms are
 resident in VMEM (K=256, d<=768 -> <=0.8 MB), distances computed on the MXU
-via r @ cb^T, then A sequential masked argmins on the VPU.
+via r @ cb^T, then A masked argmins on the VPU (`beam_topk.masked_topk`,
+the shared selection primitive of every fused-shortlist kernel).
 """
 from __future__ import annotations
 
@@ -17,24 +18,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.beam_topk import masked_topk
+
 
 def _kernel(r_ref, cb_ref, cb2_ref, idx_ref, d2_ref, *, A: int):
     r = r_ref[...].astype(jnp.float32)                   # (TN, d)
     cb = cb_ref[...].astype(jnp.float32)                 # (K, d)
     cb2 = cb2_ref[...].astype(jnp.float32)               # (1, K)
-    tn, K = r.shape[0], cb.shape[0]
     d2 = (jnp.sum(r * r, axis=1, keepdims=True)
           - 2.0 * jax.lax.dot_general(
               r, cb, (((1,), (1,)), ((), ())),
               preferred_element_type=jnp.float32)
           + cb2)                                         # (TN, K)
-    kiota = jax.lax.broadcasted_iota(jnp.int32, (tn, K), 1)
-    for a in range(A):                                   # static unroll
-        val = jnp.min(d2, axis=1)
-        arg = jnp.argmin(d2, axis=1).astype(jnp.int32)
-        idx_ref[:, a] = arg
-        d2_ref[:, a] = val
-        d2 = jnp.where(kiota == arg[:, None], jnp.inf, d2)
+    vals, args = masked_topk(-d2, A)                     # ascending d2
+    idx_ref[...] = args
+    d2_ref[...] = -vals
 
 
 @functools.partial(jax.jit, static_argnames=("A", "tile_n", "interpret"))

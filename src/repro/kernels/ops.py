@@ -50,6 +50,18 @@ Contract highlights:
     `pallas_call` on the kernel backend, bit-identical to the historical
     `qinco.f_apply` jnp path on the xla backend. Every step-network hot
     path (beam expansion, decode, re-ranking) dispatches through it.
+  - `f_theta_err` is the FULL beam step (§3.2): the indexed f_theta
+    expansion, the per-expansion squared error against the target, the
+    invalid-beam mask, and the flat top-B selection over the B*A
+    expansions in one launch. Only the selected (N, B) indices/errors and
+    the (N, B, d) winning reconstructions reach HBM — the (N, B, A, d)
+    expansion and (N, B, A) error tensors never do. `preselect_topk` is
+    the matching fusion of the L_s >= 1 pre-selector (Eq. 6): g_phi on
+    all K codewords + L2-to-residual + top-A, with no (.., K, d)
+    candidate or (.., K) score tensor leaving VMEM. Both are
+    bit-identical (values and `lax.top_k` tie-breaks) to the unfused
+    composites they replace; `core/encode.py` routes every beam step
+    through them.
 """
 from __future__ import annotations
 
@@ -62,6 +74,7 @@ import numpy as np
 
 from repro.kernels import adc_onehot as _adc
 from repro.kernels import adc_topk as _adct
+from repro.kernels import beam_topk as _bt
 from repro.kernels import kv_dequant_attn as _kva
 from repro.kernels import l2_topk as _l2
 from repro.kernels import ref as _ref
@@ -191,6 +204,112 @@ def f_theta(step_params, c, xhat, *, idx=None, backend: str = "auto",
     return _f_theta_impl(step_params, c, xhat, idx=idx, backend=backend,
                          tile_n=tuning.tile(op, "tile_n", tile_n),
                          interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused beam step: expansion + scoring + top-B selection (paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend", "tile_n", "interpret"))
+def _f_theta_err_impl(step_params, cb, xhat, idx, x, err, *, backend,
+                      tile_n, interpret):
+    p = step_params
+    N, Bb, d = xhat.shape
+    A = idx.shape[-1]
+    L = p["blocks_w1"].shape[0]
+    be = resolve_backend(backend)
+    if interpret is None:
+        interpret = _interpret()
+    if N == 0 or Bb == 0:
+        return (jnp.zeros((N, Bb), jnp.float32),
+                jnp.zeros((N, Bb), jnp.int32),
+                jnp.zeros((N, Bb, d), jnp.float32))
+    if be != "pallas" or L == 0:
+        return _ref.f_theta_err_ref(p, cb, xhat, idx, x, err)
+    return _rm.f_theta_err(
+        idx.reshape(N, Bb * A), cb, xhat, x, err, p["concat_w"],
+        p["concat_b"], p["blocks_w1"], p["blocks_w2"], p.get("in_proj"),
+        p.get("out_proj"), B=Bb, tile_n=tile_n, interpret=interpret)
+
+
+def f_theta_err(step_params, cb, xhat, idx, x, err, *, backend: str = "auto",
+                tile_n: int = None, interpret: bool | None = None):
+    """Fused beam-search step: indexed f_theta expansion + in-VMEM
+    squared-error scoring + flat top-B selection, in ONE launch.
+
+    cb: (K, d) step codebook; xhat: (N, B, d) beam reconstructions;
+    idx: (N, B, A) int candidate indices (uint8 packed or int32);
+    x: (N, d) encode targets; err: (N, B) current beam errors, where
+    +inf marks a not-yet-populated slot (its expansions are masked out).
+
+    Returns (sel_err (N, B) f32, sel_flat (N, B) int32 indices into the
+    flattened B*A expansion, sel_xhat (N, B, d) f32) — bit-identical,
+    values and tie-breaks, to the unfused composite
+    ``ops.f_theta(idx=...)`` + error + ``lax.top_k`` on the same backend.
+    On the pallas path neither the (N, B, A, d) expansion nor the
+    (N, B, A) error tensor reaches HBM: both live in VMEM scratch and
+    only the three selected outputs are kernel outputs.
+    """
+    if idx.shape[:-1] != xhat.shape[:-1]:
+        raise ValueError(f"f_theta_err wants idx (N, B, A) matching xhat "
+                         f"(N, B, d); got {idx.shape} vs {xhat.shape}")
+    if idx.shape[-1] == 0:
+        raise ValueError("f_theta_err needs at least one expansion per "
+                         "beam (A >= 1)")
+    return _f_theta_err_impl(
+        step_params, cb, xhat, idx, x, err, backend=backend,
+        tile_n=tuning.tile("f_theta_err", "tile_n", tile_n),
+        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("A", "backend", "tile_n", "interpret"))
+def _preselect_topk_impl(step_params, cb, xhat, r, A, *, backend, tile_n,
+                         interpret):
+    p = step_params
+    K, d = cb.shape
+    A = min(A, K)
+    Ls = p["blocks_w1"].shape[0]
+    lead = xhat.shape[:-1]
+    n = math.prod(lead)
+    be = resolve_backend(backend)
+    if interpret is None:
+        interpret = _interpret()
+    if n == 0 or A == 0:
+        return (jnp.zeros(lead + (A,), jnp.int32),
+                jnp.zeros(lead + (A,), jnp.float32))
+    if be != "pallas" or Ls == 0:
+        return _ref.preselect_topk_ref(p, cb, xhat, r, A)
+    idx, d2 = _bt.preselect_topk(
+        cb, xhat.reshape(n, d), r.reshape(n, d), A, p["concat_w"],
+        p["concat_b"], p["blocks_w1"], p["blocks_w2"], p.get("in_proj"),
+        p.get("out_proj"), tile_n=tile_n, interpret=interpret)
+    return idx.reshape(lead + (A,)), d2.reshape(lead + (A,))
+
+
+def preselect_topk(step_params, cb, xhat, r, A: int, *,
+                   backend: str = "auto", tile_n: int = None,
+                   interpret: bool | None = None):
+    """Fused L_s >= 1 pre-selection (Eq. 6): the g_phi candidate network
+    evaluated on ALL K codewords + L2 distance to the step residual +
+    top-A, in ONE launch.
+
+    cb: (K, d) pre-codebook C~; xhat, r: (..., d) beam state / residual
+    rows (batch dims match). Returns (idx (..., A) int32, d2 (..., A)
+    ascending) — bit-identical to the unfused
+    ``ops.f_theta(xhat[..., None, :])`` + distance + ``lax.top_k(-d2, A)``
+    composite. On the pallas path neither the (..., K, d) candidate
+    tensor nor the (..., K) score tensor reaches HBM (and unlike the
+    unfused pallas path, no identity index tensor is shipped at all:
+    every row scores the full codebook implicitly).
+    """
+    if xhat.shape != r.shape:
+        raise ValueError(f"preselect_topk wants matching xhat/r shapes; "
+                         f"got {xhat.shape} vs {r.shape}")
+    return _preselect_topk_impl(
+        step_params, cb, xhat, r, A, backend=backend,
+        tile_n=tuning.tile("preselect_topk", "tile_n", tile_n),
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

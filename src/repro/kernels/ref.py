@@ -82,6 +82,43 @@ def f_theta_gather_ref(step_params, codebook, idx, xhat):
     return f_theta_ref(step_params, codebook[idx], xhat[..., None, :])
 
 
+def f_theta_err_ref(step_params, codebook, xhat, idx, x, err):
+    """Fused beam-step oracle: the full expansion-score-select composite,
+    verbatim the pre-fusion `encode._beam_step` math.
+
+    codebook (K, d); xhat (N, B, d); idx (N, B, A) int; x (N, d);
+    err (N, B) with +inf marking unpopulated beam slots ->
+    (sel_err (N, B), sel_flat (N, B) int32 indices into B*A,
+    sel_xhat (N, B, d)). `lax.top_k` tie-breaking (lowest flat index
+    first, including ties at +inf error) is part of the contract the
+    fused kernel reproduces."""
+    N, B, d = xhat.shape
+    A = idx.shape[-1]
+    f_out = f_theta_gather_ref(step_params, codebook, idx, xhat)
+    new_xhat = xhat[..., None, :] + f_out                 # (N, B, A, d)
+    new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
+    new_err = jnp.where(jnp.isinf(err)[..., None], jnp.inf, new_err)
+    flat_err = new_err.reshape(N, B * A)
+    top_err, flat_idx = jax.lax.top_k(-flat_err, B)       # (N, B)
+    sel_xhat = jnp.take_along_axis(
+        new_xhat.reshape(N, B * A, d), flat_idx[..., None], axis=1)
+    return -top_err, flat_idx.astype(jnp.int32), sel_xhat
+
+
+def preselect_topk_ref(step_params, codebook, xhat, r, A: int):
+    """Fused pre-selector oracle (Eq. 6, L_s >= 1): g_phi on all K
+    codewords, L2 distance to the residual, `lax.top_k` — verbatim the
+    pre-fusion `encode.preselect` math (the in-projection runs BEFORE the
+    broadcast, exactly as `f_theta_ref` does).
+
+    codebook (K, d); xhat, r (..., d) -> (idx (..., A) int32,
+    d2 (..., A) ascending)."""
+    cand = f_theta_ref(step_params, codebook, xhat[..., None, :])
+    d2 = jnp.sum(jnp.square(r[..., None, :] - cand), axis=-1)
+    neg, idx = jax.lax.top_k(-d2, A)
+    return idx.astype(jnp.int32), -neg
+
+
 def adc_topk_ref(codes, lut, k: int, *, norms=None):
     """Fused-shortlist oracle: full (Q, N) ADC scores (gather form, with
     the `2*ip - norms` surrogate when norms given) reduced by `lax.top_k`.

@@ -18,6 +18,15 @@ in-kernel as a one-hot MXU matmul (exact: one selected row plus zeros),
 so the beam-search expansion ships (N*B, A) indices — packed uint8 stays
 uint8 across HBM -> VMEM — instead of the (N, B, A, d) candidate tensor.
 
+`f_theta_err` extends the `f_theta_gather` grid through the rest of the
+beam step (paper §3.2): after the candidate add, the same launch computes
+each expansion's squared error against the target x in-VMEM and reduces
+the (tile, B*A) error block to the per-row top-B (via
+`beam_topk.masked_topk` — tie-break bit-identical to `lax.top_k`). Only
+the selected (N, B) flat indices + errors and the (N, B, d) winning
+reconstructions reach HBM; the (N, B, A, d) expansion tensor and the
+(N, B, A) error tensor never do.
+
 This is the decoder hot loop: QINCo2 search re-ranking decodes n_short
 candidates per query, and encoding runs A*B f_theta evaluations per
 vector per step.
@@ -30,6 +39,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import stepnet
+from repro.kernels.beam_topk import masked_topk
 
 
 def _kernel(v_ref, w1_ref, w2_ref, out_ref):
@@ -98,16 +110,16 @@ def _f_theta_kernel(*refs, L: int, has_proj: bool):
     def _concat_in():                                     # Eq. 10-11
         c = c_ref[...]
         c_emb = c @ ip_ref[...] if has_proj else c
-        cat = jnp.concatenate([c_emb, x_ref[...]], axis=-1)
-        v_ref[...] = c_emb + cat @ cw_ref[...] + cb_ref[...]
+        v_ref[...] = stepnet.concat_in(c_emb, x_ref[...], cw_ref[...],
+                                       cb_ref[...])
 
-    v = v_ref[...]                                        # Eq. 12
-    v_ref[...] = v + jax.nn.relu(v @ w1_ref[0]) @ w2_ref[0]
+    v_ref[...] = stepnet.residual_block(v_ref[...], w1_ref[0],
+                                        w2_ref[0])        # Eq. 12
 
     @pl.when(l == L - 1)
     def _out():                                           # Eq. 13
-        vL = v_ref[...]
-        out_ref[...] = c_ref[...] + (vL @ op_ref[...] if has_proj else vL)
+        out_ref[...] = stepnet.out_add(
+            c_ref[...], v_ref[...], op_ref[...] if has_proj else None)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
@@ -172,27 +184,25 @@ def _f_theta_gather_kernel(*refs, L: int, has_proj: bool):
     @pl.when(l == 0)
     def _gather_concat_in():                              # Eq. 10-11
         idx = idx_ref[...].astype(jnp.int32)              # (TN, A)
-        K = cbk_ref.shape[0]
-        kio = jax.lax.broadcasted_iota(jnp.int32, (tn * A, K), 1)
-        onehot = (idx.reshape(tn * A)[:, None] == kio).astype(jnp.float32)
-        c = onehot @ cbk_ref[...]                         # (TN*A, d)
+        c = stepnet.onehot_gather(idx.reshape(tn * A),
+                                  cbk_ref[...])           # (TN*A, d)
         cg_ref[...] = c.reshape(tn, A, d)
         c_emb = c @ ip_ref[...] if has_proj else c
         xb = jnp.broadcast_to(x_ref[...][:, None, :],
                               (tn, A, d)).reshape(tn * A, d)
-        v = c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ cw_ref[...] \
-            + cb_ref[...]
+        v = stepnet.concat_in(c_emb, xb, cw_ref[...], cb_ref[...])
         v_ref[...] = v.reshape(tn, A, de)
 
     v = v_ref[...].reshape(tn * A, de)                    # Eq. 12
-    v = v + jax.nn.relu(v @ w1_ref[0]) @ w2_ref[0]
+    v = stepnet.residual_block(v, w1_ref[0], w2_ref[0])
     v_ref[...] = v.reshape(tn, A, de)
 
     @pl.when(l == L - 1)
     def _out():                                           # Eq. 13
         vL = v_ref[...].reshape(tn * A, de)
-        f = vL @ op_ref[...] if has_proj else vL
-        out_ref[...] = cg_ref[...] + f.reshape(tn, A, d)
+        out = stepnet.out_add(cg_ref[...].reshape(tn * A, d), vL,
+                              op_ref[...] if has_proj else None)
+        out_ref[...] = out.reshape(tn, A, d)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
@@ -243,3 +253,136 @@ def f_theta_gather(idx, codebook, x, concat_w, concat_b, w1, w2,
         interpret=interpret,
     )(*ins)
     return out[:N]
+
+
+# ---------------------------------------------------------------------------
+# Full beam step: expansion + in-VMEM scoring + top-B selection
+# ---------------------------------------------------------------------------
+
+
+def _f_theta_err_kernel(*refs, L: int, B: int, A: int, has_proj: bool):
+    """`_f_theta_gather_kernel` extended through the rest of the beam step:
+    at l == L - 1 the candidate add, the squared error against the target
+    x, the invalid-beam mask, and the top-B selection over the B*A
+    expansions all happen on the VMEM-resident tile. The winning rows are
+    recovered with a one-hot matmul (exact: one selected row plus zeros),
+    so the (tile, B*A, d) expansion never leaves the kernel."""
+    if has_proj:
+        (idx_ref, cbk_ref, xh_ref, x_ref, err_ref, cw_ref, cb_ref, w1_ref,
+         w2_ref, ip_ref, op_ref, oerr_ref, oidx_ref, oxh_ref,
+         v_ref, cg_ref) = refs
+    else:
+        (idx_ref, cbk_ref, xh_ref, x_ref, err_ref, cw_ref, cb_ref, w1_ref,
+         w2_ref, oerr_ref, oidx_ref, oxh_ref, v_ref, cg_ref) = refs
+    l = pl.program_id(1)
+    tn, E, de = v_ref.shape                               # E = B * A
+    d = x_ref.shape[-1]
+
+    @pl.when(l == 0)
+    def _gather_concat_in():                              # Eq. 10-11
+        idx = idx_ref[...].astype(jnp.int32)              # (TN, E)
+        c = stepnet.onehot_gather(idx.reshape(tn * E),
+                                  cbk_ref[...])           # (TN*E, d)
+        cg_ref[...] = c.reshape(tn, E, d)
+        c_emb = c @ ip_ref[...] if has_proj else c
+        xb = jnp.broadcast_to(xh_ref[...][:, :, None, :],
+                              (tn, B, A, d)).reshape(tn * E, d)
+        v = stepnet.concat_in(c_emb, xb, cw_ref[...], cb_ref[...])
+        v_ref[...] = v.reshape(tn, E, de)
+
+    v = v_ref[...].reshape(tn * E, de)                    # Eq. 12
+    v = stepnet.residual_block(v, w1_ref[0], w2_ref[0])
+    v_ref[...] = v.reshape(tn, E, de)
+
+    @pl.when(l == L - 1)
+    def _score_select():                                  # Eq. 13 + Fig. 2
+        vL = v_ref[...].reshape(tn * E, de)
+        f_out = stepnet.out_add(
+            cg_ref[...].reshape(tn * E, d), vL,
+            op_ref[...] if has_proj else None).reshape(tn, E, d)
+        xb = jnp.broadcast_to(xh_ref[...][:, :, None, :],
+                              (tn, B, A, d)).reshape(tn, E, d)
+        new_xhat = xb + f_out                             # (tn, E, d)
+        err = jnp.sum(jnp.square(x_ref[...][:, None, :] - new_xhat),
+                      axis=-1)                            # (tn, E)
+        # expansions of not-yet-populated beams must not be selectable
+        invalid = jnp.isinf(err_ref[...])                 # (tn, B)
+        err = jnp.where(jnp.broadcast_to(invalid[:, :, None],
+                                         (tn, B, A)).reshape(tn, E),
+                        jnp.inf, err)
+        vals, args = masked_topk(-err, B)                 # (tn, B)
+        oerr_ref[...] = -vals
+        oidx_ref[...] = args
+        sel = (args[:, :, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (tn, B, E), 2)).astype(jnp.float32)
+        oxh_ref[...] = jax.lax.dot_general(
+            sel, new_xhat, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)           # (tn, B, d)
+
+
+@functools.partial(jax.jit, static_argnames=("B", "tile_n", "interpret"))
+def f_theta_err(idx, codebook, xhat, x, err, concat_w, concat_b, w1, w2,
+                in_proj=None, out_proj=None, *, B: int, tile_n: int = 8,
+                interpret: bool = True):
+    """idx: (N, B*A) int (uint8 packed or int32); codebook: (K, d);
+    xhat: (N, B, d) beam reconstructions; x: (N, d) targets; err: (N, B)
+    beam errors (+inf = unpopulated slot) ->
+    (sel_err (N, B) f32, sel_flat (N, B) int32 indices into B*A,
+    sel_xhat (N, B, d) f32) — the beam step's flat top-B, bit-identical
+    to the unfused f_theta / error / `lax.top_k` composite."""
+    N, E = idx.shape
+    A = E // B
+    K, d = codebook.shape
+    L, de, dh = w1.shape[0], w1.shape[1], w1.shape[2]
+    has_proj = in_proj is not None
+    if idx.dtype != jnp.uint8:       # packed bytes stay bytes on the wire
+        idx = idx.astype(jnp.int32)
+    tile_n = min(tile_n, N)
+    pad = (-N) % tile_n
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))    # pad index 0: valid row,
+        xhat = jnp.pad(xhat, ((0, pad), (0, 0), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))        # outputs sliced off below
+        err = jnp.pad(err, ((0, pad), (0, 0)))
+    Np = N + pad
+    ins = [idx, codebook, xhat, x, err, concat_w, concat_b.reshape(1, de),
+           w1, w2]
+    in_specs = [
+        pl.BlockSpec((tile_n, E), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((K, d), lambda ni, li: (0, 0)),
+        pl.BlockSpec((tile_n, B, d), lambda ni, li: (ni, 0, 0)),
+        pl.BlockSpec((tile_n, d), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((tile_n, B), lambda ni, li: (ni, 0)),
+        pl.BlockSpec((d + de, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de), lambda ni, li: (0, 0)),
+        pl.BlockSpec((1, de, dh), lambda ni, li: (li, 0, 0)),
+        pl.BlockSpec((1, dh, de), lambda ni, li: (li, 0, 0)),
+    ]
+    if has_proj:
+        ins += [in_proj, out_proj]
+        in_specs += [
+            pl.BlockSpec((d, de), lambda ni, li: (0, 0)),
+            pl.BlockSpec((de, d), lambda ni, li: (0, 0)),
+        ]
+    sel_err, sel_flat, sel_xhat = pl.pallas_call(
+        functools.partial(_f_theta_err_kernel, L=L, B=B, A=A,
+                          has_proj=has_proj),
+        grid=(Np // tile_n, L),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tile_n, B), lambda ni, li: (ni, 0)),
+            pl.BlockSpec((tile_n, B), lambda ni, li: (ni, 0)),
+            pl.BlockSpec((tile_n, B, d), lambda ni, li: (ni, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, B), jnp.float32),
+            jax.ShapeDtypeStruct((Np, B), jnp.int32),
+            jax.ShapeDtypeStruct((Np, B, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_n, E, de), jnp.float32),
+            pltpu.VMEM((tile_n, E, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*ins)
+    return sel_err[:N], sel_flat[:N], sel_xhat[:N]

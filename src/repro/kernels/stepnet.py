@@ -1,0 +1,47 @@
+"""Shared step-network kernel-body stages (paper Eq. 10-13).
+
+Three Pallas kernels execute the f_theta/g_phi step network on a
+VMEM-resident tile — `resmlp._f_theta_kernel` / `_f_theta_gather_kernel`
+/ `_f_theta_err_kernel` and `beam_topk._preselect_kernel`. They MUST all
+build their activations through these helpers (the `adc_onehot.score_tile`
+pattern): the fused == unfused bit-identical contract is then structural
+— one implementation of each stage — instead of four hand-kept copies.
+
+Callers own candidate acquisition (gathered rows, in-kernel one-hot
+gather, or the implicit all-K list) and the in-projection (per row or
+once per tile for a shared codebook); everything downstream of `c_emb`
+goes through here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def onehot_gather(idx, codebook):
+    """In-kernel codebook gather as a one-hot MXU matmul (exact: each
+    output row sums one selected codeword and zeros).
+    idx: (R,) int32; codebook: (K, d) -> (R, d)."""
+    R = idx.shape[0]
+    K = codebook.shape[0]
+    kio = jax.lax.broadcasted_iota(jnp.int32, (R, K), 1)
+    onehot = (idx[:, None] == kio).astype(jnp.float32)
+    return onehot @ codebook
+
+
+def concat_in(c_emb, xb, concat_w, concat_b):
+    """Eq. 10-11 input stage: v_0 = c_emb + L(concat[c_emb ; xhat]) + b.
+    c_emb: (R, de) (already in-projected); xb: (R, d) -> (R, de)."""
+    return c_emb + jnp.concatenate([c_emb, xb], axis=-1) @ concat_w \
+        + concat_b
+
+
+def residual_block(v, w1, w2):
+    """Eq. 12 one residual block: v + relu(v @ w1) @ w2."""
+    return v + jax.nn.relu(v @ w1) @ w2
+
+
+def out_add(c, vL, out_proj=None):
+    """Eq. 13 output stage: f = c + P(v_L) (identity P when no
+    projection)."""
+    return c + (vL @ out_proj if out_proj is not None else vL)

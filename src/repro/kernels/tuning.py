@@ -31,6 +31,8 @@ DEFAULTS: Dict[str, Dict[str, int]] = {
     "resmlp_chain":       {"tile_n": 256},
     "f_theta":            {"tile_n": 128},
     "f_theta_gather":     {"tile_n": 8},
+    "f_theta_err":        {"tile_n": 8},
+    "preselect_topk":     {"tile_n": 8},
     "kv_dequant_attn":    {"tile_t": 512},
 }
 

@@ -1,0 +1,421 @@
+"""The fused beam-step dispatch contract (`ops.f_theta_err` /
+`ops.preselect_topk`):
+
+- `ops.f_theta_err` (expansion + in-VMEM scoring + flat top-B) and
+  `ops.preselect_topk` (g_phi + L2 + top-A) are BIT-identical to the
+  unfused composites they replace, on the xla backend AND in
+  interpret-mode pallas — values and `lax.top_k` tie-breaks, including
+  the all-+inf unpopulated-beam case a bare masked-argmax loop gets
+  wrong;
+- `encode(fused=True)` == `encode(fused=False)` bit-for-bit across
+  QINCo1-greedy (A=K, B=1), pre-selection (A<K, B=1), and beam (B>1)
+  modes, uint8 and int32 candidate indices, on both backends — and
+  reproduces the pre-refactor goldens;
+- both new ops survive empty inputs;
+- the committed tile-table artifact (`benchmarks/tile_tables/`) loads
+  through `serve_search.SearchServer(tile_table=)` and
+  `index.builder.StreamingIndexBuilder(tile_table=)`;
+- `search()` clamps shortlist sizes to the probed candidate count
+  instead of failing at trace time.
+"""
+import json
+import pathlib
+import zlib
+from functools import partial
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.qinco2 import tiny
+from repro.core import encode as enc
+from repro.core import qinco, search, training
+from repro.kernels import beam_topk, ops, ref
+
+from conftest import clustered
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "qinco_golden.npz"
+TILE_TABLE = (pathlib.Path(__file__).parent.parent / "benchmarks"
+              / "tile_tables" / "interpret_cpu.json")
+
+
+def _step_params(rng, d, de, dh, L, proj):
+    p = {
+        "concat_w": jnp.asarray(
+            rng.normal(size=(d + de, de)).astype(np.float32) * 0.1),
+        "concat_b": jnp.asarray(
+            rng.normal(size=(de,)).astype(np.float32) * 0.1),
+        "blocks_w1": jnp.asarray(
+            rng.normal(size=(L, de, dh)).astype(np.float32) * 0.2),
+        "blocks_w2": jnp.asarray(
+            rng.normal(size=(L, dh, de)).astype(np.float32) * 0.2),
+    }
+    if proj:
+        p["in_proj"] = jnp.asarray(
+            rng.normal(size=(d, de)).astype(np.float32) * 0.2)
+        p["out_proj"] = jnp.asarray(
+            rng.normal(size=(de, d)).astype(np.float32) * 0.2)
+    return p
+
+
+def _beam_inputs(rng, N, B, A, K, d, n_valid=None):
+    """Random beam state; beams >= n_valid carry err = +inf (unpopulated)."""
+    xh = jnp.asarray(rng.normal(size=(N, B, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, K, size=(N, B, A)).astype(np.int32))
+    x = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    err = (rng.normal(size=(N, B)) ** 2).astype(np.float32)
+    if n_valid is not None:
+        err[:, n_valid:] = np.inf
+    return xh, idx, x, jnp.asarray(err)
+
+
+# ---------------------------------------------------------------------------
+# masked_topk: the shared selection primitive == lax.top_k, always
+# ---------------------------------------------------------------------------
+
+
+def test_masked_topk_matches_lax_top_k_incl_inf_ties():
+    """The taken-mask selection must reproduce lax.top_k even when the
+    surviving candidates tie at -inf (ascending positions — the case a
+    destructive -inf mask collapses to position 0)."""
+    neg = jnp.asarray(np.array([
+        [-np.inf, -np.inf, 3.0, -np.inf],
+        [1.0, 1.0, 1.0, 1.0],
+        [2.0, -np.inf, 2.0, 5.0],
+        [-np.inf, -np.inf, -np.inf, -np.inf],
+    ], np.float32))
+    for k in (1, 2, 3, 4):
+        want_v, want_i = lax.top_k(neg, k)
+        got_v, got_i = beam_topk.masked_topk(neg, k)
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_masked_topk_index_map():
+    rng = np.random.default_rng(0)
+    neg = jnp.asarray(rng.normal(size=(5, 12)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 999, size=(5, 12)).astype(np.int32))
+    want_v, pos = lax.top_k(neg, 4)
+    got_v, got_i = beam_topk.masked_topk(neg, 4, idx=idx)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i),
+                                  np.take_along_axis(np.asarray(idx),
+                                                     np.asarray(pos), 1))
+
+
+# ---------------------------------------------------------------------------
+# f_theta_err: fused == unfused composite, bitwise, per backend
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _unfused_beam_composite(p, cb, xh, idx, x, err, backend):
+    """The pre-fusion `_beam_step` selection math, on a given backend.
+
+    Jitted as one computation, like the encode scan that used to inline
+    it: the bitwise contract holds under a common jit (eager op-by-op
+    dispatch fuses the error reduction differently)."""
+    N, B, d = xh.shape
+    A = idx.shape[-1]
+    f_out = ops.f_theta(p, cb, xh, idx=idx, backend=backend)
+    new_xhat = xh[..., None, :] + f_out
+    new_err = jnp.sum(jnp.square(x[:, None, None, :] - new_xhat), -1)
+    new_err = jnp.where(jnp.isinf(err)[..., None], jnp.inf, new_err)
+    top_err, flat_idx = lax.top_k(-new_err.reshape(N, B * A), B)
+    sel = jnp.take_along_axis(new_xhat.reshape(N, B * A, d),
+                              flat_idx[..., None], axis=1)
+    return -top_err, flat_idx.astype(jnp.int32), sel
+
+
+@pytest.mark.parametrize("proj", [True, False])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_f_theta_err_bitwise(proj, backend):
+    rng = np.random.default_rng(7 + proj)
+    d, de, dh, L, K, N, B, A = 16, 24 if proj else 16, 32, 2, 16, 23, 4, 5
+    p = _step_params(rng, d, de, dh, L, proj)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    xh, idx, x, err = _beam_inputs(rng, N, B, A, K, d, n_valid=2)
+    want = _unfused_beam_composite(p, cb, xh, idx, x, err, backend)
+    got = ops.f_theta_err(p, cb, xh, idx, x, err, backend=backend, tile_n=4)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_f_theta_err_all_inf_beam_ties(backend):
+    """B > valid*A at step 0: the flat top-B must pad with +inf slots in
+    ascending flat order, exactly as lax.top_k does."""
+    rng = np.random.default_rng(3)
+    d, K, N, B, A = 8, 8, 9, 4, 2
+    p = _step_params(rng, d, 12, 16, 1, True)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    xh, idx, x, err = _beam_inputs(rng, N, B, A, K, d, n_valid=1)
+    want = _unfused_beam_composite(p, cb, xh, idx, x, err, backend)
+    got = ops.f_theta_err(p, cb, xh, idx, x, err, backend=backend, tile_n=2)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_f_theta_err_packed_uint8_indices():
+    rng = np.random.default_rng(11)
+    d, K, N, B, A = 8, 16, 13, 2, 4
+    p = _step_params(rng, d, 12, 16, 1, True)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    xh, idx, x, err = _beam_inputs(rng, N, B, A, K, d, n_valid=1)
+    for backend in ("xla", "pallas"):
+        a = ops.f_theta_err(p, cb, xh, idx.astype(jnp.uint8), x, err,
+                            backend=backend, tile_n=4)
+        b = ops.f_theta_err(p, cb, xh, idx.astype(jnp.int32), x, err,
+                            backend=backend, tile_n=4)
+        for ai, bi in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(ai), np.asarray(bi))
+
+
+def test_f_theta_err_cross_backend_bitwise():
+    rng = np.random.default_rng(5)
+    d, K, N, B, A = 12, 16, 17, 3, 4
+    p = _step_params(rng, d, 16, 16, 2, True)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    xh, idx, x, err = _beam_inputs(rng, N, B, A, K, d, n_valid=2)
+    ax = ops.f_theta_err(p, cb, xh, idx, x, err, backend="xla")
+    ap = ops.f_theta_err(p, cb, xh, idx, x, err, backend="pallas", tile_n=8)
+    for xi, pi in zip(ax, ap):
+        np.testing.assert_array_equal(np.asarray(xi), np.asarray(pi))
+
+
+# ---------------------------------------------------------------------------
+# preselect_topk: fused == unfused composite, bitwise, per backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("proj", [True, False])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_preselect_topk_bitwise(proj, backend):
+    rng = np.random.default_rng(13 + proj)
+    d, de, Ls, K, N, B, A = 12, 16 if proj else 12, 2, 16, 9, 3, 4
+    p = _step_params(rng, d, de, de, Ls, proj)
+    cb = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    xh = jnp.asarray(rng.normal(size=(N, B, d)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(N, B, d)).astype(np.float32))
+
+    @partial(jax.jit, static_argnames=("backend",))   # one computation,
+    def composite(p, cb, xh, r, backend):             # like the encode scan
+        cand = ops.f_theta(p, cb, xh[..., None, :], backend=backend)
+        d2 = jnp.sum(jnp.square(r[..., None, :] - cand), axis=-1)
+        neg, idx = lax.top_k(-d2, A)
+        return idx, -neg
+
+    want_i, want_d2 = composite(p, cb, xh, r, backend)
+    got_i, got_d2 = ops.preselect_topk(p, cb, xh, r, A, backend=backend,
+                                       tile_n=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d2), np.asarray(want_d2))
+
+
+def test_preselect_topk_duplicate_codewords_tie_break():
+    """Duplicate pre-codebook rows score identically: both backends must
+    select the earliest copies in index order (the top_k contract)."""
+    rng = np.random.default_rng(1)
+    d, Ls, N = 8, 1, 7
+    p = _step_params(rng, d, 12, 12, Ls, True)
+    base = rng.normal(size=(4, d)).astype(np.float32)
+    cb = jnp.asarray(np.tile(base, (4, 1)))               # 4 copies each
+    xh = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    ix, _ = ops.preselect_topk(p, cb, xh, r, 8, backend="xla")
+    ip, _ = ops.preselect_topk(p, cb, xh, r, 8, backend="pallas", tile_n=2)
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ip))
+
+
+# ---------------------------------------------------------------------------
+# encode: fused == unfused end to end, all three modes, both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,cfg_kw,A,B", [
+    ("qinco1-greedy", dict(d=8, de=8, dh=16, M=3, K=8, qinco1_mode=True),
+     8, 1),
+    ("preselect", {}, 4, 1),
+    ("beam", {}, 8, 8),
+    ("beam-narrow", {}, 2, 4),         # A < B: +inf ties in the flat top-B
+    ("beam-ls1", dict(d=12, de=16, dh=16, M=3, K=16, Ls=1), 4, 4),
+])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_encode_fused_equals_unfused(mode, cfg_kw, A, B, backend):
+    rng = np.random.default_rng(zlib.crc32(mode.encode()))  # stable seed
+    cfg = tiny(**cfg_kw)
+    x = jnp.asarray(clustered(rng, 48, cfg.d))
+    params = training.init_qinco2(jax.random.key(0), x, cfg)
+    cf, xf, mf = enc.encode(params, x, cfg, A, B, backend=backend,
+                            fused=True)
+    cu, xu, mu = enc.encode(params, x, cfg, A, B, backend=backend,
+                            fused=False)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cu))
+    np.testing.assert_array_equal(np.asarray(xf), np.asarray(xu))
+    assert float(mf) == float(mu)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fused_encode_matches_golden_qinco2(golden, backend):
+    x = golden["q2_x"]
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), x, cfg)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, 4, 4,
+                                backend=backend, fused=True)
+    np.testing.assert_array_equal(np.asarray(codes), golden["q2_codes"])
+    np.testing.assert_array_equal(np.asarray(xhat), golden["q2_xhat"])
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fused_encode_matches_golden_preselector(golden, backend):
+    x = golden["ls_x"]
+    cfg = tiny(d=12, de=16, dh=16, M=3, K=16, Ls=1)
+    params = training.init_qinco2(jax.random.key(3), x, cfg)
+    codes, xhat, _ = enc.encode(params, jnp.asarray(x), cfg, 4, 4,
+                                backend=backend, fused=True)
+    np.testing.assert_array_equal(np.asarray(codes), golden["ls_codes"])
+    np.testing.assert_array_equal(np.asarray(xhat), golden["ls_xhat"])
+
+
+def test_exhaustive_preselect_ships_packed_uint8():
+    """A >= K: the identity candidate list is packed uint8 when the
+    alphabet fits a byte (4x less pre-selector wire than int32)."""
+    cfg = tiny()
+    idx = enc.preselect(None, jnp.zeros((3, 2, cfg.d)),
+                        jnp.zeros((3, 2, cfg.d)), None, cfg.K, cfg)
+    assert idx.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(idx),
+        np.broadcast_to(np.arange(cfg.K), (3, 2, cfg.K)))
+
+
+# ---------------------------------------------------------------------------
+# empty inputs + input validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_empty_inputs_fused_beam_ops(backend):
+    rng = np.random.default_rng(0)
+    f32 = np.float32
+    p = _step_params(rng, 8, 12, 16, 1, True)
+    cb = jnp.asarray(rng.normal(size=(16, 8)).astype(f32))
+    # f_theta_err: empty batch and empty beam
+    e, i, xh = ops.f_theta_err(
+        p, cb, jnp.zeros((0, 3, 8), f32), jnp.zeros((0, 3, 4), np.int32),
+        jnp.zeros((0, 8), f32), jnp.zeros((0, 3), f32), backend=backend)
+    assert e.shape == (0, 3) and i.shape == (0, 3) and xh.shape == (0, 3, 8)
+    e, i, xh = ops.f_theta_err(
+        p, cb, jnp.zeros((5, 0, 8), f32), jnp.zeros((5, 0, 4), np.int32),
+        jnp.zeros((5, 8), f32), jnp.zeros((5, 0), f32), backend=backend)
+    assert e.shape == (5, 0) and i.shape == (5, 0) and xh.shape == (5, 0, 8)
+    # preselect_topk: empty rows
+    ix, d2 = ops.preselect_topk(p, cb, jnp.zeros((0, 2, 8), f32),
+                                jnp.zeros((0, 2, 8), f32), 4,
+                                backend=backend)
+    assert ix.shape == (0, 2, 4) and d2.shape == (0, 2, 4)
+
+
+def test_f_theta_err_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    p = _step_params(rng, 8, 12, 16, 1, True)
+    cb = jnp.zeros((16, 8), np.float32)
+    with pytest.raises(ValueError):
+        ops.f_theta_err(p, cb, jnp.zeros((3, 2, 8), np.float32),
+                        jnp.zeros((4, 2, 5), np.int32),
+                        jnp.zeros((3, 8), np.float32),
+                        jnp.zeros((3, 2), np.float32))
+    with pytest.raises(ValueError):
+        ops.f_theta_err(p, cb, jnp.zeros((3, 2, 8), np.float32),
+                        jnp.zeros((3, 2, 0), np.int32),
+                        jnp.zeros((3, 8), np.float32),
+                        jnp.zeros((3, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# search shortlist clamping (regression: top_k wider than its input)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    rng = np.random.default_rng(0)
+    cfg = tiny(epochs=1)
+    xb = clustered(rng, 300, cfg.d)
+    params = training.init_qinco2(jax.random.key(0), xb[:128], cfg)
+    return search.build_index(jax.random.key(1), jnp.asarray(xb), params,
+                              cfg, k_ivf=8, m_tilde=2, n_pair_books=4), cfg
+
+
+def test_search_clamps_oversized_shortlists(tiny_index):
+    """n_short_aq / n_short_pw / topk larger than the probed candidate
+    count used to fail at trace time; now they clamp to it."""
+    index, cfg = tiny_index
+    q = jnp.asarray(np.asarray(index.ivf.centroids[:5]) + 0.01)
+    C = index.ivf.buckets.shape[1] * 2                    # n_probe = 2
+    ids, dists = search.search(index, q, n_probe=2, n_short_aq=10_000,
+                               n_short_pw=5_000, topk=2_000, cfg=cfg)
+    assert ids.shape == (5, C) and dists.shape == (5, C)
+    want_ids, want_d = search.search(index, q, n_probe=2, n_short_aq=C,
+                                     n_short_pw=C, topk=C, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+    np.testing.assert_array_equal(np.asarray(dists), np.asarray(want_d))
+
+
+def test_search_clamp_chain_topk_only(tiny_index):
+    """topk > n_short_pw clamps to it (the chain clamps stepwise)."""
+    index, cfg = tiny_index
+    q = jnp.asarray(np.asarray(index.ivf.centroids[:3]) + 0.01)
+    ids, dists = search.search(index, q, n_probe=4, n_short_aq=16,
+                               n_short_pw=8, topk=64, cfg=cfg)
+    assert ids.shape == (3, 8) and dists.shape == (3, 8)
+
+
+# ---------------------------------------------------------------------------
+# tile-table artifact: committed sweep loads through the entry points
+# ---------------------------------------------------------------------------
+
+
+def test_tile_table_artifact_exists_and_covers_beam_ops():
+    data = json.loads(TILE_TABLE.read_text())
+    assert "f_theta_err" in data and "preselect_topk" in data
+    for op, sizes in data.items():
+        for name, v in sizes.items():
+            assert isinstance(v, int) and v >= 1, (op, name, v)
+
+
+def test_tile_table_loads_via_builder(tmp_path):
+    from repro.index.builder import StreamingIndexBuilder
+    from repro.kernels import tuning
+    want = json.loads(TILE_TABLE.read_text())
+    try:
+        tuning.reset()
+        StreamingIndexBuilder(tmp_path / "store", tile_table=TILE_TABLE)
+        for op, sizes in want.items():
+            assert tuning.tiles(op) == sizes
+    finally:
+        tuning.reset()
+
+
+def test_tile_table_loads_via_serve_search(tiny_index):
+    from repro.kernels import tuning
+    from repro.launch.serve_search import SearchServer
+    index, _ = tiny_index
+    want = json.loads(TILE_TABLE.read_text())
+    try:
+        tuning.reset()
+        srv = SearchServer(index, micro_batch=4, n_probe=2, n_short_aq=8,
+                           n_short_pw=4, topk=2, tile_table=TILE_TABLE)
+        for op, sizes in want.items():
+            assert tuning.tiles(op) == sizes
+        ids, _ = srv.search_batch(np.zeros((2, srv.d), np.float32))
+        assert ids.shape == (2, 2)
+    finally:
+        tuning.reset()

@@ -20,13 +20,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=[None, "t3", "t4", "s2", "f5", "f6", "roofline",
-                             "backends", "encode", "index"])
+                             "backends", "encode", "index", "search"])
     args = ap.parse_args()
     fast = not args.full
     sections = {
         "t3": _t3, "t4": _t4, "s2": _s2, "f5": _f5, "f6": _f6,
         "roofline": _roof, "backends": _backends, "encode": _encode,
-        "index": _index,
+        "index": _index, "search": _search,
     }
     todo = [args.only] if args.only else list(sections)
     print("name,us_per_call,derived")
@@ -120,6 +120,19 @@ def _index(fast):
     return (f"build_vps={d['build_vecs_per_s']:.0f};"
             f"bytes_per_vec={d['disk_bytes_per_vec']:.1f};"
             f"load_ms={d['load_to_first_query_ms']:.0f}")
+
+
+def _search(fast):
+    from benchmarks import search_throughput as st
+    print("\n== search throughput: resident vs out-of-core ==")
+    rows = st.main(fast=fast, json_path="BENCH_search.json")
+    res = [r for r in rows if r["mode"] == "resident"][0]
+    ooc = [r for r in rows if r["mode"] == "out_of_core"]
+    best = max(ooc, key=lambda r: r["qps"])
+    return (f"resident_qps={res['qps']:.0f};"
+            f"ooc_qps={best['qps']:.0f}@shards={best['n_shards']};"
+            f"ooc_over_resident={best['qps'] / res['qps']:.2f};"
+            f"json=BENCH_search.json")
 
 
 def _roof(fast):

@@ -1,0 +1,110 @@
+"""Search-side serving throughput: resident vs out-of-core, across shard
+counts.
+
+The search cascade is QINCo2's serving cost (paper §3.3 / Fig. 6); since
+the out-of-core PR it can run either against a resident `SearchIndex`
+(`search()`, one fused executable) or against a `ShardedIndexView`
+(`search_sharded()`, per-shard `ops.adc_topk` + running merge, database
+mmap'd on disk). This section builds one small store, times batched
+queries through both paths — the out-of-core one at several shard counts
+(more shards = more per-shard launches + merges against the same total
+work, the steady-state serving trade) — and reports QPS plus per-batch
+p50/p99 latency per row.
+
+Out-of-core rows are the steady-state shape: the shard LRU is sized to
+hold every shard, so after warmup the timings measure the scan/merge
+overhead, not disk re-staging. `main(json_path=...)` writes the rows as
+machine-readable JSON (`benchmarks/run.py --only search` ->
+BENCH_search.json) so the search perf trajectory is recorded per CI run
+like encode/kernels.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_data
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import IndexStore, ShardedIndexView
+
+SHARD_COUNTS = (1, 4, 8)
+SEARCH_KW = dict(n_probe=8, n_short_aq=64, n_short_pw=16, topk=10)
+
+
+def _time_batches(fn, q, *, reps, warmup=2):
+    """Per-batch wall-clock latencies (ms) after warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(q))
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q))
+        lat.append((time.perf_counter() - t0) * 1e3)
+    return np.asarray(lat)
+
+
+def _row(mode, n_shards, lat_ms, batch):
+    # qps from the BEST batch (additive-noise-robust, like
+    # `common.timeit_us`): it is the gated metric in check_bench, so a
+    # single scheduler stall must not read as a regression. The latency
+    # percentiles keep the full distribution for the record.
+    return {
+        "mode": mode, "n_shards": n_shards,
+        "qps": float(batch / (lat_ms.min() / 1e3)),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+    }
+
+
+def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
+        shard_counts=SHARD_COUNTS, reps=10):
+    xt, xb, xq, _ = bench_data("bigann", dim=dim, n_db=n_db, n_query=batch,
+                               seed=seed)
+    cfg = tiny(d=dim, M=M, K=K, epochs=1, batch_size=256)
+    params = training.init_qinco2(jax.random.key(seed), xt, cfg)
+    idx = search.build_index(jax.random.key(seed + 1), jnp.asarray(xb),
+                             params, cfg, k_ivf=16, m_tilde=2,
+                             n_pair_books=2 * M)
+    q = jnp.asarray(xq[:batch])
+
+    rows = [_row("resident", 1, _time_batches(
+        lambda qq: search.search(idx, qq, cfg=cfg, **SEARCH_KW),
+        q, reps=reps), batch)]
+    for n_shards in shard_counts:
+        d = tempfile.mkdtemp(prefix="bench_search_")
+        try:
+            IndexStore.save(d, idx, shard_size=-(-n_db // n_shards))
+            view = ShardedIndexView(d, max_resident_shards=n_shards)
+            rows.append(_row("out_of_core", n_shards, _time_batches(
+                lambda qq: search.search_sharded(view, qq, cfg=cfg,
+                                                 **SEARCH_KW),
+                q, reps=reps), batch))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def main(fast=True, json_path=None):
+    rows = run(n_db=2048 if fast else 16384, reps=10 if fast else 30,
+               shard_counts=SHARD_COUNTS if fast else SHARD_COUNTS + (16,))
+    print("mode,n_shards,qps,p50_ms,p99_ms")
+    for r in rows:
+        print(f"{r['mode']},{r['n_shards']},{r['qps']:.0f},"
+              f"{r['p50_ms']:.2f},{r['p99_ms']:.2f}")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump({"device": jax.default_backend(), "rows": rows}, f,
+                      indent=2)
+        print(f"[search_throughput] wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False, json_path="BENCH_search.json")

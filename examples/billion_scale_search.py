@@ -1,14 +1,19 @@
 """Billion-scale index lifecycle at demonstration scale, end-to-end
 through the persistent `repro.index` subsystem:
 
-    build (streaming, killed mid-dataset) -> resume -> save
-      -> load (mmap-backed) -> batched query serving
+    sharded build (2 owners, one killed mid-range) -> resume
+      -> load (resident) -> out-of-core serving off the mmap'd shards
 
 Codes are packed uint8 on disk AND in HBM (4x smaller than int32); the
 per-shard ADC scan consumes the packed bytes directly through the Pallas
-one-hot kernel path (`kernels/ops`), and an interrupted build restarts
-from its shard cursor — the Fig. 3 pipeline the 512-chip dry-run lowers,
-made durable.
+one-hot kernel path (`kernels/ops`). The build is data-axis sharded:
+each "host" owns a contiguous shard range of ONE store and writes
+disjoint files (byte-identical to a single-process build), and a killed
+owner resumes from its own cursor. Serving then runs out-of-core:
+`search_sharded` streams the fused per-shard `ops.adc_topk` shortlist
+over an LRU of staged shards and gathers only shortlist rows for the
+re-rank — bit-identical to resident `search()`, with device residency
+bounded by the LRU budget instead of the database size.
 
     PYTHONPATH=src python examples/billion_scale_search.py
 """
@@ -22,7 +27,7 @@ import numpy as np
 from repro.configs.qinco2 import tiny
 from repro.core import search, training
 from repro.data.synthetic import make_splits
-from repro.index import IndexStore, StreamingIndexBuilder
+from repro.index import IndexStore, ShardedIndexView, StreamingIndexBuilder
 from repro.launch.serve_search import SearchServer, synthetic_stream
 
 # data ------------------------------------------------------------------------
@@ -40,7 +45,7 @@ gt = np.argmin(((xq[:, None] - xb[None]) ** 2).sum(-1), axis=1)
 cfg = tiny(d=dim, M=4, K=16, de=32, dh=48, L=2, epochs=2, batch_size=512)
 params, _ = training.train(jax.random.key(0), xt, cfg, verbose=False)
 
-# build -> kill -> resume -----------------------------------------------------
+# sharded build: 2 owners, owner 1 killed mid-range, resumed -----------------
 store_dir = tempfile.mkdtemp(prefix="qinco2_index_")
 
 
@@ -53,13 +58,18 @@ def make_builder():
 
 
 t0 = time.time()
-done = make_builder().build(xb, max_shards=2)       # "power loss" mid-build
-assert not done, "expected the interrupted run to stop before completion"
-print(f"-- interrupted after 2/{IndexStore(store_dir).manifest['n_shards']} "
-      f"shards; restarting from the cursor --")
-resumed_done = make_builder().build(xb)             # fresh builder resumes
-assert resumed_done
-print(f"streaming build (incl. interruption): {time.time() - t0:.2f}s")
+done = make_builder().build(xb, host_id=0, n_hosts=2)  # owner 0: shards [0,2)
+assert not done, "owner 0 alone must not complete the store"
+done = make_builder().build(xb, host_id=1, n_hosts=2,
+                            max_shards=1)           # owner 1 "power loss"
+assert not done, "expected the interrupted owner to stop before completion"
+print(f"-- owner 1 interrupted mid-range "
+      f"({IndexStore(store_dir).manifest['n_shards']} shards total); "
+      f"restarting from its cursor --")
+done = make_builder().build(xb, host_id=1, n_hosts=2)  # resumes, finalizes
+assert done
+print(f"sharded build (2 owners, incl. interruption): "
+      f"{time.time() - t0:.2f}s")
 
 # load (mmap) -----------------------------------------------------------------
 t0 = time.time()
@@ -77,12 +87,26 @@ r1 = float((np.asarray(ids[:, 0]) == gt).mean())
 print(f"store-loaded cascade R@1: {r1:.3f}")
 assert r1 > 0.3
 
-# batched query serving -------------------------------------------------------
-server = SearchServer(idx, micro_batch=16, n_probe=8, n_short_aq=64,
+# out-of-core: shards stay mmap'd, bit-identical to resident search ----------
+view = ShardedIndexView(store_dir, max_resident_shards=1)
+ids_oc, dists_oc = search.search_sharded(view, jnp.asarray(xq), n_probe=8,
+                                         n_short_aq=64, n_short_pw=16,
+                                         topk=1, cfg=cfg)
+ref_ids, ref_d = search.search(idx, jnp.asarray(xq), n_probe=8,
+                               n_short_aq=64, n_short_pw=16, topk=1, cfg=cfg)
+np.testing.assert_array_equal(np.asarray(ids_oc), np.asarray(ref_ids))
+np.testing.assert_array_equal(np.asarray(dists_oc), np.asarray(ref_d))
+print(f"out-of-core == resident (bit-identical); peak staged "
+      f"{view.peak_resident_bytes / 1e3:.0f} kB of "
+      f"{view.budget_bytes / 1e3:.0f} kB budget "
+      f"({len(view.shard_ids)} shards on disk)")
+
+# batched query serving, straight off the mmap'd store ------------------------
+server = SearchServer(view, micro_batch=16, n_probe=8, n_short_aq=64,
                       n_short_pw=16, topk=10)
-q_stream, arrivals = synthetic_stream(idx, n_queries=128, rate_qps=1000.0)
+q_stream, arrivals = synthetic_stream(view, n_queries=128, rate_qps=1000.0)
 stats = server.serve_stream(q_stream, arrivals, max_wait_s=2e-3)
-print(f"serving: {stats.row()}")
+print(f"out-of-core serving: {stats.row()}")
 
 import shutil
 shutil.rmtree(store_dir, ignore_errors=True)

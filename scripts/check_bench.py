@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""Bench-regression gate: compare freshly emitted BENCH_*.json rows
+against the committed baselines in benchmarks/baselines/.
+
+    python scripts/check_bench.py                 # gate (exit 1 on regression)
+    python scripts/check_bench.py --tol 0.5       # widen the tolerance
+    python scripts/check_bench.py --bless         # accept current as baseline
+    BENCH_TOL=0.5 python scripts/check_bench.py   # env override
+
+Each benchmark file has one gated metric with a known good direction
+(lower-better us/vec for kernels, higher-better vecs/s / QPS for encode
+and search).
+
+The comparison is LOAD-NORMALIZED: shared-CI machines drift 2-3x with
+background load, which moves every row of a file together, while a real
+perf cliff (a fusion silently disabled, a kernel falling back) moves
+specific rows against the rest. So a row regresses when its drift vs
+baseline exceeds the file's MEDIAN drift by more than the relative
+tolerance (default +-35%); the median drift itself is only flagged past
+a much wider global backstop (default 4x) that machine weather does not
+reach. Blind spot, accepted: a uniform whole-file regression smaller
+than the backstop rides the normalization — the per-row check exists to
+catch op-level cliffs, the backstop to catch collapse.
+
+Rows present on only one side (new ops, retired ops) are reported but
+never fail the gate; re-bless to adopt them. A missing baseline file is
+a note, not a failure, so bootstrapping a new BENCH artifact doesn't
+brick CI. Baselines bless via PESSIMISTIC per-row merge (see --bless):
+they converge to the slow edge of the machine's noise band, so normal
+runs — including slow-mode runs of bimodal rows — land inside the band
+and a real cliff falls out of it. `scripts/ci.sh` runs this after the
+bench smokes (with one re-measure retry); set BENCH_GATE=0 there to
+skip it entirely (escape hatch for known-noisy machines).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import statistics
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE_DIR = REPO / "benchmarks" / "baselines"
+
+# file -> (row-key fields, gated metric, direction)
+SPECS = {
+    "BENCH_kernels.json": (("op", "backend", "mode"), "us_per_vec", "lower"),
+    "BENCH_encode.json": (("op", "backend", "fused", "mode"), "vecs_per_s",
+                          "higher"),
+    "BENCH_search.json": (("mode", "n_shards"), "qps", "higher"),
+}
+
+
+def _rows(path: Path):
+    data = json.loads(path.read_text())
+    return data["rows"] if isinstance(data, dict) else data
+
+
+def _key(row, fields):
+    return tuple(str(row.get(f)) for f in fields)
+
+
+def check_file(name: str, tol: float, global_tol: float) -> tuple:
+    """-> (n_regressions, lines to print)."""
+    fields, metric, direction = SPECS[name]
+    fresh_p, base_p = REPO / name, BASELINE_DIR / name
+    if not fresh_p.exists():
+        return 1, [f"  MISSING fresh {name} (bench smoke did not run?)"]
+    if not base_p.exists():
+        return 0, [f"  no baseline {base_p.relative_to(REPO)} — skipped "
+                   f"(run scripts/check_bench.py --bless to create)"]
+    fresh = {_key(r, fields): r[metric] for r in _rows(fresh_p)}
+    base = {_key(r, fields): r[metric] for r in _rows(base_p)}
+    # per-row drift in log space, oriented so "worse" is positive
+    drift = {}
+    for k in base.keys() & fresh.keys():
+        b, f = base[k], fresh[k]
+        if b > 0 and f > 0:
+            drift[k] = (math.log(f / b) if direction == "lower"
+                        else math.log(b / f))
+    med = statistics.median(drift.values()) if drift else 0.0
+    # center only on machine-wide SLOWNESS: against the pessimistic
+    # baselines a quiet run drifts negative across the board, and
+    # centering on that would punish any row sitting at its slow edge
+    med_c = max(med, 0.0)
+    lines, bad = [], 0
+    width = max((len(",".join(k)) for k in fresh | base), default=10)
+    lines.append(f"  load drift (median across rows): "
+                 f"{math.exp(med) - 1:+.1%} "
+                 f"(slowness normalized out; backstop {global_tol:.0%})")
+    lines.append(f"  {'row'.ljust(width)}  {'base':>12} {'fresh':>12} "
+                 f"{'drift':>8} {'vs med':>8}  status")
+    for k in sorted(base):
+        label = ",".join(k).ljust(width)
+        if k not in fresh:
+            lines.append(f"  {label}  {base[k]:12.3f} {'-':>12} {'-':>8} "
+                         f"{'-':>8}  gone (not gated)")
+            continue
+        rel = math.exp(drift.get(k, 0.0)) - 1            # worse-oriented
+        excess = math.exp(drift.get(k, 0.0) - med_c) - 1  # vs machine drift
+        worse = excess > tol
+        bad += worse
+        lines.append(f"  {label}  {base[k]:12.3f} {fresh[k]:12.3f} "
+                     f"{rel:+7.1%} {excess:+7.1%}  "
+                     f"{'REGRESSION' if worse else 'ok'}")
+    for k in sorted(fresh.keys() - base.keys()):
+        lines.append(f"  {','.join(k).ljust(width)}  {'-':>12} "
+                     f"{fresh[k]:12.3f} {'-':>8} {'-':>8}  new (not gated)")
+    if med > math.log1p(global_tol):
+        bad += 1
+        lines.append(f"  GLOBAL REGRESSION: median drift "
+                     f"{math.exp(med) - 1:+.1%} exceeds the "
+                     f"{global_tol:.0%} backstop — the whole file got "
+                     f"slower, beyond machine weather")
+    return bad, lines
+
+
+def bless(reset: bool = False) -> int:
+    """Adopt current BENCH_*.json values as baselines.
+
+    By default each row MERGES pessimistically with the existing
+    baseline (keep the slower us/vec, the lower vecs/s-or-QPS):
+    repeated blessing converges every baseline to the slow edge of the
+    machine's noise band. That is the right reference for regression
+    DETECTION on a noisy box — normal runs land inside the band and
+    pass, and a genuine cliff falls below it. Blessing against the fast
+    edge would instead flag every slow-mode run of a bimodal row.
+    ``--bless-reset`` overwrites outright (use after an intentional perf
+    change or on a new machine)."""
+    BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+    for name, (fields, metric, direction) in SPECS.items():
+        src = REPO / name
+        if not src.exists():
+            print(f"[check_bench] {name} not present; skipped")
+            continue
+        data = json.loads(src.read_text())
+        base_p = BASELINE_DIR / name
+        if not reset and base_p.exists():
+            old = {_key(r, fields): r[metric] for r in _rows(base_p)}
+            pick = max if direction == "lower" else min
+            for r in data["rows"]:
+                k = _key(r, fields)
+                if k in old:
+                    r[metric] = pick(r[metric], old[k])
+        base_p.write_text(json.dumps(data, indent=2))
+        print(f"[check_bench] blessed {name} -> "
+              f"{base_p.relative_to(REPO)}"
+              f"{' (reset)' if reset else ' (pessimistic merge)'}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_TOL", 0.35)),
+                    help="per-row tolerance vs the file's median drift "
+                         "(default 0.35)")
+    ap.add_argument("--global-tol", type=float,
+                    default=float(os.environ.get("BENCH_GLOBAL_TOL", 3.0)),
+                    help="backstop on the median drift itself "
+                         "(default 3.0 = whole file 4x slower)")
+    ap.add_argument("--bless", action="store_true",
+                    help="adopt current BENCH_*.json as baselines "
+                         "(pessimistic per-row merge with existing)")
+    ap.add_argument("--bless-reset", action="store_true",
+                    help="overwrite baselines outright (after an "
+                         "intentional perf change / new machine)")
+    ap.add_argument("files", nargs="*", default=None,
+                    help=f"subset of {sorted(SPECS)} (default: all)")
+    args = ap.parse_args(argv)
+    if args.bless or args.bless_reset:
+        return bless(reset=args.bless_reset)
+    names = args.files or sorted(SPECS)
+    unknown = [n for n in names if n not in SPECS]
+    if unknown:
+        ap.error(f"unknown bench files {unknown}; known: {sorted(SPECS)}")
+    total_bad = 0
+    for name in names:
+        bad, lines = check_file(name, args.tol, args.global_tol)
+        total_bad += bad
+        print(f"[check_bench] {name} (tol +-{args.tol:.0%} vs median "
+              f"drift):")
+        print("\n".join(lines))
+    if total_bad:
+        print(f"[check_bench] FAIL: {total_bad} row(s) regressed beyond "
+              f"+-{args.tol:.0%} (re-run, widen BENCH_TOL, or "
+              f"`scripts/check_bench.py --bless` if intentional)")
+        return 1
+    print("[check_bench] OK: no bench regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,25 +1,51 @@
 #!/usr/bin/env bash
 # Tier-1 CI entry point.
-#   scripts/ci.sh           full suite (what the driver runs)
-#   QUICK=1 scripts/ci.sh   skip the slow (dry-run subprocess) suites
+#   scripts/ci.sh             full suite (what the driver runs)
+#   QUICK=1 scripts/ci.sh     skip the slow (dry-run subprocess) suites
+#   BENCH_GATE=0 scripts/ci.sh  skip the bench-regression gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# dev-only deps (hypothesis): best-effort — the suite degrades gracefully
-# (property tests skip) when the environment is offline.
-python -m pip install -q -r requirements-dev.txt 2>/dev/null \
-    || echo "[ci] dev deps unavailable (offline?); continuing without"
-
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# ---- tier 0: static checks (seconds) ----------------------------------------
+# syntax breakage anywhere fails before any smoke spends minutes compiling
+python -m compileall -q src tests benchmarks
+# ...and import breakage in any repro.* module (circular imports, renamed
+# symbols, missing gates on optional deps)
+python - <<'PY'
+import importlib, pkgutil, sys
+import repro
+bad = []
+for m in pkgutil.walk_packages(repro.__path__, "repro."):
+    try:
+        importlib.import_module(m.name)
+    except Exception as e:
+        bad.append(f"{m.name}: {type(e).__name__}: {e}")
+if bad:
+    sys.exit("[ci] import check FAILED:\n  " + "\n  ".join(bad))
+print("[ci] static tier OK (compileall + repro.* imports)")
+PY
+
+# dev-only deps (hypothesis): best-effort — the suite degrades gracefully
+# (property tests skip) when the environment is offline. Skip the install
+# (and its network timeout) entirely when hypothesis is already importable.
+if python -c "import hypothesis" 2>/dev/null; then
+    echo "[ci] dev deps present (hypothesis importable); skipping pip install"
+else
+    python -m pip install -q -r requirements-dev.txt 2>/dev/null \
+        || echo "[ci] dev deps unavailable (offline?); continuing without"
+fi
+
 # index-store smoke: save -> load -> search round trip in a tmpdir (fast;
-# guards the on-disk format independently of the pytest suite)
+# guards the on-disk format independently of the pytest suite), plus the
+# out-of-core path: search_sharded over the same store must be bit-identical
 python - <<'PY'
 import tempfile, shutil
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs.qinco2 import tiny
 from repro.core import search, training
-from repro.index import IndexStore
+from repro.index import IndexStore, ShardedIndexView
 
 rng = np.random.default_rng(0)
 xb = rng.normal(size=(600, 16)).astype(np.float32)
@@ -38,7 +64,13 @@ try:
     i2, s2 = search.search(loaded, q, **kw)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
-    print("[ci] index store smoke OK (save -> load -> search bit-identical)")
+    view = ShardedIndexView(d, max_resident_shards=1)
+    i3, s3 = search.search_sharded(view, q, **kw)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i3))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s3))
+    assert view.peak_resident_bytes <= view.budget_bytes
+    print("[ci] index store smoke OK (save -> load -> search bit-identical; "
+          "out-of-core search_sharded bit-identical within LRU budget)")
 finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
@@ -55,6 +87,30 @@ test -s BENCH_kernels.json \
 python -m benchmarks.run --only encode
 test -s BENCH_encode.json \
     && echo "[ci] encode throughput smoke OK (BENCH_encode.json written)"
+
+# search-throughput smoke: resident vs out-of-core QPS/p50/p99 across shard
+# counts -> BENCH_search.json (the search-side perf trajectory)
+python -m benchmarks.run --only search
+test -s BENCH_search.json \
+    && echo "[ci] search throughput smoke OK (BENCH_search.json written)"
+
+# bench-regression gate: fresh BENCH_*.json vs benchmarks/baselines/*.json
+# (load-normalized, per-row tolerance default +-35%; BENCH_GATE=0 is the
+# escape hatch). A failure re-measures once before failing for real: a
+# transient CPU-contention window poisons one measurement run, a genuine
+# regression reproduces in both.
+if [ "${BENCH_GATE:-1}" = "1" ]; then
+    if ! python scripts/check_bench.py; then
+        echo "[ci] bench gate failed; re-measuring once to rule out a" \
+             "transient load spike"
+        python -m benchmarks.run --only backends > /dev/null
+        python -m benchmarks.run --only encode > /dev/null
+        python -m benchmarks.run --only search > /dev/null
+        python scripts/check_bench.py
+    fi
+else
+    echo "[ci] bench-regression gate SKIPPED (BENCH_GATE=0)"
+fi
 
 if [ "${QUICK:-0}" = "1" ]; then
     exec python -m pytest -q -m "not slow" "$@"

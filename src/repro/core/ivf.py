@@ -130,6 +130,31 @@ def buckets_from_assignments(assign, k_ivf: int, cap: int):
     return buckets, mask
 
 
+def within_bucket_ranks(assign, k_ivf: int, fill=None):
+    """Bucket-table slot of each row: its rank among same-bucket rows,
+    continued from running ``fill`` counts.
+
+    For rows streamed in id order this reproduces, per row, the column
+    that `buckets_from_assignments` would place it at in the dense
+    (K_ivf, cap) table — the per-shard metadata the out-of-core
+    `ShardedIndexView` derives from each shard's assignments (pass the
+    cumulative fill of earlier shards as ``fill``). Vectorized, same
+    argsort trick as `buckets_from_assignments`.
+
+    Returns (ranks (n,) int32, updated fill (k_ivf,) int64).
+    """
+    assign = np.asarray(assign)
+    fill = (np.zeros(k_ivf, np.int64) if fill is None
+            else np.asarray(fill, np.int64).copy())
+    counts = np.bincount(assign, minlength=k_ivf)
+    order = np.argsort(assign, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    local = np.empty(len(assign), np.int64)
+    local[order] = np.arange(len(assign)) - np.repeat(starts, counts)
+    ranks = (local + fill[assign]).astype(np.int32)
+    return ranks, fill + counts
+
+
 def build_ivf(key, xb, k_ivf: int, *, kmeans_iters: int = 10,
               cap_factor: float = 2.0, m_tilde: int = 0, K: int = 256):
     """Train coarse centroids on xb and bucket the database.
@@ -154,11 +179,22 @@ def build_ivf(key, xb, k_ivf: int, *, kmeans_iters: int = 10,
     return idx
 
 
+def probe_buckets(centroids, q, n_probe: int):
+    """q: (Q, d) -> probed bucket ids (Q, n_probe), best-first.
+
+    The bucket-table-free half of `probe`: all a sharded/out-of-core
+    reader needs (it derives candidates from per-shard assignment
+    metadata instead of one resident bucket table). Kept as the single
+    implementation so resident and sharded search probe identically."""
+    d2 = pairwise_sqdist(q, centroids)
+    _, top = jax.lax.top_k(-d2, n_probe)                  # (Q, n_probe)
+    return top
+
+
 def probe(index: IVFIndex, q, n_probe: int):
     """q: (Q, d) -> (bucket ids (Q, n_probe), candidate ids (Q, n_probe*cap),
     candidate mask)."""
-    d2 = pairwise_sqdist(q, index.centroids)
-    _, top = jax.lax.top_k(-d2, n_probe)                  # (Q, n_probe)
+    top = probe_buckets(index.centroids, q, n_probe)
     cand = index.buckets[top].reshape(q.shape[0], -1)
     mask = index.bucket_mask[top].reshape(q.shape[0], -1)
     return top, cand, mask

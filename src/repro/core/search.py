@@ -120,21 +120,26 @@ def build_index(key, xb, qinco_params, cfg: QincoConfig, *, k_ivf: int = 64,
                        qinco_params=qinco_params, cfg=cfg)
 
 
-def _adc_lut_with_centroids(index: SearchIndex, q):
+def adc_lut_ext(aq_books, centroids, q):
     """(Q, M+1, K') LUT: the unitary AQ books plus the IVF-centroid book.
 
     Scoring a candidate n then reads M code columns plus its bucket id —
     the centroid inner product becomes just another ADC codebook, so step 2
     is a single `ops.adc_scores` call. K' = max(K, k_ivf); both LUT groups
     are zero-padded on the alphabet axis (padded slots are never indexed).
+    The single LUT constructor for the resident AND out-of-core paths.
     """
-    lut = aq_mod.adc_lut(index.aq_books, q)               # (Q, M, K)
-    clut = aq_mod.adc_lut(index.ivf.centroids[None], q)   # (Q, 1, k_ivf)
+    lut = aq_mod.adc_lut(aq_books, q)                     # (Q, M, K)
+    clut = aq_mod.adc_lut(centroids[None], q)             # (Q, 1, k_ivf)
     K, k_ivf = lut.shape[2], clut.shape[2]
     Kp = max(K, k_ivf)
     lut = jnp.pad(lut, ((0, 0), (0, 0), (0, Kp - K)))
     clut = jnp.pad(clut, ((0, 0), (0, 0), (0, Kp - k_ivf)))
     return jnp.concatenate([lut, clut], axis=1)
+
+
+def _adc_lut_with_centroids(index: SearchIndex, q):
+    return adc_lut_ext(index.aq_books, index.ivf.centroids, q)
 
 
 @partial(jax.jit, static_argnames=("n_probe", "n_short_aq", "n_short_pw",
@@ -152,7 +157,6 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
     hand-size every shortlist. topk' = the clamped ``topk``.
     """
     cfg = cfg or index.cfg
-    Q = q.shape[0]
     # 1. IVF probe ----------------------------------------------------------
     top_b, cand, cmask = ivf_mod.probe(index.ivf, q, n_probe)
     n_short_aq = min(n_short_aq, cand.shape[1])
@@ -168,32 +172,200 @@ def search(index: SearchIndex, q, *, n_probe: int = 4, n_short_aq: int = 64,
     score = jnp.where(cmask, score, -jnp.inf)
     s1, keep1 = jax.lax.top_k(score, n_short_aq)          # (Q, n_short_aq)
     ids1 = jnp.take_along_axis(cand, keep1, axis=1)
-    # 3. pairwise decoder re-rank --------------------------------------------
-    # gather the shortlist rows BEFORE widening: only (Q, n_short_aq, M+M~)
-    # leaves the packed code matrix, never an (N, ...) int32 temporary
-    plut = pw_mod.pairwise_lut(index.pw.codebooks, q)     # (Q, M', K^2)
-    ext1 = index.codes[ids1].astype(jnp.int32)
-    if index.ivf.centroid_codes is not None:              # M~ = 0 degrades
-        tilde1 = index.ivf.centroid_codes[index.ivf.assignments[ids1]]
-        ext1 = jnp.concatenate([ext1, tilde1], axis=-1)
-    score2 = ops.pairwise_scores(ext1, plut,
-                                 index.pw.pairs, cfg.K,
-                                 norms=index.pw_norms[ids1], backend=backend)
+    # 3.+4. pairwise re-rank + full QINCo2 decode re-rank --------------------
+    # gather the shortlist rows BEFORE widening: only (Q, n_short_aq, ...)
+    # leaves the packed code matrix, never an (N, ...) int32 temporary.
+    # The tail itself is `_rerank_shortlist` — the SAME implementation the
+    # out-of-core `search_sharded` path runs, so resident == out-of-core
+    # is structural for steps 3-4, not a hand-kept copy.
+    return _rerank_shortlist(
+        q, s1, ids1, index.codes[ids1], index.ivf.assignments[ids1],
+        index.pw_norms[ids1], index.pw.codebooks,
+        index.ivf.centroid_codes, index.ivf.centroids, index.qinco_params,
+        n_short_pw=n_short_pw, topk=topk, cfg=cfg, backend=backend,
+        pairs=index.pw.pairs, K=cfg.K)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core search over a ShardedIndexView (shards stay mmap'd on disk)
+# ---------------------------------------------------------------------------
+
+# Non-probed buckets get this (finite!) LUT entry instead of -inf: the
+# one-hot MXU form multiplies masked entries by 0, and 0 * -inf = NaN
+# where 0 * -1e30 = -0.0 leaves probed-row scores bit-identical. Any row
+# in a masked bucket scores ~-2e30 — below every real candidate (so the
+# per-shard top-k keeps probed rows first) — and is then post-masked to
+# the exact -inf the resident path produces.
+_NOT_PROBED = np.float32(-1e30)
+# Merge rank for entries outside the resident candidate list (non-probed
+# rows): sorts after every real position and every padding slot.
+_POS_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+@partial(jax.jit, static_argnames=("n_probe",))
+def _probe_and_masked_lut(centroids, aq_books, q, n_probe: int):
+    """Probed buckets + the extended ADC LUT with the centroid book
+    masked to `_NOT_PROBED` outside them (the probe restriction, folded
+    into the same LUT trick that folds the centroid term in)."""
+    top_b = ivf_mod.probe_buckets(centroids, q, n_probe)  # (Q, P)
+    lut = adc_lut_ext(aq_books, centroids, q)             # (Q, M+1, K')
+    Kp = lut.shape[2]
+    probed = jnp.any(jnp.arange(Kp)[None, None, :] == top_b[:, :, None],
+                     axis=1)                              # (Q, K')
+    lut = lut.at[:, -1, :].set(
+        jnp.where(probed, lut[:, -1, :], _NOT_PROBED))
+    return top_b, lut
+
+
+@partial(jax.jit, static_argnames=("k", "cap", "backend"))
+def _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base, *,
+                     k: int, cap: int, backend: str):
+    """One shard's contribution: fused `ops.adc_topk` scan (the per-shard
+    kernel the distributed path uses — the (Q, N_loc) score matrix never
+    leaves VMEM) + the resident-candidate rank of every survivor.
+
+    Returns (vals, pos, gids), each (Q, k'): vals exactly equal the
+    resident step-2 scores for probed rows and -inf otherwise; pos is
+    the survivor's position in resident `search()`'s candidate array
+    (probe_rank * cap + within-bucket rank, `_POS_SENTINEL` for
+    non-probed rows); gids are global database ids."""
+    vals, loc = ops.adc_topk(ext, lut_masked, k, norms=norms,
+                             backend=backend)             # (Q, k')
+    b_c = jnp.take(ext[:, -1].astype(jnp.int32), loc)     # survivor buckets
+    hit = b_c[..., None] == top_b[:, None, :]             # (Q, k', P)
+    found = jnp.any(hit, axis=-1)
+    rank = jnp.argmax(hit, axis=-1).astype(jnp.int32)     # probe rank
+    pos = jnp.where(found, rank * cap + jnp.take(wbr, loc), _POS_SENTINEL)
+    vals = jnp.where(found, vals, -jnp.inf)
+    return vals, pos, base + loc
+
+
+@partial(jax.jit, static_argnames=("cap", "p_pad"))
+def _padding_entries(top_b, bucket_fill, *, cap: int, p_pad: int):
+    """Synthesized bucket-table padding slots: the resident candidate
+    array pads every probed bucket to ``cap`` with (-inf, id 0) entries,
+    and `lax.top_k` falls back to them (lowest position first) when the
+    probe yields fewer finite candidates than the shortlist. Their
+    positions are derivable from the per-bucket fill counts alone, so the
+    out-of-core merge reproduces the degenerate small-probe results
+    without any resident table. p_pad = min(n_short_aq, cap) slots per
+    probed bucket suffice (only n_short_aq entries can ever be picked,
+    and every probed bucket offers fill + padding >= p_pad entries)."""
+    Q, P = top_b.shape
+    fb = bucket_fill[top_b]                               # (Q, P)
+    slot = fb[..., None] + jnp.arange(p_pad, dtype=jnp.int32)
+    rank = jnp.arange(P, dtype=jnp.int32)[None, :, None]
+    pos = jnp.where(slot < cap, rank * cap + slot, _POS_SENTINEL)
+    return (jnp.full((Q, P * p_pad), -jnp.inf, jnp.float32),
+            pos.reshape(Q, P * p_pad),
+            jnp.zeros((Q, P * p_pad), jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("n_short_pw", "topk", "cfg", "backend",
+                                   "pairs", "K"))
+def _rerank_shortlist(q, s1, ids1, codes1, assign1, pw_norms1, pw_codebooks,
+                      centroid_codes, centroids, qinco_params, *,
+                      n_short_pw: int, topk: int, cfg: QincoConfig,
+                      backend: str, pairs, K: int):
+    """Steps 3-4 of the cascade on gathered shortlist rows: pairwise
+    decoder re-rank, then the full QINCo2 decode + exact distance (the
+    decode scan runs the indexed `ops.f_theta` kernel: packed uint8 code
+    columns go in as kernel indices, the codebook gather + step network
+    run fused per step).
+
+    The ONE implementation of the cascade tail: resident `search()`
+    feeds it device gathers against its resident arrays, out-of-core
+    `search_sharded` feeds it the host rows `ShardedIndexView.
+    gather_rows` pulled off the mmaps — so resident == out-of-core for
+    steps 3-4 is structural, not a hand-kept copy."""
+    Q = q.shape[0]
+    plut = pw_mod.pairwise_lut(pw_codebooks, q)           # (Q, M', K^2)
+    ext1 = codes1.astype(jnp.int32)
+    if centroid_codes is not None:                        # M~ = 0 degrades
+        ext1 = jnp.concatenate([ext1, centroid_codes[assign1]], axis=-1)
+    score2 = ops.pairwise_scores(ext1, plut, pairs, K,
+                                 norms=pw_norms1, backend=backend)
     score2 = jnp.where(s1 > -jnp.inf, score2, -jnp.inf)
     _, keep2 = jax.lax.top_k(score2, n_short_pw)
     ids2 = jnp.take_along_axis(ids1, keep2, axis=1)       # (Q, n_short_pw)
-    # 4. full QINCo2 decode + exact distance ---------------------------------
-    # the decode scan re-ranks through the indexed ops.f_theta kernel: the
-    # shortlist's packed code columns go in as uint8 indices, the codebook
-    # gather + step network run fused per step
-    flat = ids2.reshape(-1)
-    recon = qinco.decode(index.qinco_params, index.codes[flat], cfg,
+    codes2 = jnp.take_along_axis(codes1, keep2[..., None], axis=1)
+    assign2 = jnp.take_along_axis(assign1, keep2, axis=1)
+    recon = qinco.decode(qinco_params,
+                         codes2.reshape(-1, codes2.shape[-1]), cfg,
                          backend=backend)
-    recon = recon + index.ivf.centroids[index.ivf.assignments[flat]]
+    recon = recon + centroids[assign2.reshape(-1)]
     recon = recon.reshape(Q, n_short_pw, -1)
     d2 = jnp.sum(jnp.square(q[:, None, :] - recon), axis=-1)
     dtop, ktop = jax.lax.top_k(-d2, topk)
     return jnp.take_along_axis(ids2, ktop, axis=1), -dtop
+
+
+def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
+                   n_short_pw: int = 16, topk: int = 1,
+                   cfg: QincoConfig = None, backend: str = "auto"):
+    """Out-of-core cascade over a `ShardedIndexView` — bit-identical
+    (indices AND scores) to resident `search()` on the same store.
+
+    Structure: one probe + masked-LUT launch, then a sequential scan of
+    the store's shards — each staged through the view's LRU, shortlisted
+    by the fused `ops.adc_topk` kernel, and folded into a running
+    (Q, n_short_aq) merge via `collectives.merge_topk_ranked` — then ONE
+    host gather of only the merged shortlist rows feeds the pairwise and
+    `ops.f_theta` re-rank stages. Peak device residency is the view's
+    LRU budget plus O(Q * shortlist); the (N, ...) arrays never leave
+    their mmaps.
+
+    Bit-identity argument: per-shard `adc_topk` values equal the resident
+    step-2 scores (same `score_tile`/gather scoring, probe restriction
+    folded into the LUT leaves probed entries untouched), and the merge
+    ranks every candidate by its position in the resident candidate
+    array (probe-rank major / bucket slot minor, synthesized padding
+    included) so `lax.top_k` tie-breaking matches exactly. One caveat is
+    out of scope: a float-exact score tie between rows of DIFFERENT
+    buckets inside one shard is kept/dropped at the per-shard k boundary
+    in id order rather than probe-rank order.
+
+    Not jitted end-to-end by design (the shard loop is a host loop over
+    mmap'd staging); every numerical stage dispatches through jitted
+    facades, so one warmed call serves any store with the same shapes.
+    """
+    cfg = cfg or view.cfg
+    q = jnp.asarray(q, jnp.float32)
+    cap = view.cap
+    n_short_aq = min(n_short_aq, n_probe * cap)           # resident clamps
+    n_short_pw = min(n_short_pw, n_short_aq)
+    topk = min(topk, n_short_pw)
+
+    top_b, lut_m = _probe_and_masked_lut(view.centroids, view.aq_books, q,
+                                         n_probe)
+    state = None
+    for sid in view.shard_ids:
+        st = view.staged(sid)
+        new = _shard_shortlist(
+            st["ext"], st["wbr"], st["aq_norms"], lut_m, top_b,
+            np.int32(sid * view.shard_size), k=n_short_aq, cap=cap,
+            backend=backend)
+        state = new if state is None else _merge_state(state, new,
+                                                       n_short_aq)
+    pad = _padding_entries(top_b, view.bucket_fill, cap=cap,
+                           p_pad=min(n_short_aq, cap))
+    s1, _, ids1 = _merge_state(state, pad, n_short_aq)
+
+    codes1, assign1, pw_norms1 = view.gather_rows(np.asarray(ids1))
+    return _rerank_shortlist(
+        q, s1, ids1, jnp.asarray(codes1), jnp.asarray(assign1),
+        jnp.asarray(pw_norms1), view.pw.codebooks, view.centroid_codes,
+        view.centroids, view.qinco_params, n_short_pw=n_short_pw,
+        topk=topk, cfg=cfg, backend=backend, pairs=view.pw.pairs, K=view.K)
+
+
+def _merge_state(state, new, k: int):
+    """Fold one shard's (vals, pos, gids) into the running merge."""
+    from repro.parallel.collectives import merge_topk_ranked
+    vals = jnp.concatenate([state[0], new[0]], axis=1)
+    pos = jnp.concatenate([state[1], new[1]], axis=1)
+    gids = jnp.concatenate([state[2], new[2]], axis=1)
+    return merge_topk_ranked(vals, pos, gids, min(k, vals.shape[1]))
 
 
 # ---------------------------------------------------------------------------

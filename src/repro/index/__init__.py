@@ -2,14 +2,19 @@
 
     codes.py    PackedCodes: uint8 code container + pack/unpack helpers
     store.py    on-disk sharded index format (manifest + mmap shards)
-    builder.py  resumable streaming build driver (shard cursor)
+                + ShardedIndexView, the out-of-core reader (LRU-staged
+                shards, `core/search.search_sharded` consumes it)
+    builder.py  resumable streaming build driver (shard cursor), with
+                data-axis shard-range ownership for multi-host builds
 
 The layer that turns the kernel path (`kernels/ops`) into a servable
 system: codes live as packed bytes on disk AND in HBM, stores round-trip
 `SearchIndex` bit-identically, and interrupted billion-vector builds
 resume mid-dataset.
 """
-from repro.index.builder import StreamingIndexBuilder  # noqa: F401
+from repro.index.builder import (StreamingIndexBuilder,  # noqa: F401
+                                 owner_range)
 from repro.index.codes import (CODE_DTYPE, PackedCodes,  # noqa: F401
                                pack_codes, unpack_codes)
-from repro.index.store import FORMAT_VERSION, IndexStore  # noqa: F401
+from repro.index.store import (FORMAT_VERSION, IndexStore,  # noqa: F401
+                               ShardedIndexView)

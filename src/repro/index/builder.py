@@ -20,6 +20,19 @@ Two phases:
                only on (global state, shard slice, fill-at-shard-entry),
                all of which resume deterministically.
 
+Data-axis sharding (``host_id`` / ``n_hosts``): the stream phase splits
+the shard sequence into contiguous ownership ranges (`owner_range`), one
+per host, all writing disjoint shard files into ONE store. The capacity
+spill is a sequential scan over the whole stream, so each owner derives
+the fill state at its range entry by walking the shards before it —
+bincounting `assign.i32` when the shard is already on disk, re-running
+the (cheap, encode-free) assignment otherwise. Both give the same counts,
+so every owner sees the fill an uninterrupted single-process scan would,
+and a multi-process build produces BYTE-IDENTICAL shards to a
+single-process one. Each owner persists its own cursor
+(`cursor_<owner>.json`; owner 0 keeps `cursor.json`) and resumes
+independently; whichever owner writes the last missing shard finalizes.
+
 Hook `checkpoint.manager.PreemptionGuard` in via ``guard=`` to turn
 SIGTERM into a clean stop at the next shard edge.
 """
@@ -41,6 +54,18 @@ from repro.core.kmeans import kmeans
 from repro.core import rq as rq_mod
 from repro.index.codes import PackedCodes, pack_codes
 from repro.index.store import IndexStore
+
+
+def owner_range(n_shards: int, host_id: int, n_hosts: int):
+    """Contiguous balanced shard-ownership split: host ``host_id`` of
+    ``n_hosts`` owns shards [lo, hi). Ranges partition [0, n_shards)
+    exactly (remainder spread over the first hosts), so concurrent owners
+    write disjoint shard files."""
+    if not 0 <= host_id < n_hosts:
+        raise ValueError(f"host_id {host_id} outside [0, {n_hosts})")
+    base, rem = divmod(n_shards, n_hosts)
+    lo = host_id * base + min(host_id, rem)
+    return lo, lo + base + (1 if host_id < rem else 0)
 
 
 class StreamingIndexBuilder:
@@ -162,28 +187,59 @@ class StreamingIndexBuilder:
                 f"{extra['db_fingerprint'][:12]}… != {fp[:12]}…); resuming "
                 f"would produce a corrupt mixed-content index")
 
-    def _resume_state(self):
-        """(next_shard, fill) from the cursor, validated against the shards
-        actually on disk (which are ground truth)."""
-        store = self.store
-        done = store.done_shards()
-        cur = store.read_cursor()
-        if cur is not None and cur["next_shard"] == done:
-            return done, np.asarray(cur["fill"], np.int64)
-        # cursor stale/missing (e.g. killed between shard rename and cursor
-        # write): rebuild fill counts from the completed shards' assignments
-        k_ivf = store.manifest["k_ivf"]
+    def _shard_assign(self, xb, cent, sid: int, fill):
+        """Deterministic coarse assignment of one shard, continuing the
+        running spill fill — the cheap (encode-free) half of the shard
+        pipeline. Returns (assign, x_s, updated fill)."""
+        m = self.store.manifest
+        lo = sid * m["shard_size"]
+        x_s = np.asarray(xb[lo:lo + self.store.shard_rows(sid)], np.float32)
+        raw = ivf_mod.assign_to_centroids(cent, x_s)
+        assign, fill = ivf_mod.assign_with_spill(x_s, cent, raw,
+                                                 m["cap"], fill)
+        return assign, x_s, fill
+
+    def _scan_fill(self, xb, cent, upto: int):
+        """Running bucket-fill counts over shards [0, upto), without
+        relying on any cursor: bincount the assignments already on disk
+        (ground truth), re-run the deterministic assignment for shards
+        another owner has not written yet. Both yield the exact fill an
+        uninterrupted single-process scan would see at shard ``upto``."""
+        m = self.store.manifest
+        k_ivf = m["k_ivf"]
         fill = np.zeros(k_ivf, np.int64)
-        for sid in range(done):
-            fill += np.bincount(store.open_shard(sid)["assign"],
-                                minlength=k_ivf)
-        return done, fill
+        for sid in range(upto):
+            if self.store.shard_done(sid):
+                fill += np.bincount(self.store.open_shard(sid)["assign"],
+                                    minlength=k_ivf)
+            else:
+                _, _, fill = self._shard_assign(xb, cent, sid, fill)
+        return fill
+
+    def _resume_state(self, xb, cent, lo: int, hi: int, owner: int):
+        """(next_shard, fill) for one owner: next = the end of the owner's
+        contiguous on-disk prefix within [lo, hi); fill covers every
+        shard < next (owned or not). The owner's cursor is the fast path,
+        validated against the shards actually on disk (ground truth)."""
+        next_sid = lo
+        while next_sid < hi and self.store.shard_done(next_sid):
+            next_sid += 1
+        cur = self.store.read_cursor(owner=owner)
+        if cur is not None and cur["next_shard"] == next_sid:
+            return next_sid, np.asarray(cur["fill"], np.int64)
+        return next_sid, self._scan_fill(xb, cent, next_sid)
 
     def build(self, xb, *, guard=None, max_shards: Optional[int] = None,
-              progress=None) -> bool:
-        """Stream ``xb`` (array-like, sliceable) into shards; resume from
-        the cursor. Returns True when the store is complete.
+              progress=None, host_id: int = 0, n_hosts: int = 1) -> bool:
+        """Stream this owner's shard range of ``xb`` (array-like,
+        sliceable) into the store; resume from the owner's cursor.
+        Returns True when the WHOLE store is complete (an owner that
+        finishes its range while others are still streaming returns
+        False).
 
+        ``host_id``/``n_hosts``: contiguous shard-range ownership
+        (`owner_range`) for data-axis sharded multi-process builds; the
+        default is the historical single-owner walk of every shard.
         ``guard``: a `PreemptionGuard` — checked at shard edges.
         ``max_shards``: stop after N newly-built shards (tests simulate a
         kill with this). ``progress``: optional callback(shard_id, dt_s).
@@ -196,6 +252,7 @@ class StreamingIndexBuilder:
             raise ValueError(f"database has {len(xb)} rows; store was "
                              f"initialized for {m['n_total']}")
         self._check_db_fingerprint(xb)
+        lo, hi = owner_range(m["n_shards"], host_id, n_hosts)
         cfg = QincoConfig(**m["cfg"])
         g = store.load_global_tree()
         cent = np.asarray(g["centroids"])
@@ -206,19 +263,16 @@ class StreamingIndexBuilder:
         params = jax.tree.map(jnp.asarray, g["qinco_params"])
         tilde_books = g["centroid_codes"]
 
-        start, fill = self._resume_state()
-        if start:
-            self._log(f"resuming at shard {start}/{m['n_shards']}")
+        start, fill = self._resume_state(xb, cent, lo, hi, host_id)
+        if start > lo:
+            self._log(f"owner {host_id}: resuming at shard {start} "
+                      f"(range [{lo}, {hi}))")
+        elif n_hosts > 1:
+            self._log(f"owner {host_id}/{n_hosts}: shards [{lo}, {hi})")
         built = 0
-        for sid in range(start, m["n_shards"]):
+        for sid in range(start, hi):
             t0 = time.time()
-            lo = sid * m["shard_size"]
-            hi = lo + store.shard_rows(sid)
-            x_s = np.asarray(xb[lo:hi], np.float32)
-
-            raw = ivf_mod.assign_to_centroids(cent, x_s)
-            assign, fill = ivf_mod.assign_with_spill(x_s, cent, raw,
-                                                     m["cap"], fill)
+            assign, x_s, fill = self._shard_assign(xb, cent, sid, fill)
             resid = x_s - cent[assign]
             codes, _, _ = enc.encode_dataset(
                 params, resid, cfg, cfg.A_eval, cfg.B_eval,
@@ -241,21 +295,28 @@ class StreamingIndexBuilder:
                 sid, codes=PackedCodes(pack_codes(codes, m["K"]), m["K"]),
                 assign=assign, aq_norms=np.asarray(aq_norms),
                 pw_norms=np.asarray(pw_norms))
-            store.write_cursor(sid + 1, fill)
+            store.write_cursor(sid + 1, fill, owner=host_id)
             built += 1
             dt = time.time() - t0
-            self._log(f"shard {sid + 1}/{m['n_shards']}: {hi - lo} vectors "
-                      f"in {dt:.2f}s ({(hi - lo) / dt:.0f} vec/s)")
+            self._log(f"shard {sid + 1}/{m['n_shards']}: {len(x_s)} vectors "
+                      f"in {dt:.2f}s ({len(x_s) / dt:.0f} vec/s)")
             if progress is not None:
                 progress(sid, dt)
             if guard is not None and guard.should_checkpoint():
                 self._log("preemption requested; stopping at shard edge")
-                return False
+                return sid + 1 == hi and self._maybe_finalize()
             if max_shards is not None and built >= max_shards:
-                return sid + 1 == m["n_shards"] and self._finalize()
-        return self._finalize()
+                return sid + 1 == hi and self._maybe_finalize()
+        return self._maybe_finalize()
 
-    def _finalize(self) -> bool:
+    def _maybe_finalize(self) -> bool:
+        """Finalize iff every shard (any owner's) is on disk. Safe to race:
+        finalize is an atomic manifest rewrite of identical content."""
+        m = self.store.manifest
+        if m["complete"]:
+            return True
+        if not all(self.store.shard_done(s) for s in range(m["n_shards"])):
+            return False
         self.store.finalize()
         self._log("store complete")
         return True

@@ -230,27 +230,40 @@ class IndexStore:
             raise ValueError(f"cannot finalize: shards missing {missing}")
         self._write_manifest(dict(self.manifest, complete=True))
 
-    # -- cursor (builder resume) --------------------------------------------
+    # -- cursors (builder resume, one per build owner) -----------------------
 
     @property
     def cursor_path(self) -> Path:
-        return self.dir / "cursor.json"
+        return self.cursor_path_for(0)
 
-    def write_cursor(self, next_shard: int, fill) -> None:
-        """Fast-path resume state (next shard + running bucket fill).
+    def cursor_path_for(self, owner: int) -> Path:
+        """Owner 0 keeps the historical `cursor.json` name; additional
+        owners of a data-axis sharded build get `cursor_00001.json`,
+        ... — disjoint files, so concurrent owners never clobber each
+        other's resume state."""
+        if owner == 0:
+            return self.dir / "cursor.json"
+        return self.dir / f"cursor_{owner:05d}.json"
+
+    def write_cursor(self, next_shard: int, fill, *, owner: int = 0) -> None:
+        """Fast-path resume state (next shard + running bucket fill over
+        ALL shards < next_shard, owned or not).
 
         Advisory only: shard presence on disk is ground truth; a stale or
-        missing cursor just costs a re-scan of completed shards."""
-        tmp = self.cursor_path.with_suffix(".tmp")
+        missing cursor just costs a re-scan of completed shards (plus a
+        re-assignment of absent non-owned ones)."""
+        path = self.cursor_path_for(owner)
+        tmp = path.with_suffix(".tmp")
         tmp.write_text(json.dumps({"next_shard": int(next_shard),
                                    "fill": [int(f) for f in fill]}))
-        os.rename(tmp, self.cursor_path)
+        os.rename(tmp, path)
 
-    def read_cursor(self) -> Optional[dict]:
-        if not self.cursor_path.exists():
+    def read_cursor(self, *, owner: int = 0) -> Optional[dict]:
+        path = self.cursor_path_for(owner)
+        if not path.exists():
             return None
         try:
-            return json.loads(self.cursor_path.read_text())
+            return json.loads(path.read_text())
         except (ValueError, OSError):
             return None
 
@@ -395,3 +408,192 @@ class IndexStore:
 
     def bytes_per_vector(self) -> float:
         return self.disk_bytes() / max(1, self.manifest["n_total"])
+
+
+# ---------------------------------------------------------------------------
+# out-of-core reader: mmap'd shards + an LRU of device-staged shards
+# ---------------------------------------------------------------------------
+
+
+class ShardedIndexView:
+    """Out-of-core view of a store: shards stay mmap'd on disk and are
+    staged to the device one at a time through a bounded LRU, so database
+    size is independent of device memory (`IndexStore.load` by contrast
+    materializes every per-vector array resident).
+
+    What IS loaded up front (all O(model), not O(database)):
+      - the global tree (centroids, AQ/pairwise codebooks, QINCo2 params);
+      - per-shard bucket metadata derived from one streaming pass over the
+        `assign.i32` mmaps (4 B/vector touched once, codes never read):
+        each row's within-bucket rank — the slot it occupies in the dense
+        bucket table `IndexStore.load` would rebuild — plus the final
+        per-bucket fill counts. `core/search.search_sharded` uses these to
+        reproduce resident `search()`'s candidate ordering (and therefore
+        its `lax.top_k` tie-breaking) bit-identically without ever
+        materializing the bucket table.
+
+    Staged per shard (`staged()`, LRU of ``max_resident_shards``):
+      - ``ext``      (rows, M+1) codes ++ assignment column — the shared-
+                     codes form `ops.adc_topk` scans; packed uint8 when
+                     both K and k_ivf fit a byte, else int32;
+      - ``wbr``      (rows,) int32 within-bucket ranks;
+      - ``aq_norms`` (rows,) float32.
+
+    ``allow_partial`` accepts an incomplete store and searches exactly
+    the shards present on disk (ids stay global). Shard 0 must exist —
+    its row 0 is the id the resident bucket table pads with.
+
+    mmap lifetime: `open_shard` views are materialized (copied) before
+    staging and row gathers copy into fresh host arrays, so nothing
+    returned by this class aliases the store directory — deleting or
+    rewriting the store invalidates only future calls, never arrays
+    already handed out.
+    """
+
+    def __init__(self, store, *, max_resident_shards: int = 2,
+                 allow_partial: bool = False):
+        from collections import OrderedDict
+
+        from repro.core import ivf as ivf_mod
+        from repro.core import pairwise as pw_mod
+
+        self.store = store if isinstance(store, IndexStore) \
+            else IndexStore(store)
+        m = self.store.manifest
+        if not m["complete"] and not allow_partial:
+            raise ValueError(
+                f"store {self.store.dir} is incomplete; pass "
+                f"allow_partial=True to search the completed shards only")
+        if max_resident_shards < 1:
+            raise ValueError("max_resident_shards must be >= 1")
+        self.max_resident_shards = int(max_resident_shards)
+        self.shard_ids = [s for s in range(m["n_shards"])
+                          if self.store.shard_done(s)]
+        if not self.shard_ids:
+            raise ValueError(f"store {self.store.dir} has no completed "
+                             f"shards to search")
+        if self.shard_ids[0] != 0:
+            raise ValueError("shard 0 is required (bucket-table padding "
+                             "ids resolve to row 0)")
+        self.cfg = QincoConfig(**m["cfg"])
+        self.M = int(m["M"])
+        self.K = int(m["K"])
+        self.k_ivf = int(m["k_ivf"])
+        self.cap = int(m["cap"])
+        self.shard_size = int(m["shard_size"])
+        self.n_total = int(m["n_total"])
+        self.n_rows = sum(self.store.shard_rows(s) for s in self.shard_ids)
+
+        g = self.store.load_global_tree()
+        self.centroids = jnp.asarray(g["centroids"])
+        self.aq_books = jnp.asarray(g["aq_books"])
+        self.centroid_codes = (None if g["centroid_codes"] is None
+                               else jnp.asarray(g["centroid_codes"]))
+        self.pw = pw_mod.PairwiseDecoder(
+            pairs=tuple(tuple(p) for p in m["pw_pairs"]),
+            codebooks=jnp.asarray(g["pw_codebooks"]), K=self.K)
+        self.qinco_params = jax.tree.map(jnp.asarray, g["qinco_params"])
+
+        # one pass over the assign mmaps: within-bucket ranks + fills
+        fill = np.zeros(self.k_ivf, np.int64)
+        self._wbr: Dict[int, np.ndarray] = {}
+        for sid in self.shard_ids:
+            a = np.asarray(self.store.open_shard(sid)["assign"])
+            self._wbr[sid], fill = ivf_mod.within_bucket_ranks(
+                a, self.k_ivf, fill)
+        self.bucket_fill = jnp.asarray(fill.astype(np.int32))  # (k_ivf,)
+
+        # ext dtype: keep the packed-byte wire form whenever it can also
+        # carry the assignment column (kernels widen in-VMEM either way)
+        self._ext_dtype = (np.uint8 if self.K <= 256 and self.k_ivf <= 256
+                           else np.int32)
+        self._lru: "OrderedDict[int, dict]" = OrderedDict()
+        self._resident_bytes = 0
+        self.peak_resident_bytes = 0
+
+    # -- LRU staging ---------------------------------------------------------
+
+    def shard_staged_bytes(self, shard_id: int) -> int:
+        """Device bytes one staged shard costs (ext + wbr + aq_norms)."""
+        rows = self.store.shard_rows(shard_id)
+        return rows * ((self.M + 1) * np.dtype(self._ext_dtype).itemsize
+                       + 4 + 4)
+
+    @property
+    def budget_bytes(self) -> int:
+        """The staging budget: ``max_resident_shards`` worst-case shards.
+        `peak_resident_bytes` never exceeds this (asserted in tests) —
+        the out-of-core guarantee that device residency is bounded by
+        the LRU, not the database."""
+        worst = max(self.shard_staged_bytes(s) for s in self.shard_ids)
+        return self.max_resident_shards * worst
+
+    @property
+    def resident_shards(self):
+        return list(self._lru)
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
+
+    def staged(self, shard_id: int) -> dict:
+        """Device-staged arrays for one shard, through the LRU."""
+        if shard_id in self._lru:
+            self._lru.move_to_end(shard_id)
+            return self._lru[shard_id]
+        # evict BEFORE staging: the budget bound must hold at the moment
+        # the new shard's device buffers allocate, not only after — with
+        # shards sized near device memory, evict-after would transiently
+        # hold max_resident_shards + 1 shards and OOM exactly where the
+        # out-of-core path is supposed to save you
+        while len(self._lru) >= self.max_resident_shards:
+            _, old = self._lru.popitem(last=False)      # evict LRU
+            self._resident_bytes -= old["nbytes"]
+        sh = self.store.open_shard(shard_id)
+        codes = np.asarray(sh["codes"])
+        assign = np.asarray(sh["assign"])
+        ext = np.concatenate(
+            [codes.astype(self._ext_dtype, copy=False),
+             assign.astype(self._ext_dtype)[:, None]], axis=1)
+        entry = {
+            "ext": jnp.asarray(ext),
+            "wbr": jnp.asarray(self._wbr[shard_id]),
+            "aq_norms": jnp.asarray(np.asarray(sh["aq_norms"])),
+            "nbytes": (ext.nbytes + self._wbr[shard_id].nbytes
+                       + sh["aq_norms"].nbytes),
+        }
+        self._lru[shard_id] = entry
+        self._resident_bytes += entry["nbytes"]
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self._resident_bytes)
+        return entry
+
+    # -- shortlist row gather (steps 3-4 of the cascade) ---------------------
+
+    def gather_rows(self, gids):
+        """Host gather of shortlist rows straight off the shard mmaps:
+        only the requested rows' bytes are touched (the out-of-core
+        re-rank reads O(Q * shortlist), not O(N)).
+
+        gids: int array of GLOBAL ids, any shape -> (codes uint8
+        (..., M), assign int32 (...,), pw_norms float32 (...,)).
+        """
+        gids = np.asarray(gids)
+        flat = gids.reshape(-1).astype(np.int64)
+        codes = np.empty((flat.size, self.M), np.uint8)
+        assign = np.empty(flat.size, np.int32)
+        pw_norms = np.empty(flat.size, np.float32)
+        sid_of = flat // self.shard_size
+        loc = flat - sid_of * self.shard_size
+        for sid in np.unique(sid_of):
+            if not self.store.shard_done(int(sid)):
+                raise ValueError(f"row gather hit missing shard {sid} "
+                                 f"(id outside the searched set?)")
+            sel = sid_of == sid
+            sh = self.store.open_shard(int(sid))
+            codes[sel] = sh["codes"][loc[sel]]
+            assign[sel] = sh["assign"][loc[sel]]
+            pw_norms[sel] = sh["pw_norms"][loc[sel]]
+        return (codes.reshape(gids.shape + (self.M,)),
+                assign.reshape(gids.shape),
+                pw_norms.reshape(gids.shape))

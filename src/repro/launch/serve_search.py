@@ -13,6 +13,12 @@ reproducible under CI load.
 
     PYTHONPATH=src python -m repro.launch.serve_search --store /tmp/idx \
         --queries 256 --micro-batch 32 --rate 2000
+
+With ``--out-of-core`` the store is served through a `ShardedIndexView`
+(`core/search.search_sharded`): shards stay mmap'd on disk, device
+residency is bounded by the shard LRU (``--max-resident-shards``), and
+results are bit-identical to resident serving — database size becomes
+independent of device memory.
 """
 from __future__ import annotations
 
@@ -55,6 +61,11 @@ class SearchServer:
     ``tile_table`` points at a `kernels/tuning.py` JSON artifact from a
     native-TPU autotune sweep; it is applied BEFORE the warmup compile so
     the one warmed executable already uses the tuned tile sizes.
+
+    ``index`` may be a resident `SearchIndex` OR an out-of-core
+    `repro.index.ShardedIndexView` — the latter serves through
+    `search_sharded` (bit-identical results), with the database staying
+    mmap'd on disk and device residency bounded by the view's shard LRU.
     """
 
     def __init__(self, index, *, micro_batch: int = 32, n_probe: int = 8,
@@ -65,9 +76,15 @@ class SearchServer:
             tuning.load(tile_table)
         self.index = index
         self.micro_batch = micro_batch
-        self.d = int(index.ivf.centroids.shape[1])
+        self.out_of_core = hasattr(index, "gather_rows")
+        if self.out_of_core:
+            self.d = int(index.centroids.shape[1])
+            search_fn = search_mod.search_sharded
+        else:
+            self.d = int(index.ivf.centroids.shape[1])
+            search_fn = search_mod.search
         self._search = partial(
-            search_mod.search, n_probe=n_probe, n_short_aq=n_short_aq,
+            search_fn, n_probe=n_probe, n_short_aq=n_short_aq,
             n_short_pw=n_short_pw, topk=topk, cfg=index.cfg, backend=backend)
         t0 = time.perf_counter()
         jax.block_until_ready(
@@ -141,12 +158,24 @@ def synthetic_stream(index, n_queries: int, rate_qps: float, *,
                      noise: float = 0.05, seed: int = 0):
     """Queries near stored vectors (AQ reconstructions + noise) with
     Poisson arrivals at ``rate_qps`` — a self-contained load generator
-    for any store (no raw database needed)."""
+    for any store (no raw database needed). Accepts a resident
+    `SearchIndex` or an out-of-core `ShardedIndexView` (rows are gathered
+    from the mmap'd shards; the database never loads)."""
     from repro.core import aq as aq_mod
     rng = np.random.default_rng(seed)
-    pick = rng.integers(0, index.codes.shape[0], size=n_queries)
-    recon = (aq_mod.aq_decode(index.aq_books, index.codes[pick])
-             + index.ivf.centroids[index.ivf.assignments[pick]])
+    if hasattr(index, "gather_rows"):
+        sids = np.asarray(index.shard_ids)
+        pick_s = sids[rng.integers(0, len(sids), size=n_queries)]
+        rows = np.array([rng.integers(0, index.store.shard_rows(int(s)))
+                         for s in pick_s])
+        gids = pick_s * index.shard_size + rows
+        codes, assign, _ = index.gather_rows(gids)
+        recon = (aq_mod.aq_decode(index.aq_books, jnp.asarray(codes))
+                 + index.centroids[jnp.asarray(assign)])
+    else:
+        pick = rng.integers(0, index.codes.shape[0], size=n_queries)
+        recon = (aq_mod.aq_decode(index.aq_books, index.codes[pick])
+                 + index.ivf.centroids[index.ivf.assignments[pick]])
     q = np.asarray(recon) + noise * rng.normal(
         size=(n_queries, recon.shape[1])).astype(np.float32)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_queries))
@@ -168,10 +197,26 @@ def main(argv: Optional[list] = None) -> ServeStats:
     ap.add_argument("--tile-table", default=None,
                     help="kernels/tuning.py JSON artifact (autotuned "
                          "per-op tile sizes) to apply before warmup")
+    ap.add_argument("--out-of-core", action="store_true",
+                    help="serve straight off a ShardedIndexView: shards "
+                         "stay mmap'd on disk, device residency bounded "
+                         "by --max-resident-shards")
+    ap.add_argument("--max-resident-shards", type=int, default=2)
+    ap.add_argument("--allow-partial", action="store_true",
+                    help="serve an incomplete store (completed shards "
+                         "only; requires --out-of-core or loads a prefix)")
     args = ap.parse_args(argv)
 
-    from repro.index import IndexStore
-    index = IndexStore(args.store).load()
+    from repro.index import IndexStore, ShardedIndexView
+    if args.out_of_core:
+        index = ShardedIndexView(
+            args.store, max_resident_shards=args.max_resident_shards,
+            allow_partial=args.allow_partial)
+        print(f"[serve_search] out-of-core: {len(index.shard_ids)} shards "
+              f"mmap'd, staging budget {index.budget_bytes / 1e6:.1f} MB")
+    else:
+        index = IndexStore(args.store).load(
+            allow_partial=args.allow_partial)
     server = SearchServer(
         index, micro_batch=args.micro_batch, n_probe=args.n_probe,
         n_short_aq=args.n_short_aq, n_short_pw=args.n_short_pw,

@@ -2,16 +2,32 @@
 
 - distributed_topk: per-shard top-k + all-gather + merge (billion-scale
   search; also used by core/search.make_distributed_adc).
+- merge_topk_ranked: the same merge for SEQUENTIAL shard scans (the
+  out-of-core `core/search.search_sharded` running merge), with explicit
+  candidate ranks so tie-breaking matches one big `lax.top_k`.
 - sp_decode_merge: sequence-parallel decode attention combine — merges
   per-shard partial softmax statistics (max / denominator / weighted sum).
 - compressed_psum_pods: re-exported from core/grad_compress.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
+
 from repro.core.grad_compress import compressed_psum_pods  # noqa: F401
+
+
+def topk_lists(vals, ids, k: int):
+    """Concatenated per-shard shortlists (..., L) -> merged (..., k)
+    (values desc, ids carried along). Ties resolve lowest-position-first
+    in the concatenation order (the `lax.top_k` contract) — the shared
+    merge body of the shard_map collective and the out-of-core running
+    merge."""
+    s, i = jax.lax.top_k(vals, k)
+    return s, jnp.take_along_axis(ids, i, axis=-1)
 
 
 def merge_topk(vals_local, gids_local, k: int, axis: str):
@@ -23,8 +39,33 @@ def merge_topk(vals_local, gids_local, k: int, axis: str):
     Wire cost: 2 * Q * k * (bytes) instead of gathering Q * N scores."""
     s_all = jax.lax.all_gather(vals_local, axis, axis=1, tiled=True)
     g_all = jax.lax.all_gather(gids_local, axis, axis=1, tiled=True)
-    s2, i2 = jax.lax.top_k(s_all, k)
-    return jnp.take_along_axis(g_all, i2, axis=1), s2
+    s2, g2 = topk_lists(s_all, g_all, k)
+    return g2, s2
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk_ranked(vals, pos, gids, k: int):
+    """Rank-aware shortlist merge: top-k by (value desc, pos asc).
+
+    The sequential counterpart of `merge_topk` for the out-of-core scan
+    (`core/search.search_sharded`), where per-shard lists arrive one at a
+    time instead of via all_gather. ``pos`` is each candidate's position
+    in the resident `search()` candidate ordering (probe-rank major,
+    within-bucket rank minor), so ties — including the all--inf padding
+    slots a small probe produces — resolve exactly as one `lax.top_k`
+    over the full resident candidate array would: the inputs are sorted
+    by ``pos`` (stable) before `topk_lists`, whose tie-break is then
+    lowest-pos-first by construction.
+
+    vals/pos/gids: (Q, L) with k <= L -> (Q, k) each, value-descending.
+    """
+    order = jnp.argsort(pos, axis=-1)                  # stable in jnp
+    v = jnp.take_along_axis(vals, order, axis=-1)
+    p = jnp.take_along_axis(pos, order, axis=-1)
+    g = jnp.take_along_axis(gids, order, axis=-1)
+    s, i = jax.lax.top_k(v, k)
+    return (s, jnp.take_along_axis(p, i, axis=-1),
+            jnp.take_along_axis(g, i, axis=-1))
 
 
 def distributed_topk(scores_local, base_index, k: int, axis: str):

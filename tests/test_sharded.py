@@ -1,0 +1,311 @@
+"""The out-of-core sharded search + sharded build contract:
+
+- `search_sharded` over a `ShardedIndexView` returns bit-identical
+  indices AND scores to resident `search()` on the same store, on both
+  dispatch backends, including the degenerate small-probe case where
+  bucket-table padding enters the shortlist;
+- peak device residency of the staged codes is bounded by the shard-LRU
+  budget (database size is independent of device memory);
+- `allow_partial=True` searches exactly the completed shards, matching
+  resident search over the partially-loaded prefix;
+- a data-axis sharded multi-owner build (`host_id`/`n_hosts`) writes
+  byte-identical shard files to a single-owner build, including after a
+  kill/resume of one owner (cursor-per-owner, stale cursors recovered);
+- out-of-core serving (`SearchServer` over a view) matches resident.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import (IndexStore, ShardedIndexView,
+                         StreamingIndexBuilder, owner_range)
+from repro.parallel.collectives import merge_topk_ranked
+
+from conftest import clustered
+
+
+SEARCH_KW = dict(n_probe=4, n_short_aq=16, n_short_pw=8, topk=3)
+SHARD_FILES = ("codes.u8", "assign.i32", "aq_norms.f32", "pw_norms.f32")
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    """Clustered database -> resident index -> saved store (4 shards)."""
+    rng = np.random.default_rng(21)
+    xb = clustered(rng, 1100, 16, k=16)          # non-tile-multiple N
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), xb[:400], cfg)
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params, cfg,
+                             k_ivf=8, m_tilde=2, n_pair_books=4,
+                             encode_chunk=512)
+    store_dir = tmp_path_factory.mktemp("store") / "idx"
+    IndexStore.save(store_dir, idx, shard_size=300)
+    q = jnp.asarray(xb[:13] + 0.02)
+    return xb, cfg, params, store_dir, q
+
+
+@pytest.fixture(scope="module")
+def resident(world):
+    _, _, _, store_dir, _ = world
+    return IndexStore(store_dir).load()
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of the out-of-core cascade
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_search_sharded_bitwise_identical(world, resident, backend):
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    i1, s1 = search.search(resident, q, cfg=cfg, backend=backend,
+                           **SEARCH_KW)
+    i2, s2 = search.search_sharded(view, q, cfg=cfg, backend=backend,
+                                   **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_degenerate_padding_parity(world, resident, backend):
+    """Shortlists wider than the probed candidates force the resident
+    top-k onto bucket-table padding slots (-inf, id 0); the out-of-core
+    merge must synthesize identical entries (positions and all)."""
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    kw = dict(n_probe=2, n_short_aq=500, n_short_pw=100, topk=50, cfg=cfg,
+              backend=backend)
+    i1, s1 = search.search(resident, q, **kw)
+    i2, s2 = search.search_sharded(view, q, **kw)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_single_query_and_full_probe(world, resident):
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir)
+    kw = dict(n_probe=8, n_short_aq=64, n_short_pw=16, topk=10, cfg=cfg)
+    i1, s1 = search.search(resident, q[:1], **kw)
+    i2, s2 = search.search_sharded(view, q[:1], **kw)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_lru_eviction_and_residency_budget(world, resident):
+    """max_resident_shards=1 over a 4-shard store: every shard cycles
+    through one staging slot, results stay bit-identical, and the peak
+    staged bytes never exceed the 1-shard budget — which is strictly
+    smaller than staging the whole database (the out-of-core claim)."""
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=1)
+    i1, s1 = search.search(resident, q, cfg=cfg, **SEARCH_KW)
+    i2, s2 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert len(view.shard_ids) == 4
+    assert len(view.resident_shards) == 1            # LRU held the budget
+    assert view.peak_resident_bytes <= view.budget_bytes
+    total = sum(view.shard_staged_bytes(s) for s in view.shard_ids)
+    assert view.budget_bytes < total                 # bounded < database
+    # a second search re-stages evicted shards and is deterministic
+    i3, s3 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i3))
+    assert view.peak_resident_bytes <= view.budget_bytes
+
+
+def test_lru_moves_hot_shard_to_back(world):
+    _, _, _, store_dir, _ = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    view.staged(0), view.staged(1)
+    view.staged(0)                                   # touch 0 -> MRU
+    view.staged(2)                                   # evicts 1, not 0
+    assert view.resident_shards == [0, 2]
+
+
+def test_gather_rows_matches_store_bytes(world, resident):
+    _, _, _, store_dir, _ = world
+    view = ShardedIndexView(store_dir)
+    gids = np.array([[0, 299, 300], [1099, 600, 0]])
+    codes, assign, pw_norms = view.gather_rows(gids)
+    np.testing.assert_array_equal(codes,
+                                  np.asarray(resident.codes)[gids])
+    np.testing.assert_array_equal(assign,
+                                  np.asarray(resident.ivf.assignments)[gids])
+    np.testing.assert_array_equal(pw_norms,
+                                  np.asarray(resident.pw_norms)[gids])
+
+
+def test_view_guards(world):
+    _, _, _, store_dir, _ = world
+    with pytest.raises(ValueError, match="max_resident_shards"):
+        ShardedIndexView(store_dir, max_resident_shards=0)
+    import json
+    store = IndexStore(store_dir)
+    m = json.loads(store.manifest_path.read_text())
+    m["complete"] = False
+    store.manifest_path.write_text(json.dumps(m))
+    try:
+        with pytest.raises(ValueError, match="incomplete"):
+            ShardedIndexView(store_dir)
+        assert ShardedIndexView(store_dir, allow_partial=True) is not None
+    finally:
+        m["complete"] = True
+        store.manifest_path.write_text(json.dumps(m))
+
+
+def test_merge_topk_ranked_matches_topk_over_ordered_input():
+    """The running merge == one lax.top_k over the pos-ordered list,
+    including value ties broken by pos and -inf entries."""
+    rng = np.random.default_rng(0)
+    vals = rng.choice([1.0, 2.0, 3.0, -np.inf], size=(5, 12)).astype(
+        np.float32)
+    pos = rng.permutation(12 * 5).reshape(5, 12).astype(np.int32)
+    gids = np.arange(60, dtype=np.int32).reshape(5, 12)
+    s, p, g = merge_topk_ranked(jnp.asarray(vals), jnp.asarray(pos),
+                                jnp.asarray(gids), 6)
+    order = np.argsort(pos, axis=1)
+    vo = np.take_along_axis(vals, order, 1)
+    go = np.take_along_axis(gids, order, 1)
+    s_ref, i_ref = jax.lax.top_k(jnp.asarray(vo), 6)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.take_along_axis(go, np.asarray(i_ref),
+                                                     1))
+
+
+# ---------------------------------------------------------------------------
+# partial stores / m_tilde = 0
+# ---------------------------------------------------------------------------
+
+
+def _make_builder(path, xb, params, cfg, **prep):
+    b = StreamingIndexBuilder(path, shard_size=300, encode_chunk=256)
+    b.prepare(jax.random.key(3), xb, params, cfg, n_total=len(xb),
+              k_ivf=8, m_tilde=prep.pop("m_tilde", 2), n_pair_books=4)
+    return b
+
+
+def test_partial_store_view_matches_partial_load(world, tmp_path):
+    xb, cfg, params, _, q = world
+    b = _make_builder(tmp_path / "p", xb, params, cfg)
+    assert not b.build(xb, max_shards=2)
+    partial = IndexStore(tmp_path / "p").load(allow_partial=True)
+    view = ShardedIndexView(tmp_path / "p", allow_partial=True)
+    assert view.n_rows == partial.codes.shape[0] == 600
+    i1, s1 = search.search(partial, q, cfg=cfg, **SEARCH_KW)
+    i2, s2 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_view_m_tilde_zero(world, tmp_path):
+    xb, cfg, params, _, q = world
+    b = StreamingIndexBuilder(tmp_path / "z", shard_size=600,
+                              encode_chunk=256)
+    b.prepare(jax.random.key(5), xb, params, cfg, n_total=len(xb),
+              k_ivf=8, m_tilde=0, n_pair_books=4)
+    assert b.build(xb)
+    resident0 = IndexStore(tmp_path / "z").load()
+    view = ShardedIndexView(tmp_path / "z")
+    assert view.centroid_codes is None
+    i1, s1 = search.search(resident0, q, cfg=cfg, **SEARCH_KW)
+    i2, s2 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+# ---------------------------------------------------------------------------
+# multi-owner sharded builds
+# ---------------------------------------------------------------------------
+
+
+def test_owner_range_partitions_exactly():
+    for n_shards in (1, 4, 7, 12):
+        for n_hosts in (1, 2, 3, 5):
+            ranges = [owner_range(n_shards, h, n_hosts)
+                      for h in range(n_hosts)]
+            covered = [s for lo, hi in ranges for s in range(lo, hi)]
+            assert covered == list(range(n_shards))
+            sizes = [hi - lo for lo, hi in ranges]
+            assert max(sizes) - min(sizes) <= 1      # balanced
+    with pytest.raises(ValueError, match="host_id"):
+        owner_range(4, 2, 2)
+
+
+def _shard_bytes(store_dir, sid):
+    d = IndexStore(store_dir).shard_dir(sid)
+    return {f: (d / f).read_bytes() for f in SHARD_FILES}
+
+
+def test_multi_owner_build_byte_identical(world, tmp_path):
+    """Two owners writing disjoint ranges of one store == a single-owner
+    build, byte-for-byte per shard file — including a kill/resume of one
+    owner mid-range (its cursor) and a stale-cursor recovery."""
+    xb, cfg, params, _, q = world
+    # reference: single owner
+    assert _make_builder(tmp_path / "one", xb, params, cfg).build(xb)
+    # multi-owner: owner 1 killed after one shard, cursor deleted (stale),
+    # then resumed; owner 0 runs after (any interleaving is valid)
+    two = tmp_path / "two"
+    assert not _make_builder(two, xb, params, cfg).build(
+        xb, host_id=1, n_hosts=2, max_shards=1)
+    IndexStore(two).cursor_path_for(1).unlink()      # stale cursor
+    assert not _make_builder(two, xb, params, cfg).build(
+        xb, host_id=0, n_hosts=2)                    # owner 0: not complete
+    assert _make_builder(two, xb, params, cfg).build(
+        xb, host_id=1, n_hosts=2)                    # owner 1 finalizes
+    n_shards = IndexStore(two).manifest["n_shards"]
+    assert n_shards == 4
+    for sid in range(n_shards):
+        assert _shard_bytes(tmp_path / "one", sid) == _shard_bytes(two, sid)
+    ia = IndexStore(tmp_path / "one").load()
+    ib = IndexStore(two).load()
+    i1, s1 = search.search(ia, q, cfg=cfg, **SEARCH_KW)
+    i2, s2 = search.search_sharded(ShardedIndexView(two), q, cfg=cfg,
+                                   **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(ia.codes), np.asarray(ib.codes))
+
+
+def test_owner_cursors_are_disjoint_files(world, tmp_path):
+    xb, cfg, params, _, _ = world
+    d = tmp_path / "c"
+    assert not _make_builder(d, xb, params, cfg).build(
+        xb, host_id=0, n_hosts=2, max_shards=1)
+    assert not _make_builder(d, xb, params, cfg).build(
+        xb, host_id=1, n_hosts=2, max_shards=1)
+    store = IndexStore(d)
+    assert store.cursor_path_for(0).name == "cursor.json"
+    assert store.cursor_path_for(1).name == "cursor_00001.json"
+    c0, c1 = store.read_cursor(owner=0), store.read_cursor(owner=1)
+    assert c0["next_shard"] == 1 and c1["next_shard"] == 3
+    # owner 1's fill covers shards [0, 3): recomputed for the absent
+    # shard 1 (owner 0 hasn't written it), identical to disk-backed counts
+    assert sum(c1["fill"]) == 3 * 300
+
+
+# ---------------------------------------------------------------------------
+# out-of-core serving
+# ---------------------------------------------------------------------------
+
+
+def test_search_server_out_of_core_matches_resident(world, resident):
+    from repro.launch.serve_search import SearchServer, synthetic_stream
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    srv = SearchServer(view, micro_batch=8, topk=3, n_probe=4,
+                       n_short_aq=16, n_short_pw=8)
+    assert srv.out_of_core
+    ids, dists = srv.search_batch(np.asarray(q)[:5])
+    ref_q = jnp.concatenate([q[:5], jnp.zeros((3, q.shape[1]))])
+    ref_ids, ref_d = search.search(resident, ref_q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(ids, np.asarray(ref_ids)[:5])
+    np.testing.assert_array_equal(dists, np.asarray(ref_d)[:5])
+    stats = srv.serve_stream(*synthetic_stream(view, 24, 2000.0))
+    assert stats.n_queries == 24
+    assert view.peak_resident_bytes <= view.budget_bytes

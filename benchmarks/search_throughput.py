@@ -13,10 +13,17 @@ p50/p99 latency per row.
 
 Out-of-core rows are the steady-state shape: the shard LRU is sized to
 hold every shard, so after warmup the timings measure the scan/merge
-overhead, not disk re-staging. `main(json_path=...)` writes the rows as
-machine-readable JSON (`benchmarks/run.py --only search` ->
-BENCH_search.json) so the search perf trajectory is recorded per CI run
-like encode/kernels.
+overhead, not disk re-staging. At the LARGEST shard count two extra
+cold-scan rows squeeze the staging pipeline itself: the pool holds only
+half the shards, so every scan evicts and re-stages — mode
+``out_of_core_cold`` runs the default prefetched pipeline (shard s+1
+stages in the background while s is scanned; evictions replay from the
+host cache of assembled shards), ``out_of_core_cold_nopf`` the same
+budget with prefetch off (each stage is a synchronous stall). The gap
+between the two is the latency the pipeline hides. `main(json_path=...)`
+writes the rows as machine-readable JSON (`benchmarks/run.py --only
+search` -> BENCH_search.json) so the search perf trajectory is recorded
+per CI run like encode/kernels.
 """
 from __future__ import annotations
 
@@ -86,6 +93,18 @@ def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
                 lambda qq: search.search_sharded(view, qq, cfg=cfg,
                                                  **SEARCH_KW),
                 q, reps=reps), batch))
+            if n_shards == max(shard_counts) and n_shards > 1:
+                # cold-scan rows: budget holds half the shards, so every
+                # scan re-stages — with vs without the prefetch pipeline
+                for mode, pf in (("out_of_core_cold", True),
+                                 ("out_of_core_cold_nopf", False)):
+                    cold = ShardedIndexView(
+                        d, max_resident_shards=max(1, n_shards // 2))
+                    cold.pool.prefetch_enabled = pf
+                    rows.append(_row(mode, n_shards, _time_batches(
+                        lambda qq: search.search_sharded(
+                            cold, qq, cfg=cfg, prefetch=pf, **SEARCH_KW),
+                        q, reps=reps), batch))
         finally:
             shutil.rmtree(d, ignore_errors=True)
     return rows

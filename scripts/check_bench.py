@@ -118,7 +118,7 @@ def check_file(name: str, tol: float, global_tol: float) -> tuple:
     return bad, lines
 
 
-def bless(reset: bool = False) -> int:
+def bless(reset: bool = False, names=None) -> int:
     """Adopt current BENCH_*.json values as baselines.
 
     By default each row MERGES pessimistically with the existing
@@ -129,9 +129,15 @@ def bless(reset: bool = False) -> int:
     pass, and a genuine cliff falls below it. Blessing against the fast
     edge would instead flag every slow-mode run of a bimodal row.
     ``--bless-reset`` overwrites outright (use after an intentional perf
-    change or on a new machine)."""
+    change or on a new machine). Both accept a file subset, so one
+    artifact can be reset after an intentional perf change without
+    touching the others' noise bands:
+
+        scripts/check_bench.py --bless-reset BENCH_search.json
+    """
     BASELINE_DIR.mkdir(parents=True, exist_ok=True)
-    for name, (fields, metric, direction) in SPECS.items():
+    for name in (names or sorted(SPECS)):
+        fields, metric, direction = SPECS[name]
         src = REPO / name
         if not src.exists():
             print(f"[check_bench] {name} not present; skipped")
@@ -171,12 +177,12 @@ def main(argv=None) -> int:
     ap.add_argument("files", nargs="*", default=None,
                     help=f"subset of {sorted(SPECS)} (default: all)")
     args = ap.parse_args(argv)
-    if args.bless or args.bless_reset:
-        return bless(reset=args.bless_reset)
     names = args.files or sorted(SPECS)
     unknown = [n for n in names if n not in SPECS]
     if unknown:
         ap.error(f"unknown bench files {unknown}; known: {sorted(SPECS)}")
+    if args.bless or args.bless_reset:
+        return bless(reset=args.bless_reset, names=names)
     total_bad = 0
     for name in names:
         bad, lines = check_file(name, args.tol, args.global_tol)

@@ -65,12 +65,18 @@ try:
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
     view = ShardedIndexView(d, max_resident_shards=1)
-    i3, s3 = search.search_sharded(view, q, **kw)
+    i3, s3 = search.search_sharded(view, q, **kw)          # prefetch default
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i3))
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s3))
+    i4, s4 = search.search_sharded(view, q, prefetch=False, **kw)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i4))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s4))
     assert view.peak_resident_bytes <= view.budget_bytes
+    assert view.pool.peak_resident_entries <= 1, \
+        "prefetch over-allocated past max_resident_shards"
     print("[ci] index store smoke OK (save -> load -> search bit-identical; "
-          "out-of-core search_sharded bit-identical within LRU budget)")
+          "out-of-core search_sharded bit-identical with prefetch on AND "
+          "off, staging pool within the LRU budget)")
 finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
@@ -89,7 +95,9 @@ test -s BENCH_encode.json \
     && echo "[ci] encode throughput smoke OK (BENCH_encode.json written)"
 
 # search-throughput smoke: resident vs out-of-core QPS/p50/p99 across shard
-# counts -> BENCH_search.json (the search-side perf trajectory)
+# counts, plus cold-scan rows (pool holds half the shards; prefetch on vs
+# off) at the largest count -> BENCH_search.json (the search-side perf
+# trajectory)
 python -m benchmarks.run --only search
 test -s BENCH_search.json \
     && echo "[ci] search throughput smoke OK (BENCH_search.json written)"

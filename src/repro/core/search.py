@@ -217,7 +217,6 @@ def _probe_and_masked_lut(centroids, aq_books, q, n_probe: int):
     return top_b, lut
 
 
-@partial(jax.jit, static_argnames=("k", "cap", "backend"))
 def _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base, *,
                      k: int, cap: int, backend: str):
     """One shard's contribution: fused `ops.adc_topk` scan (the per-shard
@@ -238,6 +237,23 @@ def _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base, *,
     pos = jnp.where(found, rank * cap + jnp.take(wbr, loc), _POS_SENTINEL)
     vals = jnp.where(found, vals, -jnp.inf)
     return vals, pos, base + loc
+
+
+@partial(jax.jit, static_argnames=("k", "cap", "backend"))
+def _fold_shard(vals, pos, gids, ext, wbr, norms, lut_masked, top_b, base,
+                *, k: int, cap: int, backend: str):
+    """Shortlist one shard AND fold it into the running (Q, k) merge in a
+    single jitted launch. The shard loop used to dispatch the shortlist,
+    three concatenates, and the ranked merge as separate executables per
+    shard; at small per-shard row counts those fixed dispatch costs — not
+    the ADC math — dominated the out-of-core gap, so the whole per-shard
+    step is one compiled computation (one dispatch per shard)."""
+    from repro.parallel.collectives import merge_topk_ranked
+    nv, np_, ng = _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base,
+                                   k=k, cap=cap, backend=backend)
+    return merge_topk_ranked(jnp.concatenate([vals, nv], axis=1),
+                             jnp.concatenate([pos, np_], axis=1),
+                             jnp.concatenate([gids, ng], axis=1), k)
 
 
 @partial(jax.jit, static_argnames=("cap", "p_pad"))
@@ -302,28 +318,42 @@ def _rerank_shortlist(q, s1, ids1, codes1, assign1, pw_norms1, pw_codebooks,
 
 def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
                    n_short_pw: int = 16, topk: int = 1,
-                   cfg: QincoConfig = None, backend: str = "auto"):
+                   cfg: QincoConfig = None, backend: str = "auto",
+                   prefetch: bool = True):
     """Out-of-core cascade over a `ShardedIndexView` — bit-identical
     (indices AND scores) to resident `search()` on the same store.
 
-    Structure: one probe + masked-LUT launch, then a sequential scan of
-    the store's shards — each staged through the view's LRU, shortlisted
-    by the fused `ops.adc_topk` kernel, and folded into a running
-    (Q, n_short_aq) merge via `collectives.merge_topk_ranked` — then ONE
-    host gather of only the merged shortlist rows feeds the pairwise and
-    `ops.f_theta` re-rank stages. Peak device residency is the view's
-    LRU budget plus O(Q * shortlist); the (N, ...) arrays never leave
-    their mmaps.
+    Structure: one probe + masked-LUT launch, then a scan over the
+    shards `view.schedule_shards` selects — shards with zero probed
+    buckets are skipped outright, the rest ordered resident-first — each
+    staged through the view's `StagingPool` and folded into the running
+    (Q, n_short_aq) merge by `_fold_shard` (fused `ops.adc_topk`
+    shortlist + `collectives.merge_topk_ranked`, ONE jitted dispatch per
+    shard). With ``prefetch`` (the default, and the path `serve_search
+    --out-of-core` uses) shard s+1 is staged by the pool's background
+    worker — host `ext` assembly + async `device_put` — while shard s is
+    being scanned, so the mmap->device copy leaves the critical path;
+    eviction for the prefetched shard is decided at issue time, keeping
+    the LRU budget bound intact at allocation. Then ONE host gather of
+    only the merged shortlist rows feeds the pairwise and `ops.f_theta`
+    re-rank stages. Peak device residency is the pool budget plus
+    O(Q * shortlist); the (N, ...) arrays never leave their mmaps.
 
     Bit-identity argument: per-shard `adc_topk` values equal the resident
     step-2 scores (same `score_tile`/gather scoring, probe restriction
     folded into the LUT leaves probed entries untouched), and the merge
     ranks every candidate by its position in the resident candidate
     array (probe-rank major / bucket slot minor, synthesized padding
-    included) so `lax.top_k` tie-breaking matches exactly. One caveat is
-    out of scope: a float-exact score tie between rows of DIFFERENT
-    buckets inside one shard is kept/dropped at the per-shard k boundary
-    in id order rather than probe-rank order.
+    included) so `lax.top_k` tie-breaking matches exactly — which also
+    makes scan order (and shard skipping) irrelevant: a skipped shard
+    could only contribute (-inf, `_POS_SENTINEL`) entries, and the
+    synthesized padding already supplies >= n_short_aq entries with
+    better (finite) ranks, so sentinel entries never reach the final
+    shortlist. The initial all-sentinel merge state is inert for the
+    same reason. One caveat is out of scope: a float-exact score tie
+    between rows of DIFFERENT buckets inside one shard is kept/dropped
+    at the per-shard k boundary in id order rather than probe-rank
+    order.
 
     Not jitted end-to-end by design (the shard loop is a host loop over
     mmap'd staging); every numerical stage dispatches through jitted
@@ -338,15 +368,20 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
 
     top_b, lut_m = _probe_and_masked_lut(view.centroids, view.aq_books, q,
                                          n_probe)
-    state = None
-    for sid in view.shard_ids:
-        st = view.staged(sid)
-        new = _shard_shortlist(
-            st["ext"], st["wbr"], st["aq_norms"], lut_m, top_b,
+    sched = view.schedule_shards(np.asarray(top_b))
+    Q = q.shape[0]
+    state = (jnp.full((Q, n_short_aq), -jnp.inf, jnp.float32),
+             jnp.full((Q, n_short_aq), _POS_SENTINEL, jnp.int32),
+             jnp.zeros((Q, n_short_aq), jnp.int32))
+    for i, sid in enumerate(sched):
+        st = view.acquire(sid)
+        if prefetch and i + 1 < len(sched):
+            view.prefetch(sched[i + 1])   # stages while sid is scanned
+        state = _fold_shard(
+            *state, st["ext"], st["wbr"], st["aq_norms"], lut_m, top_b,
             np.int32(sid * view.shard_size), k=n_short_aq, cap=cap,
             backend=backend)
-        state = new if state is None else _merge_state(state, new,
-                                                       n_short_aq)
+        view.release(sid)
     pad = _padding_entries(top_b, view.bucket_fill, cap=cap,
                            p_pad=min(n_short_aq, cap))
     s1, _, ids1 = _merge_state(state, pad, n_short_aq)

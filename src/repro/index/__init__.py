@@ -2,8 +2,10 @@
 
     codes.py    PackedCodes: uint8 code container + pack/unpack helpers
     store.py    on-disk sharded index format (manifest + mmap shards)
-                + ShardedIndexView, the out-of-core reader (LRU-staged
+                + ShardedIndexView, the out-of-core reader (pool-staged
                 shards, `core/search.search_sharded` consumes it)
+    staging.py  StagingPool: shared byte-budgeted device LRU with
+                background prefetch + host cache of assembled shards
     builder.py  resumable streaming build driver (shard cursor), with
                 data-axis shard-range ownership for multi-host builds
 
@@ -16,5 +18,6 @@ from repro.index.builder import (StreamingIndexBuilder,  # noqa: F401
                                  owner_range)
 from repro.index.codes import (CODE_DTYPE, PackedCodes,  # noqa: F401
                                pack_codes, unpack_codes)
+from repro.index.staging import StagingPool  # noqa: F401
 from repro.index.store import (FORMAT_VERSION, IndexStore,  # noqa: F401
                                ShardedIndexView)

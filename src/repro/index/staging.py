@@ -1,0 +1,331 @@
+"""Shared bounded device staging for out-of-core shard scans.
+
+`StagingPool` is the latency-hiding heart of the out-of-core search
+path: a device-side LRU of staged shards under ONE byte budget that
+several `ShardedIndexView`s (multi-tenant serving) can share, plus
+
+  - a **background prefetch worker**: `prefetch(key, ...)` assembles the
+    host-side arrays and dispatches the (async) `jax.device_put` on a
+    worker thread, so the mmap read + `np.concatenate`/`astype` + H2D
+    copy of shard s+1 overlap the `ops.adc_topk` scan of shard s;
+  - a **host cache of assembled arrays** (bounded separately from the
+    device LRU): an evict -> re-stage cycle replays only the
+    `device_put`, not a fresh concatenate+astype over the whole shard;
+  - **evict-at-issue accounting**: room for a stage or prefetch is made
+    (LRU eviction of unpinned entries) and its bytes reserved BEFORE the
+    device buffers allocate, so `peak_resident_bytes <= budget_bytes`
+    holds at allocation time — never `max_entries + 1` shards allocated,
+    even with a prefetch in flight. A prefetch that cannot make room
+    without evicting a pinned (in-use) entry is skipped, not forced: the
+    pipeline degrades to the sequential stage-then-scan order instead of
+    breaking the budget bound.
+
+Lifetime rules (also in docs/INDEX_FORMAT.md):
+  - An entry is *pinned* between `acquire` and `release`; pinned entries
+    are never evicted. Each searching thread pins at most one shard at a
+    time, so any budget >= one worst-case shard per concurrent searcher
+    makes progress (a sync `acquire` that cannot make room waits for a
+    `release`, it does not over-allocate).
+  - Eviction drops the pool's reference only; arrays already handed out
+    (or still feeding an in-flight async computation) stay alive through
+    their own references — the budget bound is an *allocation*-time
+    guarantee, matching the pre-pool LRU semantics.
+  - The host cache stores the assembled arrays themselves (the `host_fn`
+    contract is to return copies, never mmap views), so a cached shard
+    never aliases the store directory: deleting or rewriting the store
+    invalidates future `host_fn` calls only.
+
+Thread safety: all pool state is guarded by one condition variable;
+`acquire`/`release`/`prefetch` may be called from any number of threads
+(concurrent queries over views sharing the pool are tested).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+class _Entry:
+    __slots__ = ("device", "nbytes", "pins")
+
+    def __init__(self, device, nbytes: int):
+        self.device = device
+        self.nbytes = nbytes
+        self.pins = 0
+
+
+class _Inflight:
+    __slots__ = ("nbytes",)
+
+    def __init__(self, nbytes: int):
+        self.nbytes = nbytes
+
+
+class StagingPool:
+    """Byte-budgeted device LRU + host cache + prefetch worker.
+
+    Entries are keyed by ``(owner, shard_id)`` where ``owner`` comes from
+    `register()` — several views share the pool without key collisions.
+    The staging callback ``host_fn() -> dict[str, np.ndarray]`` does the
+    expensive host assembly (mmap read, concatenate, astype) and MUST
+    return fresh arrays (no mmap views); the pool device_puts the dict.
+
+    ``budget_bytes`` bounds the device-staged bytes (reserved at stage /
+    prefetch *issue* time). ``max_entries`` optionally also bounds the
+    entry count — a per-view pool passes its ``max_resident_shards`` so
+    the historical shard-count LRU semantics hold exactly.
+    ``host_cache_bytes`` bounds the host-side cache of assembled arrays
+    (``None`` defaults to ``2 * budget_bytes``; ``0`` disables).
+    """
+
+    def __init__(self, budget_bytes: int, *, max_entries: Optional[int] = None,
+                 host_cache_bytes: Optional[int] = None,
+                 prefetch: bool = True):
+        if budget_bytes < 1:
+            raise ValueError("budget_bytes must be >= 1")
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.budget_bytes = int(budget_bytes)
+        self.max_entries = max_entries
+        self.host_cache_bytes = (2 * self.budget_bytes
+                                 if host_cache_bytes is None
+                                 else int(host_cache_bytes))
+        self.prefetch_enabled = bool(prefetch)
+
+        self._cond = threading.Condition()
+        self._lru: "OrderedDict[tuple, _Entry]" = OrderedDict()
+        self._inflight: Dict[tuple, _Inflight] = {}
+        self._host: "OrderedDict[tuple, tuple]" = OrderedDict()  # k->(tree,nb)
+        self._host_bytes = 0
+        self._resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self.peak_resident_entries = 0
+        self._owner_seq = 0
+        self._stats = {
+            "staged": 0, "device_hits": 0, "host_hits": 0,
+            "prefetch_issued": 0, "prefetch_hits": 0, "prefetch_skipped": 0,
+            "evictions": 0, "stall_s": 0.0,
+        }
+        self._q: Optional[queue.Queue] = None
+        self._worker: Optional[threading.Thread] = None
+
+    # -- registry ------------------------------------------------------------
+
+    def register(self) -> int:
+        """Claim an owner id for one view (key namespace inside the pool)."""
+        with self._cond:
+            self._owner_seq += 1
+            return self._owner_seq
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
+
+    def resident_keys(self, owner: Optional[int] = None) -> list:
+        """LRU-ordered staged keys; with ``owner``, that owner's shard ids."""
+        with self._cond:
+            if owner is None:
+                return list(self._lru)
+            return [sid for (o, sid) in self._lru if o == owner]
+
+    def stats(self) -> dict:
+        with self._cond:
+            return dict(self._stats)
+
+    # -- budget accounting (cond held) ---------------------------------------
+
+    def _entries(self) -> int:
+        return len(self._lru) + len(self._inflight)
+
+    def _make_room(self, nbytes: int) -> bool:
+        """Evict unpinned LRU entries until ``nbytes`` more fit the budget
+        (bytes AND entry count). False if pinned/in-flight entries block."""
+        if nbytes > self.budget_bytes:
+            raise ValueError(f"one shard ({nbytes} B) exceeds the staging "
+                             f"budget ({self.budget_bytes} B)")
+        while (self._resident_bytes + nbytes > self.budget_bytes
+               or (self.max_entries is not None
+                   and self._entries() + 1 > self.max_entries)):
+            victim = next((k for k, e in self._lru.items() if e.pins == 0),
+                          None)
+            if victim is None:
+                return False
+            self._resident_bytes -= self._lru.pop(victim).nbytes
+            self._stats["evictions"] += 1
+        return True
+
+    def _begin(self, key, nbytes: int) -> _Inflight:
+        """Reserve bytes + an entry slot (room already made)."""
+        self._resident_bytes += nbytes
+        inf = _Inflight(nbytes)
+        self._inflight[key] = inf
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self._resident_bytes)
+        self.peak_resident_entries = max(self.peak_resident_entries,
+                                         self._entries())
+        return inf
+
+    def _install(self, key, device, inf: _Inflight) -> _Entry:
+        entry = _Entry(device, inf.nbytes)
+        del self._inflight[key]
+        self._lru[key] = entry                              # MRU
+        self._cond.notify_all()
+        return entry
+
+    def _abort(self, key, inf: _Inflight) -> None:
+        self._resident_bytes -= inf.nbytes
+        self._inflight.pop(key, None)
+        self._cond.notify_all()
+
+    # -- host assembly + device transfer (cond NOT held) ---------------------
+
+    def _transfer(self, key, host_fn: Callable[[], dict]):
+        host = None
+        with self._cond:
+            cached = self._host.get(key)
+            if cached is not None:
+                self._host.move_to_end(key)
+                self._stats["host_hits"] += 1
+                host = cached[0]
+        if host is None:
+            host = host_fn()
+            nb = sum(int(np.asarray(a).nbytes) for a in host.values())
+            with self._cond:
+                if 0 < nb <= self.host_cache_bytes \
+                        and key not in self._host:
+                    while (self._host
+                           and self._host_bytes + nb > self.host_cache_bytes):
+                        _, (_, old_nb) = self._host.popitem(last=False)
+                        self._host_bytes -= old_nb
+                    self._host[key] = (host, nb)
+                    self._host_bytes += nb
+        return jax.device_put(host)                         # async dispatch
+
+    # -- the worker ----------------------------------------------------------
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None:
+            self._q = queue.Queue()
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            daemon=True)
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            key, host_fn, inf = job
+            try:
+                device = self._transfer(key, host_fn)
+            except BaseException:
+                with self._cond:
+                    self._abort(key, inf)
+                continue                    # acquire() will re-stage sync
+            with self._cond:
+                self._stats["staged"] += 1
+                self._install(key, device, inf)
+
+    # -- public staging API --------------------------------------------------
+
+    def prefetch(self, key, host_fn: Callable[[], dict],
+                 nbytes: int) -> bool:
+        """Stage ``key`` in the background. Eviction (of unpinned entries
+        only) and byte reservation happen NOW, on the issuing thread, so
+        the budget bound holds when the device buffers allocate. Returns
+        False (and stages nothing) when the key is already resident or in
+        flight, prefetch is disabled, or room cannot be made without
+        touching a pinned entry."""
+        if not self.prefetch_enabled:
+            return False
+        with self._cond:
+            if key in self._lru or key in self._inflight:
+                return False
+            if not self._make_room(nbytes):
+                self._stats["prefetch_skipped"] += 1
+                return False
+            inf = self._begin(key, nbytes)
+            self._stats["prefetch_issued"] += 1
+            self._ensure_worker()
+        self._q.put((key, host_fn, inf))
+        return True
+
+    def acquire(self, key, host_fn: Callable[[], dict], nbytes: int,
+                timeout_s: float = 120.0):
+        """Staged device arrays for ``key``, pinned until `release(key)`.
+
+        Fast path: LRU hit (touch + pin). If a prefetch is in flight the
+        call waits for it (the *stall* the prefetch pipeline is hiding —
+        wait time lands in ``stats()['stall_s']``); otherwise it stages
+        synchronously on the calling thread (full staging time is the
+        stall). A call that cannot make room waits for another thread's
+        `release` rather than over-allocating."""
+        t0 = time.perf_counter()
+        waited_inflight = False
+        with self._cond:
+            while True:
+                entry = self._lru.get(key)
+                if entry is not None:
+                    self._lru.move_to_end(key)
+                    entry.pins += 1
+                    self._stats["device_hits"] += 1
+                    if waited_inflight:
+                        self._stats["prefetch_hits"] += 1
+                        self._stats["stall_s"] += time.perf_counter() - t0
+                    return entry.device
+                if key in self._inflight:
+                    waited_inflight = True
+                    if not self._cond.wait(timeout=timeout_s):
+                        raise TimeoutError(
+                            f"staging of {key} did not complete within "
+                            f"{timeout_s}s")
+                    continue
+                if self._make_room(nbytes):
+                    inf = self._begin(key, nbytes)
+                    break
+                if not self._cond.wait(timeout=timeout_s):
+                    raise TimeoutError(
+                        f"no staging budget for {key} within {timeout_s}s "
+                        f"(budget {self.budget_bytes} B all pinned — more "
+                        f"concurrent searchers than budgeted shards?)")
+        try:
+            device = self._transfer(key, host_fn)
+        except BaseException:
+            with self._cond:
+                self._abort(key, inf)
+            raise
+        with self._cond:
+            self._stats["staged"] += 1
+            entry = self._install(key, device, inf)
+            entry.pins += 1
+            self._stats["stall_s"] += time.perf_counter() - t0
+            return entry.device
+
+    def release(self, key) -> None:
+        """Unpin one `acquire` of ``key`` (the entry stays LRU-resident)."""
+        with self._cond:
+            entry = self._lru.get(key)
+            if entry is not None and entry.pins > 0:
+                entry.pins -= 1
+                self._cond.notify_all()
+
+    def drop_owner(self, owner: int) -> None:
+        """Forget one owner's device entries and host-cache lines (a view
+        being closed). Pinned or in-flight entries are left to finish."""
+        with self._cond:
+            for k in [k for k, e in self._lru.items()
+                      if k[0] == owner and e.pins == 0]:
+                self._resident_bytes -= self._lru.pop(k).nbytes
+                self._stats["evictions"] += 1
+            for k in [k for k in self._host if k[0] == owner]:
+                _, nb = self._host.pop(k)
+                self._host_bytes -= nb
+            self._cond.notify_all()

@@ -417,9 +417,9 @@ class IndexStore:
 
 class ShardedIndexView:
     """Out-of-core view of a store: shards stay mmap'd on disk and are
-    staged to the device one at a time through a bounded LRU, so database
-    size is independent of device memory (`IndexStore.load` by contrast
-    materializes every per-vector array resident).
+    staged to the device through a bounded `staging.StagingPool` LRU, so
+    database size is independent of device memory (`IndexStore.load` by
+    contrast materializes every per-vector array resident).
 
     What IS loaded up front (all O(model), not O(database)):
       - the global tree (centroids, AQ/pairwise codebooks, QINCo2 params);
@@ -432,12 +432,26 @@ class ShardedIndexView:
         its `lax.top_k` tie-breaking) bit-identically without ever
         materializing the bucket table.
 
-    Staged per shard (`staged()`, LRU of ``max_resident_shards``):
+    Staged per shard (`staged()` / `acquire()`, through the pool's LRU):
       - ``ext``      (rows, M+1) codes ++ assignment column — the shared-
                      codes form `ops.adc_topk` scans; packed uint8 when
                      both K and k_ivf fit a byte, else int32;
       - ``wbr``      (rows,) int32 within-bucket ranks;
       - ``aq_norms`` (rows,) float32.
+
+    Staging goes through a `staging.StagingPool`: a private one sized to
+    ``max_resident_shards`` worst-case shards by default, or a caller-
+    provided shared ``pool`` so several views (multi-tenant serving)
+    split ONE byte budget. The pool adds the latency-hiding machinery —
+    `prefetch(sid)` stages a shard on a background thread while the
+    current one is being scanned, and a bounded host-side cache of the
+    assembled ``ext`` arrays makes an evict -> re-stage cycle a
+    `device_put` instead of a fresh concatenate+astype over the shard.
+
+    Also derived in the one assignment pass: a per-shard bucket-occupancy
+    bitmap, so `schedule_shards` can drop shards containing zero probed
+    buckets and order the scan resident-first (fewer evictions) — the
+    rank-keyed merge makes scan order irrelevant to results.
 
     ``allow_partial`` accepts an incomplete store and searches exactly
     the shards present on disk (ids stay global). Shard 0 must exist —
@@ -445,17 +459,17 @@ class ShardedIndexView:
 
     mmap lifetime: `open_shard` views are materialized (copied) before
     staging and row gathers copy into fresh host arrays, so nothing
-    returned by this class aliases the store directory — deleting or
-    rewriting the store invalidates only future calls, never arrays
-    already handed out.
+    returned by this class (or cached by the pool) aliases the store
+    directory — deleting or rewriting the store invalidates only future
+    calls, never arrays already handed out.
     """
 
     def __init__(self, store, *, max_resident_shards: int = 2,
-                 allow_partial: bool = False):
-        from collections import OrderedDict
-
+                 allow_partial: bool = False, pool=None,
+                 host_cache_bytes: Optional[int] = None):
         from repro.core import ivf as ivf_mod
         from repro.core import pairwise as pw_mod
+        from repro.index.staging import StagingPool
 
         self.store = store if isinstance(store, IndexStore) \
             else IndexStore(store)
@@ -494,24 +508,33 @@ class ShardedIndexView:
             codebooks=jnp.asarray(g["pw_codebooks"]), K=self.K)
         self.qinco_params = jax.tree.map(jnp.asarray, g["qinco_params"])
 
-        # one pass over the assign mmaps: within-bucket ranks + fills
+        # one pass over the assign mmaps: within-bucket ranks + fills,
+        # plus each shard's bucket-occupancy bitmap (which buckets have at
+        # least one row here — what probe-aware scheduling skips on)
         fill = np.zeros(self.k_ivf, np.int64)
         self._wbr: Dict[int, np.ndarray] = {}
+        self._bucket_hit: Dict[int, np.ndarray] = {}
         for sid in self.shard_ids:
             a = np.asarray(self.store.open_shard(sid)["assign"])
-            self._wbr[sid], fill = ivf_mod.within_bucket_ranks(
+            self._wbr[sid], new_fill = ivf_mod.within_bucket_ranks(
                 a, self.k_ivf, fill)
+            self._bucket_hit[sid] = new_fill > fill        # (k_ivf,) bool
+            fill = new_fill
         self.bucket_fill = jnp.asarray(fill.astype(np.int32))  # (k_ivf,)
 
         # ext dtype: keep the packed-byte wire form whenever it can also
         # carry the assignment column (kernels widen in-VMEM either way)
         self._ext_dtype = (np.uint8 if self.K <= 256 and self.k_ivf <= 256
                            else np.int32)
-        self._lru: "OrderedDict[int, dict]" = OrderedDict()
-        self._resident_bytes = 0
-        self.peak_resident_bytes = 0
+        worst = max(self.shard_staged_bytes(s) for s in self.shard_ids)
+        self.pool = pool if pool is not None else StagingPool(
+            self.max_resident_shards * worst,
+            max_entries=self.max_resident_shards,
+            host_cache_bytes=host_cache_bytes)
+        self._owner = self.pool.register()
+        self.skipped_shards_total = 0
 
-    # -- LRU staging ---------------------------------------------------------
+    # -- staging through the pool --------------------------------------------
 
     def shard_staged_bytes(self, shard_id: int) -> int:
         """Device bytes one staged shard costs (ext + wbr + aq_norms)."""
@@ -521,52 +544,81 @@ class ShardedIndexView:
 
     @property
     def budget_bytes(self) -> int:
-        """The staging budget: ``max_resident_shards`` worst-case shards.
-        `peak_resident_bytes` never exceeds this (asserted in tests) —
-        the out-of-core guarantee that device residency is bounded by
-        the LRU, not the database."""
-        worst = max(self.shard_staged_bytes(s) for s in self.shard_ids)
-        return self.max_resident_shards * worst
+        """The pool's staging budget (for a private pool:
+        ``max_resident_shards`` worst-case shards). `peak_resident_bytes`
+        never exceeds this (asserted in tests) — the out-of-core
+        guarantee that device residency is bounded by the LRU, not the
+        database."""
+        return self.pool.budget_bytes
 
     @property
     def resident_shards(self):
-        return list(self._lru)
+        return self.pool.resident_keys(self._owner)
 
     @property
     def resident_bytes(self) -> int:
-        return self._resident_bytes
+        return self.pool.resident_bytes
 
-    def staged(self, shard_id: int) -> dict:
-        """Device-staged arrays for one shard, through the LRU."""
-        if shard_id in self._lru:
-            self._lru.move_to_end(shard_id)
-            return self._lru[shard_id]
-        # evict BEFORE staging: the budget bound must hold at the moment
-        # the new shard's device buffers allocate, not only after — with
-        # shards sized near device memory, evict-after would transiently
-        # hold max_resident_shards + 1 shards and OOM exactly where the
-        # out-of-core path is supposed to save you
-        while len(self._lru) >= self.max_resident_shards:
-            _, old = self._lru.popitem(last=False)      # evict LRU
-            self._resident_bytes -= old["nbytes"]
+    @property
+    def peak_resident_bytes(self) -> int:
+        return self.pool.peak_resident_bytes
+
+    def _host_shard(self, shard_id: int) -> dict:
+        """Assemble one shard's host-side scan arrays (the expensive part
+        of staging — mmap read + concatenate + astype; the unit the
+        pool's host cache holds on to). Returns fresh arrays only, never
+        mmap views (the pool's no-aliasing contract)."""
         sh = self.store.open_shard(shard_id)
         codes = np.asarray(sh["codes"])
         assign = np.asarray(sh["assign"])
         ext = np.concatenate(
             [codes.astype(self._ext_dtype, copy=False),
              assign.astype(self._ext_dtype)[:, None]], axis=1)
-        entry = {
-            "ext": jnp.asarray(ext),
-            "wbr": jnp.asarray(self._wbr[shard_id]),
-            "aq_norms": jnp.asarray(np.asarray(sh["aq_norms"])),
-            "nbytes": (ext.nbytes + self._wbr[shard_id].nbytes
-                       + sh["aq_norms"].nbytes),
-        }
-        self._lru[shard_id] = entry
-        self._resident_bytes += entry["nbytes"]
-        self.peak_resident_bytes = max(self.peak_resident_bytes,
-                                       self._resident_bytes)
+        return {"ext": ext, "wbr": self._wbr[shard_id],
+                "aq_norms": np.asarray(sh["aq_norms"])}
+
+    def acquire(self, shard_id: int) -> dict:
+        """Device-staged arrays for one shard, pinned until `release`."""
+        from functools import partial
+        return self.pool.acquire((self._owner, shard_id),
+                                 partial(self._host_shard, shard_id),
+                                 self.shard_staged_bytes(shard_id))
+
+    def release(self, shard_id: int) -> None:
+        self.pool.release((self._owner, shard_id))
+
+    def prefetch(self, shard_id: int) -> bool:
+        """Stage a shard in the background (evict-at-issue; see
+        `staging.StagingPool.prefetch`). Safe to call speculatively."""
+        from functools import partial
+        return self.pool.prefetch((self._owner, shard_id),
+                                  partial(self._host_shard, shard_id),
+                                  self.shard_staged_bytes(shard_id))
+
+    def staged(self, shard_id: int) -> dict:
+        """Device-staged arrays for one shard, through the LRU
+        (unpinned — the single-threaded convenience form of `acquire`)."""
+        entry = self.acquire(shard_id)
+        self.release(shard_id)
         return entry
+
+    # -- probe-aware scan scheduling -----------------------------------------
+
+    def schedule_shards(self, probed_buckets) -> list:
+        """Scan order for one query batch: shards with zero probed
+        buckets are dropped (their rows could only contribute non-probed
+        `-inf` entries, which the rank-keyed merge never selects —
+        padding always supplies enough better-ranked slots), and the
+        remainder is ordered resident-shards-first to minimize evictions
+        under a tight budget. The merge is keyed by resident-candidate
+        rank, so any order is bit-identical."""
+        probed = np.unique(np.asarray(probed_buckets).reshape(-1))
+        hit = [s for s in self.shard_ids
+               if bool(self._bucket_hit[s][probed].any())]
+        self.skipped_shards_total += len(self.shard_ids) - len(hit)
+        resident = set(self.resident_shards)
+        return ([s for s in hit if s in resident]
+                + [s for s in hit if s not in resident])
 
     # -- shortlist row gather (steps 3-4 of the cascade) ---------------------
 

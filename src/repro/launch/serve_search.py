@@ -44,12 +44,21 @@ class ServeStats:
     p99_ms: float
     mean_batch_occupancy: float   # fraction of micro-batch slots used
     qps: float
+    # staging-stall vs compute breakdown (out-of-core serving): stall is
+    # the time batches spent blocked waiting on a shard to stage (the
+    # pool's `stall_s` delta over the stream — what prefetch hides),
+    # compute is the remaining service time (adc_topk scans, merges, the
+    # re-rank tail). Resident serving reports stall 0.
+    stall_ms: float = 0.0
+    compute_ms: float = 0.0
 
     def row(self) -> str:
         return (f"queries={self.n_queries} batches={self.n_batches} "
                 f"occupancy={self.mean_batch_occupancy:.2f} "
                 f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
-                f"qps={self.qps:.0f} (warmup {self.warmup_s:.2f}s)")
+                f"qps={self.qps:.0f} "
+                f"stall={self.stall_ms:.1f}ms compute={self.compute_ms:.1f}ms "
+                f"(warmup {self.warmup_s:.2f}s)")
 
 
 class SearchServer:
@@ -70,7 +79,8 @@ class SearchServer:
 
     def __init__(self, index, *, micro_batch: int = 32, n_probe: int = 8,
                  n_short_aq: int = 64, n_short_pw: int = 16, topk: int = 10,
-                 backend: str = "auto", tile_table=None):
+                 backend: str = "auto", tile_table=None,
+                 prefetch: bool = True):
         if tile_table is not None:
             from repro.kernels import tuning
             tuning.load(tile_table)
@@ -79,7 +89,10 @@ class SearchServer:
         self.out_of_core = hasattr(index, "gather_rows")
         if self.out_of_core:
             self.d = int(index.centroids.shape[1])
-            search_fn = search_mod.search_sharded
+            # prefetched staging is the default serving path: shard s+1
+            # stages in the background while s is scanned
+            search_fn = partial(search_mod.search_sharded,
+                                prefetch=prefetch)
         else:
             self.d = int(index.ivf.centroids.shape[1])
             search_fn = search_mod.search
@@ -126,6 +139,8 @@ class SearchServer:
         n = len(queries)
         lat, occ, batches = [], [], 0
         clock = 0.0
+        service_total = 0.0
+        stall0 = self._staging_stall_s()
         i = 0
         while i < n:
             t_open = max(clock, arrival_s[i])      # first query in batch
@@ -139,6 +154,7 @@ class SearchServer:
             t0 = time.perf_counter()
             self.search_batch(queries[i:j])
             service = time.perf_counter() - t0
+            service_total += service
             clock = start + service
             lat.extend(clock - arrival_s[k] for k in range(i, j))
             occ.append((j - i) / self.micro_batch)
@@ -146,12 +162,21 @@ class SearchServer:
             i = j
         lat_ms = np.asarray(lat) * 1e3
         span = max(clock - arrival_s[0], 1e-9)
+        stall_s = max(0.0, self._staging_stall_s() - stall0)
         return ServeStats(
             n_queries=n, n_batches=batches, warmup_s=self.warmup_s,
             p50_ms=float(np.percentile(lat_ms, 50)),
             p99_ms=float(np.percentile(lat_ms, 99)),
             mean_batch_occupancy=float(np.mean(occ)),
-            qps=float(n / span))
+            qps=float(n / span),
+            stall_ms=stall_s * 1e3,
+            compute_ms=max(0.0, service_total - stall_s) * 1e3)
+
+    def _staging_stall_s(self) -> float:
+        """Cumulative time search batches spent blocked on shard staging
+        (the view's pool counter; 0 for resident serving)."""
+        pool = getattr(self.index, "pool", None)
+        return float(pool.stats()["stall_s"]) if pool is not None else 0.0
 
 
 def synthetic_stream(index, n_queries: int, rate_qps: float, *,
@@ -202,6 +227,9 @@ def main(argv: Optional[list] = None) -> ServeStats:
                          "stay mmap'd on disk, device residency bounded "
                          "by --max-resident-shards")
     ap.add_argument("--max-resident-shards", type=int, default=2)
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable background shard prefetch (out-of-core "
+                         "only; stages each shard synchronously)")
     ap.add_argument("--allow-partial", action="store_true",
                     help="serve an incomplete store (completed shards "
                          "only; requires --out-of-core or loads a prefix)")
@@ -220,11 +248,20 @@ def main(argv: Optional[list] = None) -> ServeStats:
     server = SearchServer(
         index, micro_batch=args.micro_batch, n_probe=args.n_probe,
         n_short_aq=args.n_short_aq, n_short_pw=args.n_short_pw,
-        topk=args.topk, backend=args.backend, tile_table=args.tile_table)
+        topk=args.topk, backend=args.backend, tile_table=args.tile_table,
+        prefetch=not args.no_prefetch)
     q, arrivals = synthetic_stream(index, args.queries, args.rate)
     stats = server.serve_stream(q, arrivals,
                                 max_wait_s=args.max_wait_ms / 1e3)
     print(f"[serve_search] {stats.row()}")
+    if args.out_of_core:
+        ps = index.pool.stats()
+        print(f"[serve_search] staging: staged={ps['staged']} "
+              f"device_hits={ps['device_hits']} host_hits={ps['host_hits']} "
+              f"prefetch_issued={ps['prefetch_issued']} "
+              f"prefetch_hits={ps['prefetch_hits']} "
+              f"evictions={ps['evictions']} "
+              f"skipped_shards={index.skipped_shards_total}")
     return stats
 
 

@@ -57,6 +57,13 @@ def merge_topk_ranked(vals, pos, gids, k: int):
     by ``pos`` (stable) before `topk_lists`, whose tie-break is then
     lowest-pos-first by construction.
 
+    Because the merge key is the (value, pos) PAIR and pos is a global
+    coordinate independent of which shard contributed the entry or when,
+    the fold is order-independent: folding shards in any order — or
+    skipping shards that contribute only (-inf, sentinel) entries, as
+    the probe-aware scheduler does — yields the same final top-k. The
+    scan-order-independence argument is written out in docs/KERNELS.md.
+
     vals/pos/gids: (Q, L) with k <= L -> (Q, k) each, value-descending.
     """
     order = jnp.argsort(pos, axis=-1)                  # stable in jnp

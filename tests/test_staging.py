@@ -1,0 +1,284 @@
+"""The latency-hiding staging contract:
+
+- prefetched `search_sharded` (the default) is bitwise identical to the
+  sequential (`prefetch=False`) scan AND to resident `search()` on both
+  dispatch backends;
+- probe-aware scheduling skips shards with zero probed buckets and
+  orders resident shards first — with identical results, and the skip
+  counter proving it actually fired;
+- the budget bound survives the prefetch pipeline: never more than
+  `max_resident_shards` staged entries allocated, even with a stage in
+  flight (evict-at-issue);
+- several views share one `StagingPool` under a single byte budget,
+  including under concurrent queries from separate threads;
+- the host cache of assembled shards turns an evict -> re-stage cycle
+  into a device_put (host_hits), not a fresh assembly;
+- prefetched staging is the DEFAULT serving path (`search_sharded`
+  signature + `SearchServer --out-of-core`), and `ServeStats` splits
+  service time into staging-stall vs compute.
+"""
+import inspect
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import IndexStore, ShardedIndexView, StagingPool
+
+from conftest import clustered
+
+
+SEARCH_KW = dict(n_probe=4, n_short_aq=16, n_short_pw=8, topk=3)
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    """Clustered database -> resident index -> saved store (4 shards)."""
+    rng = np.random.default_rng(7)
+    xb = clustered(rng, 1100, 16, k=16)
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), xb[:400], cfg)
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params, cfg,
+                             k_ivf=8, m_tilde=2, n_pair_books=4,
+                             encode_chunk=512)
+    store_dir = tmp_path_factory.mktemp("store") / "idx"
+    IndexStore.save(store_dir, idx, shard_size=300)
+    q = jnp.asarray(xb[:13] + 0.02)
+    return xb, cfg, params, store_dir, q
+
+
+@pytest.fixture(scope="module")
+def resident(world):
+    _, _, _, store_dir, _ = world
+    return IndexStore(store_dir).load()
+
+
+@pytest.fixture(scope="module")
+def sorted_world(world, tmp_path_factory):
+    """The same database re-ordered by IVF bucket, so shards have
+    DISJOINT-ish bucket occupancy and probe-aware skipping actually
+    fires (a randomly-ordered store touches every bucket per shard)."""
+    xb, cfg, params, _, _ = world
+    probe = search.build_index(jax.random.key(2), jnp.asarray(xb), params,
+                               cfg, k_ivf=8, m_tilde=2, n_pair_books=4,
+                               encode_chunk=512)
+    order = np.argsort(np.asarray(probe.ivf.assignments), kind="stable")
+    xs = xb[order]
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xs), params, cfg,
+                             k_ivf=8, m_tilde=2, n_pair_books=4,
+                             encode_chunk=512)
+    store_dir = tmp_path_factory.mktemp("sorted") / "idx"
+    IndexStore.save(store_dir, idx, shard_size=300)
+    return xs, cfg, idx, store_dir
+
+
+# ---------------------------------------------------------------------------
+# prefetch pipeline: parity + budget bound
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_prefetch_parity_both_backends(world, resident, backend):
+    """Prefetched (default), sequential, and resident all bit-identical;
+    the background worker really ran (prefetch_issued)."""
+    _, cfg, _, store_dir, q = world
+    i0, s0 = search.search(resident, q, cfg=cfg, backend=backend,
+                           **SEARCH_KW)
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    i1, s1 = search.search_sharded(view, q, cfg=cfg, backend=backend,
+                                   **SEARCH_KW)          # prefetch default
+    assert view.pool.stats()["prefetch_issued"] > 0
+    i2, s2 = search.search_sharded(view, q, cfg=cfg, backend=backend,
+                                   prefetch=False, **SEARCH_KW)
+    for i, s in ((i1, s1), (i2, s2)):
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s))
+
+
+@pytest.mark.parametrize("max_resident", [1, 2])
+def test_budget_bound_under_prefetch(world, resident, max_resident):
+    """Evict-at-issue: even with a prefetch in flight, never more than
+    max_resident_shards entries (or their bytes) allocated. At budget 1
+    the pipeline degrades to sequential (prefetch_skipped) rather than
+    over-allocating."""
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=max_resident)
+    i0, s0 = search.search(resident, q, cfg=cfg, **SEARCH_KW)
+    for _ in range(2):                       # second pass re-stages evicted
+        i1, s1 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    assert view.pool.peak_resident_entries <= max_resident
+    assert view.peak_resident_bytes <= view.budget_bytes
+    if max_resident == 1:
+        assert view.pool.stats()["prefetch_skipped"] > 0
+
+
+def test_host_cache_avoids_reassembly(world, resident):
+    """With a 1-shard device budget over 4 shards but a host cache that
+    covers the store, the second search replays every stage from the
+    host cache (host_hits) instead of re-assembling from the mmaps — and
+    stays bit-identical. (The default host cache is only 2x the device
+    budget; a cyclic scan larger than that thrashes it, hence the
+    explicit sizing here.)"""
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=1,
+                            host_cache_bytes=1 << 30)
+    search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    assert view.pool.stats()["host_hits"] == 0           # first pass: cold
+    i1, s1 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    assert view.pool.stats()["host_hits"] > 0
+    i0, s0 = search.search(resident, q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# ---------------------------------------------------------------------------
+# probe-aware scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_skips_and_orders_resident_first(world):
+    _, cfg, _, store_dir, _ = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    all_buckets = np.arange(view.k_ivf)[None]
+    view.staged(2)                                       # make 2 resident
+    sched = view.schedule_shards(all_buckets)
+    assert sched[0] == 2                                 # resident first
+    assert sorted(sched) == view.shard_ids               # nothing dropped
+    # a bucket no shard contains -> everything skipped
+    missing = np.asarray(view.bucket_fill) == 0
+    if missing.any():
+        b = int(np.argmax(missing))
+        before = view.skipped_shards_total
+        assert view.schedule_shards(np.array([[b]])) == []
+        assert view.skipped_shards_total == before + len(view.shard_ids)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_shard_skip_parity(sorted_world, backend):
+    """Over a bucket-sorted store a single-bucket probe hits only the
+    shard(s) holding that bucket's contiguous run: shards ARE skipped
+    (counter grows) and results stay bit-identical to resident."""
+    xs, cfg, idx, store_dir = sorted_world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    # a bucket some shard lacks is guaranteed by the sorted layout
+    absent = [(s, b) for s in view.shard_ids for b in range(view.k_ivf)
+              if not view._bucket_hit[s][b]]
+    assert absent, "sorted store still has every bucket in every shard"
+    kw = dict(n_probe=1, n_short_aq=16, n_short_pw=8, topk=3, cfg=cfg,
+              backend=backend)
+    q1 = jnp.asarray(xs[:9] + 0.02)
+    i0, s0 = search.search(idx, q1, **kw)
+    before = view.skipped_shards_total
+    i1, s1 = search.search_sharded(view, q1, **kw)
+    assert view.skipped_shards_total > before
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# ---------------------------------------------------------------------------
+# shared pool
+# ---------------------------------------------------------------------------
+
+
+def test_two_views_share_one_pool_concurrently(world, resident):
+    """Two views split ONE byte budget (2 worst-case shards), queried
+    from two threads at once: both bit-identical to resident, pool never
+    over its entry/byte bound. Budget rule: >= one worst-case shard per
+    concurrent searcher (each thread pins at most one)."""
+    _, cfg, _, store_dir, q = world
+    sizer = ShardedIndexView(store_dir, max_resident_shards=1)
+    worst = max(sizer.shard_staged_bytes(s) for s in sizer.shard_ids)
+    pool = StagingPool(2 * worst, max_entries=2)
+    v1 = ShardedIndexView(store_dir, pool=pool)
+    v2 = ShardedIndexView(store_dir, pool=pool)
+    assert v1._owner != v2._owner
+    i0, s0 = search.search(resident, q, cfg=cfg, **SEARCH_KW)
+    out, errs = {}, []
+
+    def worker(name, view):
+        try:
+            for _ in range(2):
+                out[name] = search.search_sharded(view, q, cfg=cfg,
+                                                  **SEARCH_KW)
+        except BaseException as e:                       # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(n, v))
+               for n, v in (("a", v1), ("b", v2))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errs and len(out) == 2
+    for i1, s1 in out.values():
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    assert pool.peak_resident_entries <= 2
+    assert pool.peak_resident_bytes <= pool.budget_bytes
+
+
+def test_pool_unit_contract():
+    """StagingPool mechanics without a store: pins block eviction,
+    duplicate prefetch is a no-op, oversized shards are rejected,
+    drop_owner frees an owner's lines."""
+    mk = lambda: {"x": np.ones(8, np.float32)}           # 32 B
+    pool = StagingPool(64, prefetch=False)
+    with pytest.raises(ValueError, match="exceeds the staging"):
+        pool.acquire(("o", 0), lambda: {"x": np.ones(32, np.float32)}, 128)
+    pool.acquire(("o", 0), mk, 32)                       # pinned
+    pool.acquire(("o", 1), mk, 32)                       # pool full, pinned
+    assert pool.prefetch(("o", 2), mk, 32) is False      # disabled
+    pool.prefetch_enabled = True
+    assert pool.prefetch(("o", 0), mk, 32) is False      # already resident
+    assert pool.prefetch(("o", 2), mk, 32) is False      # all pinned: skip
+    assert pool.stats()["prefetch_skipped"] == 1
+    pool.release(("o", 0))
+    assert pool.prefetch(("o", 2), mk, 32) is True       # evicts ("o", 0)
+    pool.acquire(("o", 2), mk, 32)                       # waits for worker
+    assert pool.stats()["prefetch_hits"] == 1
+    assert ("o", 0) not in pool.resident_keys()
+    assert pool.peak_resident_bytes <= pool.budget_bytes
+    pool.release(("o", 1)), pool.release(("o", 2))
+    pool.drop_owner("o")
+    assert pool.resident_keys() == [] and pool.resident_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# serving defaults + observability
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_is_the_default_serving_path(world, resident):
+    """Tier-1 guard: `search_sharded(prefetch=True)` is the default, and
+    `SearchServer --out-of-core` actually drives the prefetch pipeline
+    (issued > 0 after a stream) with resident-identical results."""
+    from repro.launch.serve_search import SearchServer, synthetic_stream
+    assert (inspect.signature(search.search_sharded)
+            .parameters["prefetch"].default is True)
+    _, cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    srv = SearchServer(view, micro_batch=8, topk=3, n_probe=4,
+                       n_short_aq=16, n_short_pw=8)
+    ids, dists = srv.search_batch(np.asarray(q)[:5])
+    ref_q = jnp.concatenate([q[:5], jnp.zeros((3, q.shape[1]))])
+    ref_ids, ref_d = search.search(resident, ref_q, cfg=cfg, **SEARCH_KW)
+    np.testing.assert_array_equal(ids, np.asarray(ref_ids)[:5])
+    np.testing.assert_array_equal(dists, np.asarray(ref_d)[:5])
+    stats = srv.serve_stream(*synthetic_stream(view, 24, 2000.0))
+    assert view.pool.stats()["prefetch_issued"] > 0
+    assert stats.stall_ms >= 0.0 and stats.compute_ms > 0.0
+    assert f"stall={stats.stall_ms:.1f}ms" in stats.row()
+
+
+def test_serve_stats_stall_zero_for_resident(world, resident):
+    from repro.launch.serve_search import SearchServer, synthetic_stream
+    srv = SearchServer(resident, micro_batch=8, topk=3, n_probe=4,
+                       n_short_aq=16, n_short_pw=8)
+    stats = srv.serve_stream(*synthetic_stream(resident, 16, 2000.0))
+    assert stats.stall_ms == 0.0 and stats.compute_ms > 0.0

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_data
+from repro import obs
 from repro.configs.qinco2 import tiny
 from repro.core import search, training
 from repro.index import IndexStore, ShardedIndexView
@@ -44,29 +45,43 @@ from repro.index import IndexStore, ShardedIndexView
 SHARD_COUNTS = (1, 4, 8)
 SEARCH_KW = dict(n_probe=8, n_short_aq=64, n_short_pw=16, topk=10)
 
+# registry series attached per row (delta over the timed reps) — the
+# stall-vs-compute evidence for the prefetch-pipeline rows, read from
+# the public telemetry instead of pool internals. Informational only:
+# scripts/check_bench.py gates qps and ignores unknown row fields.
+_ROW_SERIES = ("staging_stall_seconds_total", "staging_staged_total",
+               "staging_prefetch_hits_total", "staging_device_hits_total",
+               "staging_host_hits_total", "search_shards_folded_total")
+
 
 def _time_batches(fn, q, *, reps, warmup=2):
-    """Per-batch wall-clock latencies (ms) after warmup."""
+    """Per-batch wall-clock latencies (ms) after warmup, plus the
+    metrics-registry delta over the timed reps."""
     for _ in range(warmup):
         jax.block_until_ready(fn(q))
+    before = obs.snapshot()
     lat = []
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(q))
         lat.append((time.perf_counter() - t0) * 1e3)
-    return np.asarray(lat)
+    delta = obs.snapshot_delta(before, obs.snapshot())
+    return np.asarray(lat), delta
 
 
-def _row(mode, n_shards, lat_ms, batch):
+def _row(mode, n_shards, timed, batch):
     # qps from the BEST batch (additive-noise-robust, like
     # `common.timeit_us`): it is the gated metric in check_bench, so a
     # single scheduler stall must not read as a regression. The latency
     # percentiles keep the full distribution for the record.
+    lat_ms, delta = timed
     return {
         "mode": mode, "n_shards": n_shards,
         "qps": float(batch / (lat_ms.min() / 1e3)),
         "p50_ms": float(np.percentile(lat_ms, 50)),
         "p99_ms": float(np.percentile(lat_ms, 99)),
+        "metrics": {name: obs.series_value(delta, name)
+                    for name in _ROW_SERIES},
     }
 
 
@@ -95,12 +110,14 @@ def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
                 q, reps=reps), batch))
             if n_shards == max(shard_counts) and n_shards > 1:
                 # cold-scan rows: budget holds half the shards, so every
-                # scan re-stages — with vs without the prefetch pipeline
+                # scan re-stages — with vs without the prefetch pipeline.
+                # The hidden-vs-paid stall lands in each row's
+                # `metrics["staging_stall_seconds_total"]` delta.
                 for mode, pf in (("out_of_core_cold", True),
                                  ("out_of_core_cold_nopf", False)):
                     cold = ShardedIndexView(
-                        d, max_resident_shards=max(1, n_shards // 2))
-                    cold.pool.prefetch_enabled = pf
+                        d, max_resident_shards=max(1, n_shards // 2),
+                        prefetch=pf)
                     rows.append(_row(mode, n_shards, _time_batches(
                         lambda qq: search.search_sharded(
                             cold, qq, cfg=cfg, prefetch=pf, **SEARCH_KW),

@@ -81,6 +81,55 @@ finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
 
+# serve + telemetry smoke: drive the out-of-core server end to end with a
+# live metrics endpoint, scrape it over real HTTP, and assert the core
+# series exist and are self-consistent (docs/OBSERVABILITY.md)
+python - <<'PY'
+import json, tempfile, shutil, urllib.request
+import numpy as np, jax, jax.numpy as jnp
+from repro import obs
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import IndexStore
+import repro.launch.serve_search as serve_search
+
+rng = np.random.default_rng(0)
+xb = rng.normal(size=(600, 16)).astype(np.float32)
+cfg = tiny(epochs=1)
+params = training.init_qinco2(jax.random.key(0), xb[:256], cfg)
+idx = search.build_index(jax.random.key(1), jnp.asarray(xb), params, cfg,
+                         k_ivf=8, m_tilde=2, n_pair_books=4)
+d = tempfile.mkdtemp(prefix="ci_serve_smoke_")
+try:
+    IndexStore.save(d, idx, shard_size=128)
+    sj = d + "/stats.jsonl"
+    stats = serve_search.main([
+        "--store", d, "--queries", "64", "--micro-batch", "8",
+        "--out-of-core", "--max-resident-shards", "2",
+        "--metrics-port", "0", "--stats-json", sj])
+    assert stats.p99_ms >= stats.p50_ms > 0, (stats.p50_ms, stats.p99_ms)
+    rec = json.loads(open(sj).read().strip())
+    assert rec["n_queries"] == 64 and "staging" in rec, sorted(rec)
+    url = serve_search.last_metrics_server.url
+    text = urllib.request.urlopen(url + "/metrics").read().decode()
+    for series in ("serve_latency_seconds_count", "serve_queries_total",
+                   "serve_batches_total", "staging_staged_total",
+                   "staging_stall_seconds_total",
+                   "search_sharded_calls_total"):
+        assert series in text, f"missing series {series} in /metrics"
+    snap = json.loads(
+        urllib.request.urlopen(url + "/metrics.json").read())
+    staged = obs.series_value(snap, "staging_staged_total")
+    pf_hits = obs.series_value(snap, "staging_prefetch_hits_total")
+    assert staged > 0 and pf_hits <= staged, (pf_hits, staged)
+    assert obs.series_value(snap, "serve_queries_total") >= 64
+    print("[ci] serve telemetry smoke OK (endpoint scraped; core series "
+          "present; prefetch_hits <= staged; stats-json line written)")
+finally:
+    serve_search.last_metrics_server.close()
+    shutil.rmtree(d, ignore_errors=True)
+PY
+
 # kernel-backend smoke: xla vs pallas per-op timings for every dispatch op
 # (incl. the fused f_theta / adc_topk paths) -> BENCH_kernels.json, so each
 # CI run leaves a machine-readable perf data point

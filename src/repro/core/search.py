@@ -24,12 +24,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.qinco2 import QincoConfig
 from repro.core import aq as aq_mod
 from repro.core import ivf as ivf_mod
 from repro.core import pairwise as pw_mod
 from repro.core import qinco
 from repro.kernels import ops
+
+# Out-of-core search telemetry (docs/OBSERVABILITY.md). The fully-jitted
+# resident `search()` is one opaque executable — its stage split lives in
+# the compiled computation and is profiled via `obs.tracing.enable(
+# profile_dir=...)`; the host-driven `search_sharded` loop is where
+# per-stage spans (probe/schedule/acquire/fold/rerank) attach.
+_C_SEARCH_CALLS = obs.counter(
+    "search_sharded_calls_total", "search_sharded invocations")
+_C_SEARCH_QUERIES = obs.counter(
+    "search_queries_total", "queries answered by search_sharded")
+_C_SHARDS_FOLDED = obs.counter(
+    "search_shards_folded_total", "per-shard shortlist+merge folds run")
 
 
 @dataclasses.dataclass
@@ -358,6 +371,16 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
     Not jitted end-to-end by design (the shard loop is a host loop over
     mmap'd staging); every numerical stage dispatches through jitted
     facades, so one warmed call serves any store with the same shapes.
+
+    Telemetry: each call is one `obs.query_trace` whose
+    probe/schedule/acquire/fold/gather/rerank spans land in
+    `search_stage_seconds{stage=...}`. With tracing OFF (the default)
+    the spans are single-flag-check no-ops and nothing is fenced; with
+    tracing ON, span boundaries `block_until_ready` the stage's output
+    so stage times are device-honest — at the documented cost of
+    serializing the prefetch overlap (docs/KERNELS.md). Results are
+    bitwise identical either way (tested): fences synchronize, they
+    never change values.
     """
     cfg = cfg or view.cfg
     q = jnp.asarray(q, jnp.float32)
@@ -365,33 +388,48 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
     n_short_aq = min(n_short_aq, n_probe * cap)           # resident clamps
     n_short_pw = min(n_short_pw, n_short_aq)
     topk = min(topk, n_short_pw)
-
-    top_b, lut_m = _probe_and_masked_lut(view.centroids, view.aq_books, q,
-                                         n_probe)
-    sched = view.schedule_shards(np.asarray(top_b))
     Q = q.shape[0]
-    state = (jnp.full((Q, n_short_aq), -jnp.inf, jnp.float32),
-             jnp.full((Q, n_short_aq), _POS_SENTINEL, jnp.int32),
-             jnp.zeros((Q, n_short_aq), jnp.int32))
-    for i, sid in enumerate(sched):
-        st = view.acquire(sid)
-        if prefetch and i + 1 < len(sched):
-            view.prefetch(sched[i + 1])   # stages while sid is scanned
-        state = _fold_shard(
-            *state, st["ext"], st["wbr"], st["aq_norms"], lut_m, top_b,
-            np.int32(sid * view.shard_size), k=n_short_aq, cap=cap,
-            backend=backend)
-        view.release(sid)
-    pad = _padding_entries(top_b, view.bucket_fill, cap=cap,
-                           p_pad=min(n_short_aq, cap))
-    s1, _, ids1 = _merge_state(state, pad, n_short_aq)
+    _C_SEARCH_CALLS.inc()
+    _C_SEARCH_QUERIES.inc(Q)
 
-    codes1, assign1, pw_norms1 = view.gather_rows(np.asarray(ids1))
-    return _rerank_shortlist(
-        q, s1, ids1, jnp.asarray(codes1), jnp.asarray(assign1),
-        jnp.asarray(pw_norms1), view.pw.codebooks, view.centroid_codes,
-        view.centroids, view.qinco_params, n_short_pw=n_short_pw,
-        topk=topk, cfg=cfg, backend=backend, pairs=view.pw.pairs, K=view.K)
+    with obs.query_trace("search_sharded", queries=Q):
+        with obs.span("search/probe") as sp:
+            top_b, lut_m = _probe_and_masked_lut(
+                view.centroids, view.aq_books, q, n_probe)
+            sp.fence(top_b, lut_m)
+        with obs.span("search/schedule"):
+            sched = view.schedule_shards(np.asarray(top_b))
+        state = (jnp.full((Q, n_short_aq), -jnp.inf, jnp.float32),
+                 jnp.full((Q, n_short_aq), _POS_SENTINEL, jnp.int32),
+                 jnp.zeros((Q, n_short_aq), jnp.int32))
+        for i, sid in enumerate(sched):
+            with obs.span("search/acquire"):
+                st = view.acquire(sid)
+            if prefetch and i + 1 < len(sched):
+                view.prefetch(sched[i + 1])  # stages while sid is scanned
+            with obs.span("search/fold") as sp:
+                state = _fold_shard(
+                    *state, st["ext"], st["wbr"], st["aq_norms"], lut_m,
+                    top_b, np.int32(sid * view.shard_size), k=n_short_aq,
+                    cap=cap, backend=backend)
+                sp.fence(state)
+            view.release(sid)
+        _C_SHARDS_FOLDED.inc(len(sched))
+        pad = _padding_entries(top_b, view.bucket_fill, cap=cap,
+                               p_pad=min(n_short_aq, cap))
+        s1, _, ids1 = _merge_state(state, pad, n_short_aq)
+
+        with obs.span("search/gather"):
+            codes1, assign1, pw_norms1 = view.gather_rows(np.asarray(ids1))
+        with obs.span("search/rerank") as sp:
+            out = _rerank_shortlist(
+                q, s1, ids1, jnp.asarray(codes1), jnp.asarray(assign1),
+                jnp.asarray(pw_norms1), view.pw.codebooks,
+                view.centroid_codes, view.centroids, view.qinco_params,
+                n_short_pw=n_short_pw, topk=topk, cfg=cfg, backend=backend,
+                pairs=view.pw.pairs, K=view.K)
+            sp.fence(out)
+    return out
 
 
 def _merge_state(state, new, k: int):

@@ -98,7 +98,7 @@ def train(key, x_train, cfg: QincoConfig, *, steps_per_epoch=None,
     step_fn = make_train_step(cfg, opt_cfg)
 
     history = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for ep in range(epochs):
         key, kperm, kreset = jax.random.split(key, 3)
         order = jax.random.permutation(kperm, n)
@@ -120,7 +120,7 @@ def train(key, x_train, cfg: QincoConfig, *, steps_per_epoch=None,
                                           mu, sd)
         rec = {"epoch": ep, "loss": float(metrics["loss"]),
                "mse": float(metrics["mse"]), "dead": n_dead,
-               "time": time.time() - t0}
+               "time": time.perf_counter() - t0}
         if x_val is not None:
             rec["val_mse"] = float(enc.reconstruction_mse(
                 params, jnp.asarray(x_val), cfg, cfg.A_eval, cfg.B_eval))

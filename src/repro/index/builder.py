@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.qinco2 import QincoConfig
 from repro.core import aq as aq_mod
 from repro.core import encode as enc
@@ -54,6 +55,16 @@ from repro.core.kmeans import kmeans
 from repro.core import rq as rq_mod
 from repro.index.codes import PackedCodes, pack_codes
 from repro.index.store import IndexStore
+
+# build-progress telemetry: long encode jobs expose how far along they
+# are (and whether a restart resumed mid-build) without log scraping
+_C_SHARDS_SEALED = obs.counter(
+    "build_shards_sealed_total", "shards encoded + written to the store")
+_C_ROWS = obs.counter("build_rows_total", "database rows encoded")
+_C_RESUMES = obs.counter(
+    "build_resume_events_total", "builds resumed from a mid-build cursor")
+_G_ROWS_PER_S = obs.gauge(
+    "build_rows_per_s", "encode throughput over the last sealed shard")
 
 
 def owner_range(n_shards: int, host_id: int, n_hosts: int):
@@ -265,13 +276,14 @@ class StreamingIndexBuilder:
 
         start, fill = self._resume_state(xb, cent, lo, hi, host_id)
         if start > lo:
+            _C_RESUMES.inc()
             self._log(f"owner {host_id}: resuming at shard {start} "
                       f"(range [{lo}, {hi}))")
         elif n_hosts > 1:
             self._log(f"owner {host_id}/{n_hosts}: shards [{lo}, {hi})")
         built = 0
         for sid in range(start, hi):
-            t0 = time.time()
+            t0 = time.perf_counter()
             assign, x_s, fill = self._shard_assign(xb, cent, sid, fill)
             resid = x_s - cent[assign]
             codes, _, _ = enc.encode_dataset(
@@ -297,7 +309,10 @@ class StreamingIndexBuilder:
                 pw_norms=np.asarray(pw_norms))
             store.write_cursor(sid + 1, fill, owner=host_id)
             built += 1
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
+            _C_SHARDS_SEALED.inc()
+            _C_ROWS.inc(len(x_s))
+            _G_ROWS_PER_S.set(len(x_s) / max(dt, 1e-9))
             self._log(f"shard {sid + 1}/{m['n_shards']}: {len(x_s)} vectors "
                       f"in {dt:.2f}s ({len(x_s) / dt:.0f} vec/s)")
             if progress is not None:

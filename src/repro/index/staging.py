@@ -41,6 +41,7 @@ Thread safety: all pool state is guarded by one condition variable;
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -49,6 +50,42 @@ from typing import Callable, Dict, Optional
 
 import jax
 import numpy as np
+
+from repro import obs
+
+# Registry metrics, one labeled child per pool (`pool=<seq>`), declared
+# once at import (docs/OBSERVABILITY.md naming scheme). `stats()` is the
+# compatibility view over these — the pre-telemetry `_stats` dict keys —
+# so `staging_staged_total{pool="2"}` on the scrape endpoint and
+# `pool.stats()["staged"]` are the same number by construction.
+_COUNTERS = {
+    "staged": obs.counter(
+        "staging_staged_total", "shards staged to device (sync or worker)"),
+    "device_hits": obs.counter(
+        "staging_device_hits_total", "acquires served from the device LRU"),
+    "host_hits": obs.counter(
+        "staging_host_hits_total",
+        "stagings that replayed the host cache instead of reassembling"),
+    "prefetch_issued": obs.counter(
+        "staging_prefetch_issued_total", "background prefetches issued"),
+    "prefetch_hits": obs.counter(
+        "staging_prefetch_hits_total",
+        "acquires that waited on an in-flight prefetch"),
+    "prefetch_skipped": obs.counter(
+        "staging_prefetch_skipped_total",
+        "prefetches skipped (no room without evicting a pinned entry)"),
+    "evictions": obs.counter(
+        "staging_evictions_total", "LRU evictions of staged shards"),
+    "stall_s": obs.counter(
+        "staging_stall_seconds_total",
+        "time acquire() spent blocked waiting for staging"),
+}
+_G_RESIDENT_BYTES = obs.gauge(
+    "staging_resident_bytes", "device bytes currently staged (incl. "
+    "in-flight reservations)")
+_G_RESIDENT_ENTRIES = obs.gauge(
+    "staging_resident_entries", "staged + in-flight shard entries")
+_POOL_SEQ = itertools.count(1)
 
 
 class _Entry:
@@ -107,11 +144,11 @@ class StagingPool:
         self.peak_resident_bytes = 0
         self.peak_resident_entries = 0
         self._owner_seq = 0
-        self._stats = {
-            "staged": 0, "device_hits": 0, "host_hits": 0,
-            "prefetch_issued": 0, "prefetch_hits": 0, "prefetch_skipped": 0,
-            "evictions": 0, "stall_s": 0.0,
-        }
+        self.pool_id = next(_POOL_SEQ)
+        lbl = {"pool": str(self.pool_id)}
+        self._m = {k: c.labels(**lbl) for k, c in _COUNTERS.items()}
+        self._g_bytes = _G_RESIDENT_BYTES.labels(**lbl)
+        self._g_entries = _G_RESIDENT_ENTRIES.labels(**lbl)
         self._q: Optional[queue.Queue] = None
         self._worker: Optional[threading.Thread] = None
 
@@ -137,13 +174,22 @@ class StagingPool:
             return [sid for (o, sid) in self._lru if o == owner]
 
     def stats(self) -> dict:
-        with self._cond:
-            return dict(self._stats)
+        """The legacy per-pool stats dict, now a compatibility view over
+        this pool's registry series (`staging_*_total{pool=<id>}` on the
+        scrape endpoint — same numbers by construction, tested). Counts
+        freeze while the global registry is disabled (`obs.disable()`,
+        the zero-overhead mode)."""
+        return {k: (s.value if k == "stall_s" else int(s.value))
+                for k, s in self._m.items()}
 
     # -- budget accounting (cond held) ---------------------------------------
 
     def _entries(self) -> int:
         return len(self._lru) + len(self._inflight)
+
+    def _sync_gauges(self) -> None:
+        self._g_bytes.set(self._resident_bytes)
+        self._g_entries.set(self._entries())
 
     def _make_room(self, nbytes: int) -> bool:
         """Evict unpinned LRU entries until ``nbytes`` more fit the budget
@@ -159,7 +205,8 @@ class StagingPool:
             if victim is None:
                 return False
             self._resident_bytes -= self._lru.pop(victim).nbytes
-            self._stats["evictions"] += 1
+            self._m["evictions"].inc()
+            self._sync_gauges()
         return True
 
     def _begin(self, key, nbytes: int) -> _Inflight:
@@ -171,6 +218,7 @@ class StagingPool:
                                        self._resident_bytes)
         self.peak_resident_entries = max(self.peak_resident_entries,
                                          self._entries())
+        self._sync_gauges()
         return inf
 
     def _install(self, key, device, inf: _Inflight) -> _Entry:
@@ -183,6 +231,7 @@ class StagingPool:
     def _abort(self, key, inf: _Inflight) -> None:
         self._resident_bytes -= inf.nbytes
         self._inflight.pop(key, None)
+        self._sync_gauges()
         self._cond.notify_all()
 
     # -- host assembly + device transfer (cond NOT held) ---------------------
@@ -193,7 +242,7 @@ class StagingPool:
             cached = self._host.get(key)
             if cached is not None:
                 self._host.move_to_end(key)
-                self._stats["host_hits"] += 1
+                self._m["host_hits"].inc()
                 host = cached[0]
         if host is None:
             host = host_fn()
@@ -231,7 +280,7 @@ class StagingPool:
                     self._abort(key, inf)
                 continue                    # acquire() will re-stage sync
             with self._cond:
-                self._stats["staged"] += 1
+                self._m["staged"].inc()
                 self._install(key, device, inf)
 
     # -- public staging API --------------------------------------------------
@@ -250,10 +299,10 @@ class StagingPool:
             if key in self._lru or key in self._inflight:
                 return False
             if not self._make_room(nbytes):
-                self._stats["prefetch_skipped"] += 1
+                self._m["prefetch_skipped"].inc()
                 return False
             inf = self._begin(key, nbytes)
-            self._stats["prefetch_issued"] += 1
+            self._m["prefetch_issued"].inc()
             self._ensure_worker()
         self._q.put((key, host_fn, inf))
         return True
@@ -276,10 +325,10 @@ class StagingPool:
                 if entry is not None:
                     self._lru.move_to_end(key)
                     entry.pins += 1
-                    self._stats["device_hits"] += 1
+                    self._m["device_hits"].inc()
                     if waited_inflight:
-                        self._stats["prefetch_hits"] += 1
-                        self._stats["stall_s"] += time.perf_counter() - t0
+                        self._m["prefetch_hits"].inc()
+                        self._m["stall_s"].inc(time.perf_counter() - t0)
                     return entry.device
                 if key in self._inflight:
                     waited_inflight = True
@@ -303,10 +352,10 @@ class StagingPool:
                 self._abort(key, inf)
             raise
         with self._cond:
-            self._stats["staged"] += 1
+            self._m["staged"].inc()
             entry = self._install(key, device, inf)
             entry.pins += 1
-            self._stats["stall_s"] += time.perf_counter() - t0
+            self._m["stall_s"].inc(time.perf_counter() - t0)
             return entry.device
 
     def release(self, key) -> None:
@@ -324,7 +373,8 @@ class StagingPool:
             for k in [k for k, e in self._lru.items()
                       if k[0] == owner and e.pins == 0]:
                 self._resident_bytes -= self._lru.pop(k).nbytes
-                self._stats["evictions"] += 1
+                self._m["evictions"].inc()
+            self._sync_gauges()
             for k in [k for k in self._host if k[0] == owner]:
                 _, nb = self._host.pop(k)
                 self._host_bytes -= nb

@@ -38,11 +38,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.qinco2 import QincoConfig
 from repro.index.codes import CODE_DTYPE, PackedCodes, pack_codes
 
 FORMAT_VERSION = 1
+
+# shards dropped by probe-aware scheduling, process-wide (each view also
+# keeps its historical per-view `skipped_shards_total` attribute)
+_C_SKIPPED = obs.counter(
+    "search_skipped_shards_total",
+    "shards skipped by probe-aware scheduling (zero probed buckets)")
 
 # sharded per-vector fields: name -> (file, dtype, trailing shape lambda)
 _SHARD_FIELDS = {
@@ -466,7 +473,8 @@ class ShardedIndexView:
 
     def __init__(self, store, *, max_resident_shards: int = 2,
                  allow_partial: bool = False, pool=None,
-                 host_cache_bytes: Optional[int] = None):
+                 host_cache_bytes: Optional[int] = None,
+                 prefetch: bool = True):
         from repro.core import ivf as ivf_mod
         from repro.core import pairwise as pw_mod
         from repro.index.staging import StagingPool
@@ -527,10 +535,12 @@ class ShardedIndexView:
         self._ext_dtype = (np.uint8 if self.K <= 256 and self.k_ivf <= 256
                            else np.int32)
         worst = max(self.shard_staged_bytes(s) for s in self.shard_ids)
+        # ``prefetch`` configures the PRIVATE pool only (a shared pool's
+        # policy belongs to whoever constructed it)
         self.pool = pool if pool is not None else StagingPool(
             self.max_resident_shards * worst,
             max_entries=self.max_resident_shards,
-            host_cache_bytes=host_cache_bytes)
+            host_cache_bytes=host_cache_bytes, prefetch=prefetch)
         self._owner = self.pool.register()
         self.skipped_shards_total = 0
 
@@ -615,7 +625,10 @@ class ShardedIndexView:
         probed = np.unique(np.asarray(probed_buckets).reshape(-1))
         hit = [s for s in self.shard_ids
                if bool(self._bucket_hit[s][probed].any())]
-        self.skipped_shards_total += len(self.shard_ids) - len(hit)
+        skipped = len(self.shard_ids) - len(hit)
+        self.skipped_shards_total += skipped      # legacy per-view attr
+        if skipped:
+            _C_SKIPPED.inc(skipped)
         resident = set(self.resident_shards)
         return ([s for s in hit if s in resident]
                 + [s for s in hit if s not in resident])

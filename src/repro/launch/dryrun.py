@@ -188,15 +188,15 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     mesh = (make_test_mesh(multi_pod=multi_pod) if mesh_kind == "test"
             else make_production_mesh(multi_pod=multi_pod))
     ndev = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         with compat.use_mesh(mesh):
             jitted, args, info = build_cell(arch, shape, mesh,
                                             kv_quant=kv_quant)
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
     except Exception as e:
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
@@ -259,14 +259,14 @@ def main():
             for mp in pods_l:
                 mesh = (make_test_mesh(multi_pod=mp) if args.mesh == "test"
                         else make_production_mesh(multi_pod=mp))
-                t0 = time.time()
+                t0 = time.perf_counter()
                 rec = run_qinco_cell(preset, kind, multi_pod=mp, mesh=mesh,
                                      out_dir=Path(args.out),
                                      force=args.force)
                 status = (f"ok dom={rec.get('bottleneck')}"
                           if not rec.get("error")
                           else "ERROR " + rec["error"][:100])
-                print(f"[{time.time()-t0:7.1f}s] {preset:22s} {kind:12s} "
+                print(f"[{time.perf_counter()-t0:7.1f}s] {preset:22s} {kind:12s} "
                       f"pods={2 if mp else 1} {status}", flush=True)
         return
 
@@ -279,7 +279,7 @@ def main():
     for arch_name in archs:
         for shape_name in shapes:
             for multi_pod in pods:
-                t0 = time.time()
+                t0 = time.perf_counter()
                 rec = run_cell(arch_name, shape_name, multi_pod=multi_pod,
                                mesh_kind=args.mesh, kv_quant=args.kv_quant,
                                out_dir=out_dir, force=args.force)
@@ -295,7 +295,7 @@ def main():
                               f"t_mem={rec['t_memory_s']:.4f}s "
                               f"t_coll={rec['t_collective_s']:.4f}s "
                               f"dom={rec['bottleneck']}")
-                print(f"[{time.time()-t0:7.1f}s] {arch_name:22s} "
+                print(f"[{time.perf_counter()-t0:7.1f}s] {arch_name:22s} "
                       f"{shape_name:12s} pods={2 if multi_pod else 1} "
                       f"{status}", flush=True)
     print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")

@@ -58,7 +58,7 @@ def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
     rec = {"arch": preset, "shape": kind,
            "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
            "runnable": True}
-    t0 = time.time()
+    t0 = time.perf_counter()
     # Everything below is FULL-MANUAL shard_map: beam-search encoding is
     # per-vector (embarrassingly parallel over the batch), so GSPMD's
     # propagation through the beam-reindex gathers would otherwise insert
@@ -185,7 +185,7 @@ def run_qinco_cell(preset: str, kind: str, *, multi_pod: bool, mesh,
 
     hlo = compiled.as_text()
     coll = ha.collective_stats(hlo)
-    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
     rec["cost"] = ha.cost_analysis_dict(compiled)
     rec["memory"] = ha.memory_analysis_dict(compiled)
     rec["collectives"] = {kk: dict(v) for kk, v in coll.items()}

@@ -138,10 +138,10 @@ def main():
     if arch.family == "encdec":
         frames = jnp.zeros((args.batch, arch.encoder_context, arch.d_model),
                            jnp.float32)
-    t0 = time.time()
+    t0 = time.perf_counter()
     toks = generate(arch, params, prompts, gen_len=args.gen,
                     kv_quant_on=args.kv_quant, frames=frames)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s) kv_quant={args.kv_quant}")
     print(np.asarray(toks[:2, args.prompt_len - 4:args.prompt_len + 8]))

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 from functools import partial
 from typing import Optional
@@ -32,7 +33,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import search as search_mod
+
+# Serving telemetry (docs/OBSERVABILITY.md): per-query latency/queueing
+# histograms plus the per-batch stall-vs-compute split. `ServeStats`
+# p50/p99 are derived from a windowed quantile over
+# `serve_latency_seconds` (collect-before / quantile-since-after), so
+# the server keeps NO per-query latency array — the stats cost is
+# O(buckets) however long the stream runs.
+_H_LATENCY = obs.histogram(
+    "serve_latency_seconds", "end-to-end per-query latency incl. queueing")
+_H_QUEUE = obs.histogram(
+    "serve_queue_seconds", "arrival -> batch-dispatch queueing delay")
+_C_QUERIES = obs.counter("serve_queries_total", "queries served")
+_C_BATCHES = obs.counter("serve_batches_total", "micro-batches dispatched")
+_C_STALL = obs.counter(
+    "serve_stall_seconds_total",
+    "service time spent blocked on shard staging (pool stall delta)")
+_C_COMPUTE = obs.counter(
+    "serve_compute_seconds_total",
+    "service time spent computing (scan + merge + re-rank)")
+_G_OCCUPANCY = obs.gauge(
+    "serve_batch_occupancy", "fraction of micro-batch slots used (last)")
 
 
 @dataclasses.dataclass
@@ -59,6 +82,16 @@ class ServeStats:
                 f"qps={self.qps:.0f} "
                 f"stall={self.stall_ms:.1f}ms compute={self.compute_ms:.1f}ms "
                 f"(warmup {self.warmup_s:.2f}s)")
+
+    def to_json(self, *, staging: Optional[dict] = None) -> str:
+        """One machine-readable JSON line (the ``--stats-json`` record):
+        the stats fields plus, when serving out-of-core, the staging
+        metrics snapshot — so bench tooling consumes a line instead of
+        scraping the `row()` print."""
+        rec = dataclasses.asdict(self)
+        if staging is not None:
+            rec["staging"] = staging
+        return json.dumps(rec, sort_keys=True)
 
 
 class SearchServer:
@@ -110,16 +143,22 @@ class SearchServer:
 
         Pads to the fixed micro-batch shape so every call hits the one
         warmed executable (no stray recompiles at serve time)."""
-        q = np.asarray(q, np.float32)
-        n = q.shape[0]
-        if n > self.micro_batch:
-            raise ValueError(f"batch of {n} exceeds micro_batch="
-                             f"{self.micro_batch}")
-        if n < self.micro_batch:
-            q = np.concatenate(
-                [q, np.zeros((self.micro_batch - n, self.d), np.float32)])
-        ids, dists = self._search(self.index, jnp.asarray(q))
-        jax.block_until_ready((ids, dists))
+        with obs.span("serve/batch"):
+            q = np.asarray(q, np.float32)
+            n = q.shape[0]
+            if n > self.micro_batch:
+                raise ValueError(f"batch of {n} exceeds micro_batch="
+                                 f"{self.micro_batch}")
+            if n < self.micro_batch:
+                q = np.concatenate(
+                    [q, np.zeros((self.micro_batch - n, self.d),
+                                 np.float32)])
+        with obs.span("serve/dispatch"):
+            # span already fences at exit when tracing; the explicit
+            # block stays because serve-time latency accounting needs
+            # device-complete timing even with tracing off
+            ids, dists = self._search(self.index, jnp.asarray(q))
+            jax.block_until_ready((ids, dists))
         return np.asarray(ids)[:n], np.asarray(dists)[:n]
 
     def serve_stream(self, queries, arrival_s, *,
@@ -137,36 +176,58 @@ class SearchServer:
         queries = np.asarray(queries, np.float32)
         arrival_s = np.asarray(arrival_s, np.float64)
         n = len(queries)
-        lat, occ, batches = [], [], 0
+        occ, batches = [], 0
         clock = 0.0
         service_total = 0.0
         stall0 = self._staging_stall_s()
+        # p50/p99 come from a *windowed* quantile over the process-wide
+        # latency histogram: snapshot before, interpolate over the delta
+        # after — per-run percentiles with no stored latency array. The
+        # fallback list only exists for the metrics-disabled registry.
+        lat_win = _H_LATENCY.collect()
+        lat_fallback = [] if not obs.enabled() else None
         i = 0
         while i < n:
-            t_open = max(clock, arrival_s[i])      # first query in batch
-            deadline = t_open + max_wait_s
-            j = i + 1
-            while (j < n and j - i < self.micro_batch
-                   and arrival_s[j] <= deadline):
-                j += 1
-            full = j - i == self.micro_batch
-            start = max(t_open, arrival_s[j - 1]) if full else deadline
+            with obs.span("serve/admission"):
+                t_open = max(clock, arrival_s[i])  # first query in batch
+                deadline = t_open + max_wait_s
+                j = i + 1
+                while (j < n and j - i < self.micro_batch
+                       and arrival_s[j] <= deadline):
+                    j += 1
+                full = j - i == self.micro_batch
+                start = max(t_open, arrival_s[j - 1]) if full else deadline
             t0 = time.perf_counter()
-            self.search_batch(queries[i:j])
+            with obs.query_trace("serve_batch", size=j - i):
+                self.search_batch(queries[i:j])
             service = time.perf_counter() - t0
             service_total += service
             clock = start + service
-            lat.extend(clock - arrival_s[k] for k in range(i, j))
+            for k in range(i, j):
+                _H_QUEUE.observe(max(0.0, start - arrival_s[k]))
+                lat_k = clock - arrival_s[k]
+                _H_LATENCY.observe(lat_k)
+                if lat_fallback is not None:
+                    lat_fallback.append(lat_k)
             occ.append((j - i) / self.micro_batch)
+            _G_OCCUPANCY.set((j - i) / self.micro_batch)
+            _C_QUERIES.inc(j - i)
+            _C_BATCHES.inc()
             batches += 1
             i = j
-        lat_ms = np.asarray(lat) * 1e3
         span = max(clock - arrival_s[0], 1e-9)
         stall_s = max(0.0, self._staging_stall_s() - stall0)
+        _C_STALL.inc(stall_s)
+        _C_COMPUTE.inc(max(0.0, service_total - stall_s))
+        if lat_fallback is not None:
+            p50 = float(np.percentile(np.asarray(lat_fallback), 50))
+            p99 = float(np.percentile(np.asarray(lat_fallback), 99))
+        else:
+            p50 = _H_LATENCY.quantile(0.5, since=lat_win)
+            p99 = _H_LATENCY.quantile(0.99, since=lat_win)
         return ServeStats(
             n_queries=n, n_batches=batches, warmup_s=self.warmup_s,
-            p50_ms=float(np.percentile(lat_ms, 50)),
-            p99_ms=float(np.percentile(lat_ms, 99)),
+            p50_ms=p50 * 1e3, p99_ms=p99 * 1e3,
             mean_batch_occupancy=float(np.mean(occ)),
             qps=float(n / span),
             stall_ms=stall_s * 1e3,
@@ -233,7 +294,26 @@ def main(argv: Optional[list] = None) -> ServeStats:
     ap.add_argument("--allow-partial", action="store_true",
                     help="serve an incomplete store (completed shards "
                          "only; requires --out-of-core or loads a prefix)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose a Prometheus /metrics + /metrics.json "
+                         "scrape endpoint on this port (0 = ephemeral; "
+                         "stays up until process exit)")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="append one machine-readable JSON line (stats "
+                         "+ staging snapshot) to PATH")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable per-query stage tracing for the run "
+                         "(jit-aware fenced spans; see "
+                         "docs/OBSERVABILITY.md for the perturbation "
+                         "caveat)")
     args = ap.parse_args(argv)
+
+    global last_metrics_server
+    if args.metrics_port is not None:
+        last_metrics_server = obs.start_metrics_server(args.metrics_port)
+        print(f"[serve_search] metrics at {last_metrics_server.url}/metrics")
+    if args.trace:
+        obs.enable_tracing()
 
     from repro.index import IndexStore, ShardedIndexView
     if args.out_of_core:
@@ -253,16 +333,29 @@ def main(argv: Optional[list] = None) -> ServeStats:
     q, arrivals = synthetic_stream(index, args.queries, args.rate)
     stats = server.serve_stream(q, arrivals,
                                 max_wait_s=args.max_wait_ms / 1e3)
+    if args.trace:
+        obs.disable_tracing()
     print(f"[serve_search] {stats.row()}")
+    staging = None
     if args.out_of_core:
         ps = index.pool.stats()
+        staging = dict(ps, skipped_shards=index.skipped_shards_total)
         print(f"[serve_search] staging: staged={ps['staged']} "
               f"device_hits={ps['device_hits']} host_hits={ps['host_hits']} "
               f"prefetch_issued={ps['prefetch_issued']} "
               f"prefetch_hits={ps['prefetch_hits']} "
               f"evictions={ps['evictions']} "
               f"skipped_shards={index.skipped_shards_total}")
+    if args.stats_json:
+        with open(args.stats_json, "a") as f:
+            f.write(stats.to_json(staging=staging) + "\n")
     return stats
+
+
+# the scrape endpoint from the last `main(--metrics-port ...)` call, so
+# in-process harnesses (ci.sh serve smoke, tests) can find its bound
+# ephemeral port; the server lives until process exit or `.close()`
+last_metrics_server: Optional[obs.MetricsServer] = None
 
 
 if __name__ == "__main__":

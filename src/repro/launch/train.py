@@ -75,18 +75,18 @@ def train_loop(arch, *, steps: int, batch: int, seq: int, ckpt_dir=None,
     guard = PreemptionGuard()
     monitor = StragglerMonitor()
     losses = []
-    t_start = time.time()
+    t_start = time.perf_counter()
     for step, data in loader:
         if step >= steps:
             break
         if arch.frontend_stub and arch.family == "encdec":
             data = dict(data, frames=np.zeros(
                 (batch, arch.encoder_context, arch.d_model), np.float32))
-        t0 = time.time()
+        t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, data)
         loss = float(metrics["loss"])
         losses.append(loss)
-        straggle = monitor.record(step, time.time() - t0)
+        straggle = monitor.record(step, time.perf_counter() - t0)
         if verbose and (step % log_every == 0 or step == steps - 1):
             print(f"[train] step {step} loss={loss:.4f} "
                   f"lr={float(metrics['lr']):.2e}"
@@ -103,7 +103,7 @@ def train_loop(arch, *, steps: int, batch: int, seq: int, ckpt_dir=None,
     loader.close()
     guard.restore_handlers()
     if verbose:
-        print(f"[train] done in {time.time()-t_start:.1f}s; "
+        print(f"[train] done in {time.perf_counter()-t_start:.1f}s; "
               f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     return params, opt_state, losses
 

@@ -1,0 +1,67 @@
+"""Unified telemetry: metrics registry, per-query tracing, exporters.
+
+The observability layer for the serving/search/build pipeline
+(docs/OBSERVABILITY.md). Three pieces, one import:
+
+    metrics.py   process-global `MetricsRegistry` of counters, gauges,
+                 and fixed-bucket histograms — cheap thread-safe
+                 increments, label support, and a TRUE no-op mode
+                 (`obs.disable()`: mutators return on one flag check;
+                 search results are bitwise unchanged either way).
+    tracing.py   `span()` / `query_trace()` structured stage timing
+                 with jit-aware fencing (`block_until_ready` at span
+                 boundaries ONLY while tracing is on) and an optional
+                 `jax.profiler.trace` deep-dive hook. Off by default.
+    export.py    Prometheus text + JSON snapshot renderers and the
+                 `start_metrics_server` scrape endpoint
+                 (`serve_search --metrics-port`).
+
+Typical instrumentation site:
+
+    from repro import obs
+    _STAGED = obs.counter("staging_staged_total", "shards staged")
+    ...
+    _STAGED.inc()
+    with obs.span("search/fold") as sp:
+        state = fold(...)
+        sp.fence(state)          # device-honest timing when tracing on
+
+Metrics default ON (per-shard/per-batch counters; the bench gate pins
+the cost at unmeasurable), tracing defaults OFF (fencing serializes the
+prefetch pipeline by design — see docs/KERNELS.md).
+"""
+from repro.obs import export, metrics, tracing  # noqa: F401
+from repro.obs.export import (MetricsServer, render_prometheus,  # noqa: F401
+                              series_value, snapshot, snapshot_delta,
+                              start_metrics_server)
+from repro.obs.metrics import (DEFAULT_TIME_BUCKETS,  # noqa: F401
+                               REGISTRY, MetricsRegistry, exp_buckets)
+from repro.obs.tracing import (Span, query_trace, recent_traces,  # noqa: F401
+                               span, tracing as tracing_scope)
+
+# registry conveniences bound to the process-global default registry
+counter = REGISTRY.counter
+gauge = REGISTRY.gauge
+histogram = REGISTRY.histogram
+get_metric = REGISTRY.get
+reset = REGISTRY.reset
+
+
+def enable() -> None:
+    """Turn metric collection on (the default state)."""
+    REGISTRY.enable()
+
+
+def disable() -> None:
+    """True no-op mode: metric mutators return on one flag check, no
+    locks, no allocation; values freeze at their current state."""
+    REGISTRY.disable()
+
+
+def enabled() -> bool:
+    return REGISTRY.enabled
+
+
+enable_tracing = tracing.enable
+disable_tracing = tracing.disable
+tracing_enabled = tracing.enabled

@@ -1,0 +1,225 @@
+"""Exporters: Prometheus text format, JSON snapshot, HTTP endpoint.
+
+Stdlib only. Three consumers, three shapes:
+
+  - `render_prometheus(registry)` — the text exposition format
+    (`# TYPE` headers, `_bucket{le=...}` cumulative histogram series)
+    a Prometheus scraper ingests; served at ``/metrics``.
+  - `snapshot(registry)` — a plain JSON-able dict (schema below) that
+    benchmarks and CI consume programmatically; served at
+    ``/metrics.json``. `snapshot_delta(a, b)` subtracts counter /
+    histogram state so a caller can attribute activity to one window
+    (how BENCH_search.json rows carry per-row staging deltas).
+  - `start_metrics_server(port)` — a daemon-threaded
+    `http.server` exposing both, plus ``/traces.json`` (the recent
+    per-query trace ring from `repro.obs.tracing`). Port 0 binds an
+    ephemeral port (tests / CI); `.port` is the bound port and
+    `.close()` shuts it down. This is what
+    ``serve_search --metrics-port`` starts.
+
+Snapshot schema (stable; tests pin it):
+
+    {"enabled": bool,
+     "metrics": {name: {"type": "counter"|"gauge"|"histogram",
+                        "help": str,
+                        "series": [{"labels": {k: v},    # {} = unlabeled
+                                    "value": float}      # counter/gauge
+                                   | {"labels": {...},   # histogram
+                                      "buckets": [[ub, count], ...],
+                                      "sum": float, "count": int}]}}}
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.obs import tracing as _tracing
+from repro.obs.metrics import (REGISTRY, MetricsRegistry, _HistogramSeries)
+
+
+def _fmt(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _labelstr(kv, extra=()) -> str:
+    items = list(kv) + list(extra)
+    if not items:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in items) + "}"
+
+
+def render_prometheus(registry: Optional[MetricsRegistry] = None) -> str:
+    """The Prometheus text exposition of every declared series."""
+    reg = registry or REGISTRY
+    out = []
+    for m in reg.metrics():
+        series = m.series()
+        if not series:
+            continue
+        if m.help:
+            out.append(f"# HELP {m.name} {m.help}")
+        out.append(f"# TYPE {m.name} {m.type}")
+        for s in series:
+            if isinstance(s, _HistogramSeries):
+                snap = s.collect()
+                acc = 0
+                for ub, c in zip(list(s.bounds) + [math.inf],
+                                 snap["counts"]):
+                    acc += c
+                    out.append(f"{m.name}_bucket"
+                               f"{_labelstr(s.labels_kv, [('le', _fmt(ub))])}"
+                               f" {acc}")
+                out.append(f"{m.name}_sum{_labelstr(s.labels_kv)} "
+                           f"{_fmt(snap['sum'])}")
+                out.append(f"{m.name}_count{_labelstr(s.labels_kv)} "
+                           f"{snap['count']}")
+            else:
+                out.append(f"{m.name}{_labelstr(s.labels_kv)} "
+                           f"{_fmt(s.value)}")
+    return "\n".join(out) + "\n"
+
+
+def snapshot(registry: Optional[MetricsRegistry] = None) -> dict:
+    """JSON-able snapshot of the registry (schema in the module doc)."""
+    reg = registry or REGISTRY
+    metrics = {}
+    for m in reg.metrics():
+        series = []
+        for s in m.series():
+            labels = dict(s.labels_kv)
+            if isinstance(s, _HistogramSeries):
+                snap = s.collect()
+                series.append({
+                    "labels": labels,
+                    "buckets": [[ub, c] for ub, c in
+                                zip(list(s.bounds) + [math.inf],
+                                    snap["counts"])],
+                    "sum": snap["sum"], "count": snap["count"]})
+            else:
+                series.append({"labels": labels, "value": s.value})
+        if series:
+            metrics[m.name] = {"type": m.type, "help": m.help,
+                               "series": series}
+    return {"enabled": reg.enabled, "metrics": metrics}
+
+
+def snapshot_delta(before: dict, after: dict) -> dict:
+    """``after - before`` for every monotone series (counters and
+    histograms; gauges pass through as their ``after`` value). Series
+    new in ``after`` keep their full value. The windowing primitive for
+    attributing metric movement to one benchmark rep / serve stream."""
+    def _series_key(s):
+        return tuple(sorted(s["labels"].items()))
+
+    out = {"enabled": after["enabled"], "metrics": {}}
+    for name, ma in after["metrics"].items():
+        mb = before["metrics"].get(name)
+        prior = ({_series_key(s): s for s in mb["series"]}
+                 if mb and mb["type"] == ma["type"] else {})
+        series = []
+        for s in ma["series"]:
+            p = prior.get(_series_key(s))
+            if ma["type"] == "histogram":
+                if p is None:
+                    series.append(dict(s))
+                    continue
+                pc = {ub: c for ub, c in p["buckets"]}
+                series.append({
+                    "labels": s["labels"],
+                    "buckets": [[ub, c - pc.get(ub, 0)]
+                                for ub, c in s["buckets"]],
+                    "sum": s["sum"] - p["sum"],
+                    "count": s["count"] - p["count"]})
+            elif ma["type"] == "counter":
+                series.append({"labels": s["labels"],
+                               "value": s["value"]
+                               - (p["value"] if p else 0.0)})
+            else:                                    # gauge: last value
+                series.append(dict(s))
+        out["metrics"][name] = {"type": ma["type"], "help": ma["help"],
+                                "series": series}
+    return out
+
+
+def series_value(snap: dict, name: str, **labels) -> float:
+    """Sum of a counter/gauge's series matching ``labels`` (subset
+    match; no labels = every series) in a `snapshot()` dict. The
+    convenience CI and benchmarks assert against."""
+    m = snap["metrics"].get(name)
+    if m is None:
+        return 0.0
+    want = {k: str(v) for k, v in labels.items()}
+    return sum(s["value"] for s in m["series"]
+               if all(s["labels"].get(k) == v for k, v in want.items()))
+
+
+# ---------------------------------------------------------------------------
+# the endpoint
+# ---------------------------------------------------------------------------
+
+
+class _Handler(BaseHTTPRequestHandler):
+    registry: MetricsRegistry = None      # set per-server via subclass dict
+
+    def do_GET(self):                                     # noqa: N802
+        path = self.path.split("?")[0]
+        if path in ("/metrics", "/"):
+            body = render_prometheus(self.registry).encode()
+            ctype = "text/plain; version=0.0.4; charset=utf-8"
+        elif path == "/metrics.json":
+            body = json.dumps(snapshot(self.registry)).encode()
+            ctype = "application/json"
+        elif path == "/traces.json":
+            body = json.dumps(_tracing.recent_traces()).encode()
+            ctype = "application/json"
+        else:
+            self.send_error(404)
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):                         # quiet
+        pass
+
+
+class MetricsServer:
+    """A daemon-threaded scrape endpoint over one registry."""
+
+    def __init__(self, port: int = 0,
+                 registry: Optional[MetricsRegistry] = None,
+                 host: str = "127.0.0.1"):
+        reg = registry or REGISTRY
+        handler = type("_BoundHandler", (_Handler,), {"registry": reg})
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._httpd.daemon_threads = True
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+
+
+def start_metrics_server(port: int = 0,
+                         registry: Optional[MetricsRegistry] = None
+                         ) -> MetricsServer:
+    """Serve ``/metrics`` (Prometheus text), ``/metrics.json`` and
+    ``/traces.json`` on ``port`` (0 = ephemeral; see `.port`)."""
+    return MetricsServer(port, registry)

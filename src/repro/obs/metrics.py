@@ -1,0 +1,309 @@
+"""Process-global metrics registry: counters, gauges, histograms.
+
+Dependency-free (stdlib only) and cheap by construction:
+
+  - **No-op mode is a real guarantee**: every mutator (`inc`/`set`/
+    `observe`) checks one registry flag and returns before touching a
+    lock when the registry is disabled — a handful of ns, no allocation,
+    no lock traffic, and (because metrics never feed back into any
+    computation) search results are bitwise identical either way. The
+    default registry ships ENABLED: the counters on the serving path are
+    per-shard / per-batch, not per-element, so always-on costs nothing
+    measurable (asserted by the bench-regression gate); `disable()` is
+    the belt-and-braces escape for overhead-critical runs.
+  - **Thread-safe increments**: one `threading.Lock` per metric series,
+    taken only when enabled. Metric *creation* is serialized by a
+    registry lock and get-or-create idempotent, so modules can declare
+    their metrics at call sites without import-order coupling.
+  - **Labels without cardinality machinery**: `metric.labels(pool="3")`
+    returns a child series (cached per label set) sharing the parent's
+    name/type — how per-`StagingPool` counters coexist in one registry.
+    Keep label sets tiny and bounded (pool ids, stage names); there is
+    deliberately no eviction.
+  - **Fixed-bucket histograms**: log-spaced upper bounds chosen at
+    declaration (`exp_buckets`), O(len(buckets)) memory forever, with
+    quantile estimates interpolated from the bucket counts —
+    `ServeStats` p50/p99 derive from these, not from an unbounded
+    per-query latency array. `collect()` snapshots support windowed
+    (per-run) quantiles via ``since=``.
+
+Naming scheme (docs/OBSERVABILITY.md): `<subsystem>_<what>_<unit>`,
+counters end in `_total` (`staging_staged_total`,
+`build_rows_total`), durations are `_seconds` floats
+(`staging_stall_seconds_total`, `serve_latency_seconds`). The
+Prometheus/JSON renderers live in `repro.obs.export`.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from bisect import bisect_left
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def exp_buckets(start: float, factor: float, count: int) -> Tuple[float, ...]:
+    """``count`` log-spaced finite upper bounds from ``start``; the
+    implicit +inf bucket is appended by `Histogram` itself."""
+    if start <= 0 or factor <= 1 or count < 1:
+        raise ValueError("need start > 0, factor > 1, count >= 1")
+    return tuple(start * factor ** i for i in range(count))
+
+
+# 100 us .. ~80 s in x1.3 steps: per-query serving latencies and
+# per-stage span durations both land mid-range, so interpolated
+# p50/p99 carry ~±15% bucket resolution.
+DEFAULT_TIME_BUCKETS = exp_buckets(1e-4, 1.3, 52)
+
+
+class _Series:
+    """One (metric, label set) time series. Mutators bail out on the
+    registry flag BEFORE taking the lock — the no-op-mode contract."""
+
+    __slots__ = ("_reg", "_lock", "labels_kv", "_value")
+
+    def __init__(self, reg: "MetricsRegistry", labels_kv: Tuple):
+        self._reg = reg
+        self._lock = threading.Lock()
+        self.labels_kv = labels_kv
+        self._value = 0.0
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class _CounterSeries(_Series):
+    __slots__ = ()
+
+    def inc(self, amount: float = 1) -> None:
+        if not self._reg._enabled:
+            return
+        if amount < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self._value += amount
+
+
+class _GaugeSeries(_Series):
+    __slots__ = ()
+
+    def set(self, value: float) -> None:
+        if not self._reg._enabled:
+            return
+        with self._lock:
+            self._value = float(value)
+
+    def inc(self, amount: float = 1) -> None:
+        if not self._reg._enabled:
+            return
+        with self._lock:
+            self._value += amount
+
+    def dec(self, amount: float = 1) -> None:
+        self.inc(-amount)
+
+
+class _HistogramSeries(_Series):
+    __slots__ = ("bounds", "counts", "sum", "count")
+
+    def __init__(self, reg, labels_kv, bounds: Tuple[float, ...]):
+        super().__init__(reg, labels_kv)
+        self.bounds = bounds                    # finite ubs; +inf implicit
+        self.counts = [0] * (len(bounds) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        if not self._reg._enabled:
+            return
+        i = bisect_left(self.bounds, value)
+        with self._lock:
+            self.counts[i] += 1
+            self.sum += value
+            self.count += 1
+
+    def collect(self) -> dict:
+        """Point-in-time snapshot (counts copied), usable as a window
+        start for `quantile(..., since=)`."""
+        with self._lock:
+            return {"counts": list(self.counts), "sum": self.sum,
+                    "count": self.count}
+
+    def quantile(self, q: float, *, since: Optional[dict] = None) -> float:
+        """Interpolated q-quantile from the bucket counts (Prometheus
+        `histogram_quantile` semantics: linear within the landing
+        bucket, the last finite bound for the +inf bucket, 0.0 for an
+        empty window). With ``since`` (an earlier `collect()`), the
+        quantile of only the observations recorded in between."""
+        cur = self.collect()
+        counts = cur["counts"]
+        if since is not None:
+            counts = [c - s for c, s in zip(counts, since["counts"])]
+        total = sum(counts)
+        if total <= 0:
+            return 0.0
+        target = q * total
+        acc = 0.0
+        for i, c in enumerate(counts):
+            acc += c
+            if acc >= target and c > 0:
+                if i >= len(self.bounds):       # +inf bucket
+                    return self.bounds[-1]
+                lo = self.bounds[i - 1] if i else 0.0
+                frac = 1.0 - (acc - target) / c
+                return lo + (self.bounds[i] - lo) * frac
+        return self.bounds[-1]
+
+
+_SERIES_CLS = {"counter": _CounterSeries, "gauge": _GaugeSeries}
+
+
+class Metric:
+    """A named metric = an unlabeled default series + labeled children.
+
+    Calling a mutator on the metric itself drives the unlabeled series;
+    `labels(**kv)` returns (and caches) the child for one label set.
+    """
+
+    __slots__ = ("name", "type", "help", "_reg", "_buckets", "_default",
+                 "_children", "_lock")
+
+    def __init__(self, reg: "MetricsRegistry", name: str, mtype: str,
+                 help: str = "", buckets: Optional[Sequence[float]] = None):
+        self.name = name
+        self.type = mtype
+        self.help = help
+        self._reg = reg
+        self._buckets = tuple(buckets) if buckets else None
+        self._lock = threading.Lock()
+        self._children: Dict[Tuple, _Series] = {}
+        self._default: Optional[_Series] = None
+
+    def _make(self, labels_kv: Tuple) -> _Series:
+        if self.type == "histogram":
+            return _HistogramSeries(self._reg, labels_kv, self._buckets)
+        return _SERIES_CLS[self.type](self._reg, labels_kv)
+
+    def labels(self, **kv) -> _Series:
+        key = tuple(sorted((k, str(v)) for k, v in kv.items()))
+        child = self._children.get(key)
+        if child is None:
+            with self._lock:
+                child = self._children.setdefault(key, self._make(key))
+        return child
+
+    def _default_series(self) -> _Series:
+        if self._default is None:
+            with self._lock:
+                if self._default is None:
+                    self._default = self._make(())
+        return self._default
+
+    def series(self) -> List[_Series]:
+        """Every live series, unlabeled first (for exporters)."""
+        out = [self._default] if self._default is not None else []
+        return out + [self._children[k] for k in sorted(self._children)]
+
+    # unlabeled-series conveniences ------------------------------------------
+    def inc(self, amount: float = 1) -> None:
+        self._default_series().inc(amount)
+
+    def set(self, value: float) -> None:
+        self._default_series().set(value)
+
+    def dec(self, amount: float = 1) -> None:
+        self._default_series().dec(amount)
+
+    def observe(self, value: float) -> None:
+        self._default_series().observe(value)
+
+    def quantile(self, q: float, *, since: Optional[dict] = None) -> float:
+        return self._default_series().quantile(q, since=since)
+
+    def collect(self) -> dict:
+        return self._default_series().collect()
+
+    @property
+    def value(self) -> float:
+        return self._default_series().value
+
+
+class MetricsRegistry:
+    """Get-or-create registry of `Metric`s with one enable flag.
+
+    ``enabled=False`` is the true no-op mode: mutators return on the
+    flag check, values freeze, exporters render the frozen state.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self._enabled = bool(enabled)
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, Metric] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def enable(self) -> None:
+        self._enabled = True
+
+    def disable(self) -> None:
+        self._enabled = False
+
+    # -- declaration (get-or-create, type-checked) ---------------------------
+
+    def _get(self, name: str, mtype: str, help: str = "",
+             buckets: Optional[Sequence[float]] = None) -> Metric:
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = Metric(self, name, mtype, help, buckets)
+                    self._metrics[name] = m
+        if m.type != mtype:
+            raise TypeError(f"metric {name!r} is a {m.type}, not a {mtype}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Metric:
+        if not name.endswith("_total"):
+            raise ValueError(f"counter {name!r} must end in '_total' "
+                             f"(naming scheme, docs/OBSERVABILITY.md)")
+        return self._get(name, "counter", help)
+
+    def gauge(self, name: str, help: str = "") -> Metric:
+        return self._get(name, "gauge", help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = DEFAULT_TIME_BUCKETS) -> Metric:
+        return self._get(name, "histogram", help, buckets)
+
+    # -- introspection -------------------------------------------------------
+
+    def metrics(self) -> List[Metric]:
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+    def get(self, name: str) -> Optional[Metric]:
+        return self._metrics.get(name)
+
+    def reset(self) -> None:
+        """Zero every series (tests; keeps the declared metric objects —
+        and any handles modules already hold — valid)."""
+        for m in self.metrics():
+            for s in m.series():
+                with s._lock:
+                    if isinstance(s, _HistogramSeries):
+                        s.counts = [0] * len(s.counts)
+                        s.sum = 0.0
+                        s.count = 0
+                    else:
+                        s._value = 0.0
+
+
+# The process-global default registry. Modules grab handles through
+# `repro.obs.counter/gauge/histogram` (see __init__.py) so one scrape
+# endpoint sees the whole process.
+REGISTRY = MetricsRegistry(enabled=True)

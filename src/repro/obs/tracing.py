@@ -1,0 +1,222 @@
+"""Structured per-query tracing: spans over pipeline stages.
+
+A *span* times one stage of a host-driven pipeline (the probe /
+schedule / acquire / fold / rerank stages of `search_sharded`, the
+admission / batch / dispatch stages of `SearchServer`). A *query trace*
+groups the spans of one query (or micro-batch) into an ordered record.
+
+Tracing is OFF by default and costs one module-flag check per span when
+off — the serving hot path stays unperturbed. The interesting part is
+what happens when it is ON:
+
+  **jit-aware fencing.** Wall-clocking a stage that ends in an async
+  jax dispatch measures only the host-side enqueue — the device work
+  lands in whichever later stage happens to block first, so per-stage
+  numbers lie. A span therefore accepts a *fence*: the arrays the stage
+  produced (`span.fence(*arrays)`), on which it calls
+  `jax.block_until_ready` at span exit — but ONLY while tracing is
+  enabled. The traced path measures honest device-inclusive stage
+  times; the untraced path keeps its async pipelining bit-for-bit (the
+  fence is a synchronization point, never a value change, so results
+  are bitwise identical either way — tested). docs/KERNELS.md covers
+  the caveat in detail: fencing serializes overlap, so traced
+  *aggregate* throughput is pessimistic by exactly the overlap the
+  pipeline normally hides. That is the point — the stall becomes
+  attributable — but do not read traced QPS as serving QPS.
+
+  **Stage histograms.** Every span duration lands in the registry as
+  `<family>_stage_seconds{stage=<name>}` where the span name is
+  `"<family>/<stage>"` (`"search/probe"`, `"serve/dispatch"`), so the
+  Prometheus endpoint exposes per-stage latency distributions without
+  any per-query storage.
+
+  **Recent-trace ring.** Completed query traces (name, per-span
+  offsets/durations, metadata) land in a bounded ring buffer —
+  `recent_traces()` — which the JSON exporter serves for "why was THIS
+  query slow" forensics at O(ring) memory.
+
+  **Deep-dive hook.** `enable(profile_dir=...)` additionally starts
+  `jax.profiler.trace` into that directory and wraps every span in a
+  `jax.profiler.TraceAnnotation`, so spans line up with device timelines
+  in TensorBoard/Perfetto. Purely optional; plain tracing never imports
+  the profiler machinery.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Optional
+
+from repro.obs import metrics as _metrics
+
+_TRACE_RING_LEN = 64
+
+_lock = threading.Lock()
+_enabled = False
+_profile_dir: Optional[str] = None
+_recent: "deque[dict]" = deque(maxlen=_TRACE_RING_LEN)
+_tls = threading.local()
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable(profile_dir: Optional[str] = None) -> None:
+    """Turn span timing on (and, with ``profile_dir``, start a
+    `jax.profiler.trace` capture that spans annotate into)."""
+    global _enabled, _profile_dir
+    with _lock:
+        if profile_dir is not None and _profile_dir is None:
+            import jax
+            jax.profiler.start_trace(profile_dir)
+            _profile_dir = profile_dir
+        _enabled = True
+
+
+def disable() -> None:
+    global _enabled, _profile_dir
+    with _lock:
+        if _profile_dir is not None:
+            import jax
+            jax.profiler.stop_trace()
+            _profile_dir = None
+        _enabled = False
+
+
+@contextmanager
+def tracing(profile_dir: Optional[str] = None):
+    """Scoped enable: `with obs.tracing(): ...` (restores prior state)."""
+    was = _enabled
+    enable(profile_dir)
+    try:
+        yield
+    finally:
+        if not was:
+            disable()
+
+
+def recent_traces() -> list:
+    """Most-recent completed query traces, oldest first (bounded ring)."""
+    with _lock:
+        return list(_recent)
+
+
+class Span:
+    """One live stage timing. `fence(*arrays)` registers device values
+    to `jax.block_until_ready` at exit, so the recorded duration
+    includes the stage's device work instead of just its dispatch."""
+
+    __slots__ = ("name", "t0", "_fence")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.t0 = time.perf_counter()
+        self._fence = None
+
+    def fence(self, *arrays) -> None:
+        self._fence = arrays
+
+
+class _NullSpan:
+    """The disabled-path span: every method a no-op (shared singleton,
+    so `span()` allocates nothing when tracing is off)."""
+
+    __slots__ = ()
+
+    def fence(self, *arrays) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def _family_stage(name: str):
+    fam, _, stage = name.partition("/")
+    return (fam, stage) if stage else ("span", fam)
+
+
+@contextmanager
+def span(name: str, registry: Optional[_metrics.MetricsRegistry] = None):
+    """Time one pipeline stage. ``name`` is `"<family>/<stage>"`; the
+    duration lands in `<family>_stage_seconds{stage=<stage>}` and in the
+    enclosing `query_trace` (if any). No-op (one flag check, shared
+    null span) while tracing is disabled."""
+    if not _enabled:
+        yield _NULL_SPAN
+        return
+    reg = registry or _metrics.REGISTRY
+    ann = None
+    if _profile_dir is not None:
+        import jax
+        ann = jax.profiler.TraceAnnotation(name)
+        ann.__enter__()
+    sp = Span(name)
+    try:
+        yield sp
+    finally:
+        if sp._fence is not None:
+            import jax
+            jax.block_until_ready(sp._fence)
+        dt = time.perf_counter() - sp.t0
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        fam, stage = _family_stage(name)
+        reg.histogram(f"{fam}_stage_seconds",
+                      "span durations by pipeline stage"
+                      ).labels(stage=stage).observe(dt)
+        qt = getattr(_tls, "trace", None)
+        if qt is not None:
+            qt.spans.append({"stage": name,
+                             "start_s": round(sp.t0 - qt.t0, 9),
+                             "dur_s": round(dt, 9)})
+
+
+class QueryTrace:
+    """Ordered span record for one query / micro-batch."""
+
+    __slots__ = ("name", "meta", "t0", "spans", "total_s")
+
+    def __init__(self, name: str, meta: dict):
+        self.name = name
+        self.meta = meta
+        self.t0 = time.perf_counter()
+        self.spans = []
+        self.total_s = 0.0
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "total_s": round(self.total_s, 9),
+                "spans": self.spans, **({"meta": self.meta}
+                                        if self.meta else {})}
+
+
+class _NullTrace:
+    __slots__ = ()
+    name = None
+    spans = ()
+    total_s = 0.0
+
+
+_NULL_TRACE = _NullTrace()
+
+
+@contextmanager
+def query_trace(name: str = "query", **meta):
+    """Group the spans opened inside into one per-query record, pushed
+    to the recent-trace ring at exit. Nesting restores the outer trace.
+    No-op while tracing is disabled."""
+    if not _enabled:
+        yield _NULL_TRACE
+        return
+    qt = QueryTrace(name, meta)
+    prev = getattr(_tls, "trace", None)
+    _tls.trace = qt
+    try:
+        yield qt
+    finally:
+        _tls.trace = prev
+        qt.total_s = time.perf_counter() - qt.t0
+        with _lock:
+            _recent.append(qt.to_dict())

@@ -1,0 +1,242 @@
+"""The telemetry contract (src/repro/obs, docs/OBSERVABILITY.md):
+
+- the registry is get-or-create, type-checked, label-aware, and its
+  histograms answer interpolated + windowed quantiles from fixed
+  buckets;
+- disabled metrics are a TRUE no-op: values freeze, mutators cost one
+  flag check (overhead bound asserted loosely), and — the part that
+  matters — search()/search_sharded() results are bitwise identical
+  with metrics on, off, and with tracing on, on both dispatch backends;
+- the exporters round-trip: Prometheus text carries every series,
+  the JSON snapshot supports delta/series_value arithmetic, and the
+  HTTP endpoint serves both;
+- `StagingPool.stats()` is now a *view* over the registry: the legacy
+  dict equals the per-pool labeled series, key for key.
+"""
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import IndexStore, ShardedIndexView
+from repro.obs.metrics import MetricsRegistry, exp_buckets
+
+from conftest import clustered
+
+
+SEARCH_KW = dict(n_probe=4, n_short_aq=16, n_short_pw=8, topk=3)
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    rng = np.random.default_rng(11)
+    xb = clustered(rng, 900, 16, k=16)
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), xb[:400], cfg)
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params,
+                             cfg, k_ivf=8, m_tilde=2, n_pair_books=4,
+                             encode_chunk=512)
+    store_dir = tmp_path_factory.mktemp("obs_store") / "idx"
+    IndexStore.save(store_dir, idx, shard_size=256)
+    q = jnp.asarray(xb[:9] + 0.02)
+    return cfg, idx, store_dir, q
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+
+
+def test_registry_types_and_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "help text")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    assert reg.counter("x_total") is c          # get-or-create
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError):
+        reg.counter("not_a_counter")            # must end in _total
+    with pytest.raises(ValueError):
+        c.inc(-1)                               # counters only go up
+    g = reg.gauge("y")
+    g.set(5)
+    g.dec(2)
+    assert g.value == 3.0
+    a = c.labels(pool="1")
+    b = c.labels(pool="2")
+    assert a is c.labels(pool="1") and a is not b
+    a.inc(7)
+    assert a.value == 7 and b.value == 0 and c.value == 3.5
+
+
+def test_histogram_quantiles_windowed():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", buckets=exp_buckets(1e-3, 2.0, 16))
+    for v in (0.004, 0.005, 0.006, 0.05):
+        h.observe(v)
+    p50, p99 = h.quantile(0.5), h.quantile(0.99)
+    assert 0 < p50 <= p99
+    assert 0.002 <= p50 <= 0.016                # lands in the 4-6ms region
+    win = h.collect()
+    for v in (1.0, 1.1, 1.2):
+        h.observe(v)
+    # windowed quantile sees only the second batch (~1s), not the ms ones
+    assert h.quantile(0.5, since=win) > 0.5
+    assert h.quantile(0.5) < 0.5                # lifetime median still low
+    empty = h.collect()
+    assert h.quantile(0.9, since=empty) == 0.0  # empty window
+
+
+def test_disable_freezes_and_is_cheap():
+    reg = MetricsRegistry()
+    c = reg.counter("z_total")
+    h = reg.histogram("z_seconds")
+    c.inc(5)
+    h.observe(0.1)
+    reg.disable()
+    c.inc(100)
+    h.observe(9.9)
+    assert c.value == 5 and h.collect()["count"] == 1   # frozen
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+    dt_off = time.perf_counter() - t0
+    reg.enable()
+    # loose bound: a disabled inc is one attribute check — budget 2us/op
+    # absorbs CI-host noise while still catching an accidental lock/alloc
+    assert dt_off / n < 2e-6, f"disabled inc costs {dt_off / n * 1e9:.0f}ns"
+    assert c.value == 5
+    c.inc()
+    assert c.value == 6
+
+
+# ---------------------------------------------------------------------------
+# exporters
+
+
+def test_prometheus_and_snapshot_round_trip():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests")
+    c.labels(route="a").inc(3)
+    c.labels(route="b").inc(4)
+    reg.gauge("depth").set(2)
+    h = reg.histogram("dur_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = obs.render_prometheus(reg)
+    assert '# TYPE req_total counter' in text
+    assert 'req_total{route="a"} 3' in text
+    assert 'req_total{route="b"} 4' in text
+    assert 'dur_seconds_bucket{le="0.1"} 1' in text
+    assert 'dur_seconds_bucket{le="1"} 2' in text         # cumulative
+    assert 'dur_seconds_bucket{le="+Inf"} 3' in text
+    assert 'dur_seconds_count 3' in text
+    snap = obs.snapshot(reg)
+    assert obs.series_value(snap, "req_total") == 7        # summed
+    assert obs.series_value(snap, "req_total", route="a") == 3
+    assert obs.series_value(snap, "depth") == 2
+    c.labels(route="a").inc(10)
+    delta = obs.snapshot_delta(snap, obs.snapshot(reg))
+    assert obs.series_value(delta, "req_total", route="a") == 10
+    assert obs.series_value(delta, "req_total", route="b") == 0
+
+
+def test_http_endpoint_scrape():
+    reg = MetricsRegistry()
+    reg.counter("hits_total").inc(2)
+    srv = obs.start_metrics_server(0, registry=reg)
+    try:
+        text = urllib.request.urlopen(srv.url + "/metrics").read().decode()
+        assert "hits_total 2" in text
+        import json
+        snap = json.loads(
+            urllib.request.urlopen(srv.url + "/metrics.json").read())
+        assert obs.series_value(snap, "hits_total") == 2
+        traces = json.loads(
+            urllib.request.urlopen(srv.url + "/traces.json").read())
+        assert isinstance(traces, list)
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# the guarantee that matters: telemetry never changes results
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_metrics_on_off_bitwise_parity(world, backend):
+    cfg, idx, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    i_on, s_on = search.search(idx, q, cfg=cfg, backend=backend,
+                               **SEARCH_KW)
+    si_on, ss_on = search.search_sharded(view, q, cfg=cfg, backend=backend,
+                                         **SEARCH_KW)
+    obs.disable()
+    try:
+        i_off, s_off = search.search(idx, q, cfg=cfg, backend=backend,
+                                     **SEARCH_KW)
+        si_off, ss_off = search.search_sharded(view, q, cfg=cfg,
+                                               backend=backend, **SEARCH_KW)
+    finally:
+        obs.enable()
+    with obs.tracing_scope():                   # fenced spans active
+        i_tr, s_tr = search.search_sharded(view, q, cfg=cfg,
+                                           backend=backend, **SEARCH_KW)
+    assert np.array_equal(np.asarray(i_on), np.asarray(i_off))
+    assert np.array_equal(np.asarray(s_on), np.asarray(s_off))
+    assert np.array_equal(np.asarray(si_on), np.asarray(si_off))
+    assert np.array_equal(np.asarray(ss_on), np.asarray(ss_off))
+    assert np.array_equal(np.asarray(si_on), np.asarray(i_tr))
+    assert np.array_equal(np.asarray(ss_on), np.asarray(s_tr))
+
+
+def test_tracing_records_stages(world):
+    cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    with obs.tracing_scope():
+        search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    traces = obs.recent_traces()
+    assert traces, "query_trace should land in the ring"
+    t = traces[-1]
+    assert t["name"] == "search_sharded"
+    stages = {s["stage"] for s in t["spans"]}
+    assert {"search/probe", "search/fold", "search/rerank"} <= stages
+    hist = obs.get_metric("search_stage_seconds")
+    assert hist is not None
+    assert hist.labels(stage="fold").collect()["count"] > 0
+
+
+# ---------------------------------------------------------------------------
+# staging migration: stats() is a registry view
+
+
+def test_staging_stats_equal_registry(world):
+    cfg, _, store_dir, q = world
+    view = ShardedIndexView(store_dir, max_resident_shards=2)
+    search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    st = view.pool.stats()
+    assert st["staged"] > 0
+    pool_label = str(view.pool.pool_id)
+    for key, name in [("staged", "staging_staged_total"),
+                      ("device_hits", "staging_device_hits_total"),
+                      ("host_hits", "staging_host_hits_total"),
+                      ("prefetch_issued", "staging_prefetch_issued_total"),
+                      ("prefetch_hits", "staging_prefetch_hits_total"),
+                      ("evictions", "staging_evictions_total"),
+                      ("stall_s", "staging_stall_seconds_total")]:
+        m = obs.get_metric(name)
+        assert m is not None, name
+        assert st[key] == m.labels(pool=pool_label).value, key
+    # cross-series consistency the CI smoke also asserts
+    snap = obs.snapshot()
+    assert (obs.series_value(snap, "staging_prefetch_hits_total")
+            <= obs.series_value(snap, "staging_staged_total"))

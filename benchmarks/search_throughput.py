@@ -20,7 +20,11 @@ half the shards, so every scan evicts and re-stages — mode
 stages in the background while s is scanned; evictions replay from the
 host cache of assembled shards), ``out_of_core_cold_nopf`` the same
 budget with prefetch off (each stage is a synchronous stall). The gap
-between the two is the latency the pipeline hides. `main(json_path=...)`
+between the two is the latency the pipeline hides. Two more cold rows
+(``out_of_core_cold_verify`` / ``_noverify``) disable the host cache so
+every re-stage reassembles from the mmaps, and report the crc32
+integrity-verification overhead on that worst-case path (informational —
+verify-on is the serving default). `main(json_path=...)`
 writes the rows as machine-readable JSON (`benchmarks/run.py --only
 search` -> BENCH_search.json) so the search perf trajectory is recorded
 per CI run like encode/kernels.
@@ -121,6 +125,21 @@ def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
                     rows.append(_row(mode, n_shards, _time_batches(
                         lambda qq: search.search_sharded(
                             cold, qq, cfg=cfg, prefetch=pf, **SEARCH_KW),
+                        q, reps=reps), batch))
+                # integrity-verification overhead (informational): the
+                # host cache is OFF so every re-stage reassembles from
+                # the mmaps and — with verify on — pays the crc32 check
+                # per fill. verify=True is the serving default; the gap
+                # to verify=False is the integrity tax on the worst-case
+                # (cache-defeating) cold-scan path.
+                for mode, vf in (("out_of_core_cold_verify", True),
+                                 ("out_of_core_cold_noverify", False)):
+                    cold = ShardedIndexView(
+                        d, max_resident_shards=max(1, n_shards // 2),
+                        host_cache_bytes=0, verify=vf)
+                    rows.append(_row(mode, n_shards, _time_batches(
+                        lambda qq, v=cold: search.search_sharded(
+                            v, qq, cfg=cfg, **SEARCH_KW),
                         q, reps=reps), batch))
         finally:
             shutil.rmtree(d, ignore_errors=True)

@@ -130,6 +130,85 @@ finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
 
+# chaos + fsck smoke: serve a full stream through an active FaultPlan
+# (read errors retried away, corrupt shards quarantined, degraded queries
+# reporting coverage < 1.0, zero crashes) with the fault counters scraped
+# over live HTTP; then fsck a deliberately corrupted copy of the store and
+# check it names the bad shard. The seed is picked via the FaultPlan
+# decision predicates, so the "at least one corrupt shard / one read
+# error" scenario is guaranteed, not probabilistic.
+python - <<'PY'
+import json, shutil, tempfile, urllib.request
+import numpy as np, jax, jax.numpy as jnp
+from repro import obs
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import FaultPlan, IndexStore, corrupt_file, fsck_store
+from repro.index import fsck as fsck_mod
+import repro.launch.serve_search as serve_search
+
+rng = np.random.default_rng(0)
+xb = rng.normal(size=(600, 16)).astype(np.float32)
+cfg = tiny(epochs=1)
+params = training.init_qinco2(jax.random.key(0), xb[:256], cfg)
+idx = search.build_index(jax.random.key(1), jnp.asarray(xb), params, cfg,
+                         k_ivf=8, m_tilde=2, n_pair_books=4)
+d = tempfile.mkdtemp(prefix="ci_chaos_smoke_")
+try:
+    IndexStore.save(d, idx, shard_size=128)
+    store = IndexStore(d)
+    n_shards = store.manifest["n_shards"]
+
+    # fsck: clean store passes; a corrupted copy fails, naming the shard
+    assert fsck_store(store, log=lambda *a, **k: None)["ok"]
+    bad_dir = d + "_corrupt"
+    shutil.copytree(d, bad_dir)
+    corrupt_file(IndexStore(bad_dir).shard_dir(2) / "codes.u8", seed=1)
+    assert fsck_mod.main([bad_dir, "--json"]) == 1
+    report = fsck_store(bad_dir, log=lambda *a, **k: None)
+    assert report["shards_corrupt"] == [2], report
+    assert any("shard 00002" in e and "codes.u8" in e
+               for e in report["errors"]), report["errors"]
+    shutil.rmtree(bad_dir, ignore_errors=True)
+
+    # chaos serve: ~20% faults, seeded so >= 1 shard corrupts (but not
+    # all) and >= 1 transient read error fires on a healthy shard
+    seed = next(
+        s for s in range(1000)
+        if 1 <= sum(FaultPlan(s, p_corrupt=0.2).corrupts(sid)
+                    for sid in range(n_shards)) < n_shards
+        and any(FaultPlan(s, p_read_error=0.25).would_read_error(sid, 0)
+                and not FaultPlan(s, p_corrupt=0.2).corrupts(sid)
+                for sid in range(n_shards)))
+    spec = (f"p_read_error=0.25,read_error_max_per_key=1,"
+            f"p_corrupt=0.2,seed={seed}")
+    sj = d + "/stats.jsonl"
+    stats = serve_search.main([
+        "--store", d, "--queries", "64", "--micro-batch", "8",
+        "--out-of-core", "--max-resident-shards", "2", "--no-prefetch",
+        "--chaos", spec, "--on-shard-error", "skip",
+        "--metrics-port", "0", "--stats-json", sj])
+    assert stats.n_queries == 64                 # stream completed
+    assert stats.degraded_queries >= 1, stats
+    assert stats.mean_coverage < 1.0, stats
+    rec = json.loads(open(sj).read().strip())
+    assert rec["staging"]["quarantined_shards"] >= 1, rec["staging"]
+    url = serve_search.last_metrics_server.url
+    snap = json.loads(urllib.request.urlopen(url + "/metrics.json").read())
+    assert obs.series_value(snap, "index_quarantined_shards_total") >= 1
+    assert obs.series_value(snap, "index_integrity_failures_total") >= 1
+    assert obs.series_value(snap, "staging_retries_total") >= 1
+    assert obs.series_value(snap, "faults_injected_total") >= 2
+    assert obs.series_value(snap, "serve_degraded_queries_total") >= 1
+    print("[ci] chaos + fsck smoke OK (fsck names the corrupt shard; "
+          "degraded serving completed under injected faults with "
+          "quarantine/retry/degraded counters live on /metrics)")
+finally:
+    if serve_search.last_metrics_server is not None:
+        serve_search.last_metrics_server.close()
+    shutil.rmtree(d, ignore_errors=True)
+PY
+
 # kernel-backend smoke: xla vs pallas per-op timings for every dispatch op
 # (incl. the fused f_theta / adc_topk paths) -> BENCH_kernels.json, so each
 # CI run leaves a machine-readable perf data point

@@ -17,6 +17,7 @@ exercised by the dry-run.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Optional, Tuple
 
@@ -43,6 +44,16 @@ _C_SEARCH_QUERIES = obs.counter(
     "search_queries_total", "queries answered by search_sharded")
 _C_SHARDS_FOLDED = obs.counter(
     "search_shards_folded_total", "per-shard shortlist+merge folds run")
+_C_SHARD_ERRORS = obs.counter(
+    "search_shard_errors_total",
+    "scheduled shards skipped on acquire/integrity errors "
+    "(on_shard_error='skip')")
+_C_EJECTED = obs.counter(
+    "search_deadline_ejected_shards_total",
+    "scheduled shards ejected unfolded because the query deadline passed")
+_C_DEGRADED = obs.counter(
+    "search_degraded_queries_total",
+    "queries answered with shard coverage < 1.0")
 
 
 @dataclasses.dataclass
@@ -332,7 +343,10 @@ def _rerank_shortlist(q, s1, ids1, codes1, assign1, pw_norms1, pw_codebooks,
 def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
                    n_short_pw: int = 16, topk: int = 1,
                    cfg: QincoConfig = None, backend: str = "auto",
-                   prefetch: bool = True):
+                   prefetch: bool = True,
+                   deadline_s: Optional[float] = None,
+                   on_shard_error: str = "raise",
+                   return_coverage: bool = False):
     """Out-of-core cascade over a `ShardedIndexView` — bit-identical
     (indices AND scores) to resident `search()` on the same store.
 
@@ -381,7 +395,33 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
     serializing the prefetch overlap (docs/KERNELS.md). Results are
     bitwise identical either way (tested): fences synchronize, they
     never change values.
+
+    Graceful degradation (all off by default — the fault-free defaults
+    keep this function bit-identical to its pre-degradation behavior):
+
+      - ``on_shard_error="skip"``: a scheduled shard that is quarantined
+        or whose acquire fails (`OSError` after the pool's retries, a
+        staging timeout, or a `ShardIntegrityError`) is dropped from the
+        scan instead of raising. The rank-keyed merge makes this
+        well-formed: the dropped shard's rows simply never enter the
+        shortlist, exactly as if its buckets held fewer candidates —
+        results stay valid approximate answers over the shards that DID
+        fold. Device-side failures (the fold itself) always propagate.
+      - ``deadline_s``: a wall-clock budget measured from call entry;
+        once exceeded, remaining scheduled shards are ejected unfolded
+        (`search_deadline_ejected_shards_total`) and the query answers
+        from what has folded so far.
+      - ``return_coverage``: returns ``(ids, dists, coverage)`` where
+        coverage is (Q,) float32 — for each query, the fraction of its
+        *relevant* scheduled shards (shards with at least one probed
+        bucket; shards quarantined at open count as relevant to every
+        query) that actually folded. 1.0 everywhere on a clean run;
+        < 1.0 marks a degraded answer (`search_degraded_queries_total`).
     """
+    if on_shard_error not in ("raise", "skip"):
+        raise ValueError(f"on_shard_error={on_shard_error!r} "
+                         f"(expected 'raise' or 'skip')")
+    t_start = time.perf_counter()
     cfg = cfg or view.cfg
     q = jnp.asarray(q, jnp.float32)
     cap = view.cap
@@ -402,9 +442,32 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
         state = (jnp.full((Q, n_short_aq), -jnp.inf, jnp.float32),
                  jnp.full((Q, n_short_aq), _POS_SENTINEL, jnp.int32),
                  jnp.zeros((Q, n_short_aq), jnp.int32))
+        from repro.index.store import ShardIntegrityError
+        folded = []
         for i, sid in enumerate(sched):
-            with obs.span("search/acquire"):
-                st = view.acquire(sid)
+            if (deadline_s is not None
+                    and time.perf_counter() - t_start > deadline_s):
+                _C_EJECTED.inc(len(sched) - i)      # answer with what folded
+                break
+            if sid in view.quarantined:
+                if on_shard_error == "raise":
+                    raise ShardIntegrityError(
+                        sid, "<denylist>",
+                        "quarantined by an earlier integrity failure")
+                _C_SHARD_ERRORS.inc()
+                continue
+            try:
+                with obs.span("search/acquire"):
+                    st = view.acquire(sid)
+            except (OSError, ShardIntegrityError):
+                # OSError: reads still failing after the pool's retries,
+                # or a staging timeout (TimeoutError). Device-side fold
+                # failures below are NOT caught — those mean the process,
+                # not the shard, is unhealthy.
+                if on_shard_error == "raise":
+                    raise
+                _C_SHARD_ERRORS.inc()
+                continue
             if prefetch and i + 1 < len(sched):
                 view.prefetch(sched[i + 1])  # stages while sid is scanned
             with obs.span("search/fold") as sp:
@@ -414,7 +477,15 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
                     cap=cap, backend=backend)
                 sp.fence(state)
             view.release(sid)
-        _C_SHARDS_FOLDED.inc(len(sched))
+            folded.append(sid)
+        _C_SHARDS_FOLDED.inc(len(folded))
+        coverage = None
+        if return_coverage or len(folded) < len(sched):
+            coverage = _shard_coverage(view, np.asarray(top_b), sched,
+                                       folded)
+            n_degraded = int(np.count_nonzero(coverage < 1.0))
+            if n_degraded:
+                _C_DEGRADED.inc(n_degraded)
         pad = _padding_entries(top_b, view.bucket_fill, cap=cap,
                                p_pad=min(n_short_aq, cap))
         s1, _, ids1 = _merge_state(state, pad, n_short_aq)
@@ -429,7 +500,32 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
                 n_short_pw=n_short_pw, topk=topk, cfg=cfg, backend=backend,
                 pairs=view.pw.pairs, K=view.K)
             sp.fence(out)
+    if return_coverage:
+        if coverage is None:
+            coverage = np.ones(Q, np.float32)
+        return out[0], out[1], coverage
     return out
+
+
+def _shard_coverage(view, top_b, sched, folded):
+    """(Q,) fraction of each query's relevant scheduled shards that
+    folded. Relevance comes from the per-shard bucket-occupancy bitmaps
+    (a shard with none of the query's probed buckets could not have
+    contributed anyway); a shard quarantined at open has no bitmap and
+    conservatively counts as relevant to every query. Queries with no
+    relevant shard at all get coverage 1.0 — nothing was lost."""
+    Q = top_b.shape[0]
+    total = np.zeros(Q, np.float64)
+    got = np.zeros(Q, np.float64)
+    folded_set = set(folded)
+    for sid in sched:
+        hit = view._bucket_hit.get(sid)
+        rel = np.ones(Q, bool) if hit is None else hit[top_b].any(axis=1)
+        total += rel
+        if sid in folded_set:
+            got += rel
+    return np.where(total > 0, got / np.maximum(total, 1.0),
+                    1.0).astype(np.float32)
 
 
 def _merge_state(state, new, k: int):

@@ -1,23 +1,36 @@
 """Persistent packed-code index subsystem (paper §3.3 at storage scale).
 
     codes.py    PackedCodes: uint8 code container + pack/unpack helpers
-    store.py    on-disk sharded index format (manifest + mmap shards)
-                + ShardedIndexView, the out-of-core reader (pool-staged
-                shards, `core/search.search_sharded` consumes it)
+    store.py    on-disk sharded index format (manifest + mmap shards,
+                per-file checksum sidecars) + ShardedIndexView, the
+                out-of-core reader (pool-staged shards with integrity
+                verification + quarantine, `core/search.search_sharded`
+                consumes it)
     staging.py  StagingPool: shared byte-budgeted device LRU with
-                background prefetch + host cache of assembled shards
+                background prefetch + host cache of assembled shards,
+                transient-read retries, worker resurrection
     builder.py  resumable streaming build driver (shard cursor), with
-                data-axis shard-range ownership for multi-host builds
+                data-axis shard-range ownership for multi-host builds;
+                checksum-failing shards are rewritten at resume
+    faults.py   FaultPlan: seeded deterministic fault injection (read
+                errors, latency, bit flips, worker death) for chaos
+                tests and the CI chaos smoke
+    fsck.py     `python -m repro.index.fsck`: whole-store integrity audit
 
 The layer that turns the kernel path (`kernels/ops`) into a servable
 system: codes live as packed bytes on disk AND in HBM, stores round-trip
-`SearchIndex` bit-identically, and interrupted billion-vector builds
-resume mid-dataset.
+`SearchIndex` bit-identically, interrupted billion-vector builds resume
+mid-dataset, and serving degrades gracefully (skip + coverage, not
+crash) when the storage layer misbehaves.
 """
 from repro.index.builder import (StreamingIndexBuilder,  # noqa: F401
                                  owner_range)
 from repro.index.codes import (CODE_DTYPE, PackedCodes,  # noqa: F401
                                pack_codes, unpack_codes)
+from repro.index.faults import (FaultPlan,  # noqa: F401
+                                TransientReadError, corrupt_file,
+                                parse_chaos)
+from repro.index.fsck import fsck_store  # noqa: F401
 from repro.index.staging import StagingPool  # noqa: F401
 from repro.index.store import (FORMAT_VERSION, IndexStore,  # noqa: F401
-                               ShardedIndexView)
+                               ShardIntegrityError, ShardedIndexView)

@@ -54,7 +54,7 @@ from repro.core import pairwise as pw_mod
 from repro.core.kmeans import kmeans
 from repro.core import rq as rq_mod
 from repro.index.codes import PackedCodes, pack_codes
-from repro.index.store import IndexStore
+from repro.index.store import IndexStore, ShardIntegrityError
 
 # build-progress telemetry: long encode jobs expose how far along they
 # are (and whether a restart resumed mid-build) without log scraping
@@ -63,6 +63,9 @@ _C_SHARDS_SEALED = obs.counter(
 _C_ROWS = obs.counter("build_rows_total", "database rows encoded")
 _C_RESUMES = obs.counter(
     "build_resume_events_total", "builds resumed from a mid-build cursor")
+_C_CORRUPT_RESUME = obs.counter(
+    "build_corrupt_shards_total",
+    "corrupt shards detected at resume and scheduled for rewrite")
 _G_ROWS_PER_S = obs.gauge(
     "build_rows_per_s", "encode throughput over the last sealed shard")
 
@@ -88,7 +91,8 @@ class StreamingIndexBuilder:
 
     def __init__(self, directory, *, shard_size: int = 1 << 16,
                  encode_chunk: int = 4096, backend: str = "auto",
-                 tile_table=None, verbose: bool = False):
+                 tile_table=None, verbose: bool = False,
+                 verify_resume: bool = True):
         if tile_table is not None:
             from repro.kernels import tuning
             tuning.load(tile_table)
@@ -97,6 +101,26 @@ class StreamingIndexBuilder:
         self.encode_chunk = encode_chunk
         self.backend = backend
         self.verbose = verbose
+        self.verify_resume = bool(verify_resume)
+
+    def _shard_intact(self, sid: int) -> bool:
+        """Shard present AND passing its integrity check — the resume
+        notion of "done". A checksum-failing shard is treated exactly
+        like an absent one: the prefix walk stops there (so it gets
+        re-encoded and atomically rewritten) and `_scan_fill` re-derives
+        its assignments instead of bincounting corrupt bytes."""
+        if not self.store.shard_done(sid):
+            return False
+        if not self.verify_resume:
+            return True
+        try:
+            self.store.verify_shard(sid)
+        except ShardIntegrityError as e:
+            _C_CORRUPT_RESUME.inc()
+            self._log(f"resume: shard {sid} failed integrity ({e}); "
+                      f"treating as absent and rewriting")
+            return False
+        return True
 
     def _log(self, msg: str) -> None:
         if self.verbose:
@@ -220,7 +244,7 @@ class StreamingIndexBuilder:
         k_ivf = m["k_ivf"]
         fill = np.zeros(k_ivf, np.int64)
         for sid in range(upto):
-            if self.store.shard_done(sid):
+            if self._shard_intact(sid):
                 fill += np.bincount(self.store.open_shard(sid)["assign"],
                                     minlength=k_ivf)
             else:
@@ -229,11 +253,13 @@ class StreamingIndexBuilder:
 
     def _resume_state(self, xb, cent, lo: int, hi: int, owner: int):
         """(next_shard, fill) for one owner: next = the end of the owner's
-        contiguous on-disk prefix within [lo, hi); fill covers every
+        contiguous on-disk INTACT prefix within [lo, hi) — a shard that
+        fails its checksum counts as absent, so the walk stops there and
+        `build` re-encodes and atomically rewrites it; fill covers every
         shard < next (owned or not). The owner's cursor is the fast path,
         validated against the shards actually on disk (ground truth)."""
         next_sid = lo
-        while next_sid < hi and self.store.shard_done(next_sid):
+        while next_sid < hi and self._shard_intact(next_sid):
             next_sid += 1
         cur = self.store.read_cursor(owner=owner)
         if cur is not None and cur["next_shard"] == next_sid:

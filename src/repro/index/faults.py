@@ -1,0 +1,216 @@
+"""Seeded, deterministic fault injection for the out-of-core stack.
+
+At billion scale the storage layer misbehaves routinely: reads return
+garbage, stall, or fail outright, and background threads die. The
+serving stack's answer (integrity checksums + quarantine in
+`store.py`, retry/worker-resurrection in `staging.py`, skip/deadline
+degradation in `core/search.py`) is only trustworthy if the failure
+paths actually run — so this module gives tests and the chaos CI smoke
+a way to drive them against a perfectly healthy disk.
+
+`FaultPlan` is a pure decision oracle: every fault decision is a hash
+of ``(seed, kind, key, ...)``, so a plan is deterministic across
+processes and thread schedules — two runs with the same seed inject
+the same faults at the same injection points, which is what lets the
+chaos tests assert exact outcomes (and lets a failing chaos run be
+replayed). Injection points live in `ShardedIndexView._host_shard`
+(read latency / transient errors / bit-flip corruption of the
+assembled arrays) and `StagingPool._worker_loop` (prefetch-worker
+death); a view or pool constructed without a plan pays nothing — the
+hooks are a single ``is None`` check.
+
+Fault kinds:
+
+  - **latency spike** — ``time.sleep(latency_s)`` before a shard read;
+    decided per (key, attempt), exercises deadline ejection.
+  - **transient read error** — raises `TransientReadError` (an
+    `OSError`, what a flaky block device surfaces); decided per
+    (key, attempt), so a retry usually clears it. The staging retry
+    path must absorb these with zero result impact.
+  - **bit-flip corruption** — flips one bit in one of the assembled
+    host arrays; decided per key only (PERSISTENT for the run, like
+    real media corruption), so retries cannot clear it and the
+    integrity check must quarantine the shard.
+  - **worker death** — the prefetch worker thread exits mid-queue;
+    decided per job sequence number. The pool must resurrect it and
+    `acquire` must recover the in-flight shard.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import obs
+
+_C_INJECTED = obs.counter(
+    "faults_injected_total",
+    "faults injected by an active FaultPlan (label kind=)")
+
+
+class TransientReadError(OSError):
+    """Injected stand-in for a flaky-device read failure. An `OSError`
+    subclass on purpose: the staging retry policy keys on OSError (what
+    real mmap/file reads raise), never on injection-specific types."""
+
+
+class FaultPlan:
+    """Deterministic fault schedule, keyed by a seed.
+
+    Probabilities are per decision point; a probability of 0 (the
+    default for every kind) makes that kind decision-free. Decisions
+    are pure functions of ``(seed, kind, key, ...)`` — no RNG state —
+    except the per-key read *attempt* counter (so a retry of the same
+    shard is a fresh decision) and the worker-death job sequence, both
+    of which advance deterministically with the call sequence.
+
+    ``read_error_max_per_key`` caps injected read errors per key: with
+    ``p_read_error=1.0, read_error_max_per_key=1`` every shard fails
+    exactly its first read and succeeds on retry — the deterministic
+    way to assert "transient faults are retried away".
+    """
+
+    def __init__(self, seed: int = 0, *, p_read_error: float = 0.0,
+                 read_error_max_per_key: Optional[int] = None,
+                 p_latency: float = 0.0, latency_s: float = 0.002,
+                 p_corrupt: float = 0.0, p_worker_death: float = 0.0):
+        for name, p in (("p_read_error", p_read_error),
+                        ("p_latency", p_latency), ("p_corrupt", p_corrupt),
+                        ("p_worker_death", p_worker_death)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} outside [0, 1]")
+        self.seed = int(seed)
+        self.p_read_error = float(p_read_error)
+        self.read_error_max_per_key = (None if read_error_max_per_key is None
+                                       else int(read_error_max_per_key))
+        self.p_latency = float(p_latency)
+        self.latency_s = float(latency_s)
+        self.p_corrupt = float(p_corrupt)
+        self.p_worker_death = float(p_worker_death)
+        self._lock = threading.Lock()
+        self._attempts: Dict = {}
+        self._read_faults: Dict = {}
+        self._death_seq = 0
+        self.injected: Dict[str, int] = {}       # kind -> count (tests)
+
+    # -- the oracle ----------------------------------------------------------
+
+    def _roll(self, *event) -> float:
+        """Uniform [0, 1) hash of (seed, *event) — the only randomness."""
+        h = hashlib.blake2b(repr((self.seed,) + event).encode(),
+                            digest_size=8).digest()
+        return int.from_bytes(h, "big") / 2.0 ** 64
+
+    def _count(self, kind: str) -> None:
+        with self._lock:
+            self.injected[kind] = self.injected.get(kind, 0) + 1
+        _C_INJECTED.labels(kind=kind).inc()
+
+    # decision predicates, exposed so harnesses can pick seeds that
+    # guarantee a scenario (e.g. "at least one corrupt shard") without
+    # probabilistic flakiness
+    def would_read_error(self, key, attempt: int) -> bool:
+        return (self.p_read_error > 0
+                and self._roll("read_error", key, attempt) < self.p_read_error)
+
+    def corrupts(self, key) -> bool:
+        """Persistent per-key corruption decision (attempt-independent:
+        retries must NOT clear it — that is quarantine's job)."""
+        return (self.p_corrupt > 0
+                and self._roll("corrupt", key) < self.p_corrupt)
+
+    # -- injection points ----------------------------------------------------
+
+    def on_read(self, key) -> None:
+        """One host-side shard read attempt: may sleep (latency spike)
+        and/or raise `TransientReadError`. Called by the staging
+        ``host_fn`` before touching the mmaps."""
+        with self._lock:
+            attempt = self._attempts.get(key, 0)
+            self._attempts[key] = attempt + 1
+            nfail = self._read_faults.get(key, 0)
+        if (self.p_latency > 0
+                and self._roll("latency", key, attempt) < self.p_latency):
+            self._count("latency")
+            time.sleep(self.latency_s)
+        if self.would_read_error(key, attempt):
+            if (self.read_error_max_per_key is None
+                    or nfail < self.read_error_max_per_key):
+                with self._lock:
+                    self._read_faults[key] = nfail + 1
+                self._count("read_error")
+                raise TransientReadError(
+                    f"injected transient read error on {key} "
+                    f"(attempt {attempt})")
+
+    def corrupt_arrays(self, key, arrays: dict) -> dict:
+        """Flip one deterministic bit in one of the host arrays
+        (copies; the originals — and the mmaps behind them — are never
+        touched). Models silent media corruption surfacing through a
+        read: the integrity check must catch it downstream."""
+        names = sorted(arrays)
+        name = names[int(self._roll("corrupt_field", key) * len(names))
+                     % len(names)]
+        a = np.array(arrays[name], copy=True)
+        raw = a.reshape(-1).view(np.uint8)
+        pos = int(self._roll("corrupt_byte", key) * raw.size) % raw.size
+        raw[pos] ^= np.uint8(1 << (int(self._roll("corrupt_bit", key) * 8)
+                                   % 8))
+        self._count("corrupt")
+        out = dict(arrays)
+        out[name] = a
+        return out
+
+    def worker_death(self) -> bool:
+        """One prefetch-worker job pull: True = the worker thread should
+        die now (per job-sequence decision)."""
+        if self.p_worker_death <= 0:
+            return False
+        with self._lock:
+            seq = self._death_seq
+            self._death_seq += 1
+        if self._roll("worker_death", seq) < self.p_worker_death:
+            self._count("worker_death")
+            return True
+        return False
+
+
+def parse_chaos(spec: str) -> FaultPlan:
+    """Build a `FaultPlan` from a CLI spec like
+    ``"p_read_error=0.2,p_corrupt=0.1,latency_s=0.005,seed=7"``.
+    Keys are `FaultPlan` constructor arguments; `seed`,
+    `read_error_max_per_key` parse as ints, the rest as floats."""
+    kv = {}
+    for part in spec.split(","):
+        if not part.strip():
+            continue
+        k, _, v = part.partition("=")
+        k = k.strip()
+        if not v:
+            raise ValueError(f"chaos spec entry {part!r} is not key=value")
+        kv[k] = (int(v) if k in ("seed", "read_error_max_per_key")
+                 else float(v))
+    return FaultPlan(kv.pop("seed", 0), **kv)
+
+
+def corrupt_file(path, *, seed: int = 0, flips: int = 1) -> None:
+    """Flip ``flips`` deterministic bits of an on-disk file in place —
+    the test/chaos-harness way to manufacture a genuinely corrupt shard
+    (fsck / quarantine / resume-rewrite fixtures)."""
+    with open(path, "r+b") as f:
+        f.seek(0, 2)
+        size = f.tell()
+        if size == 0:
+            raise ValueError(f"cannot corrupt empty file {path}")
+        for i in range(flips):
+            h = hashlib.blake2b(repr((seed, i, str(path))).encode(),
+                                digest_size=8).digest()
+            v = int.from_bytes(h, "big")
+            pos, bit = (v >> 3) % size, v & 7
+            f.seek(pos)
+            b = f.read(1)[0]
+            f.seek(pos)
+            f.write(bytes([b ^ (1 << bit)]))

@@ -1,0 +1,124 @@
+"""Store integrity audit: ``python -m repro.index.fsck STORE_DIR``.
+
+Walks one `IndexStore` end to end — manifest, global checkpoint tree,
+every shard (all four per-vector files, sizes always, crc32 when the
+shard has a checksum sidecar), and the resume cursors — and reports
+every problem it finds, naming the exact shard and file. Exit status 0
+means clean (warnings like legacy unchecksummed shards or a stale
+cursor do not fail the audit); 1 means at least one hard error.
+
+This is the offline complement to the serve-time checks: staging only
+verifies the fields it stages (codes/assign/aq_norms, once per
+host-cache fill) and `pw_norms.f32` is only ever touched by shortlist
+row gathers, so a full sweep — including shards a query never probed —
+needs this tool. Run it before blessing a store for serving, after any
+storage incident, and on anything a resumed build just repaired.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.index.store import (IndexStore, ShardIntegrityError,
+                               _SHARD_FIELDS)
+
+
+def fsck_store(store, *, verbose: bool = False, log=print) -> dict:
+    """Audit one store; returns a JSON-able report dict.
+
+    Report keys: ``ok`` (no hard errors), ``errors`` (list of strings,
+    each naming shard/file/reason), ``shards_ok`` / ``shards_corrupt`` /
+    ``shards_missing`` (ids), ``legacy_unchecksummed`` (intact but
+    size-check-only), ``warnings`` (non-fatal findings).
+    """
+    store = store if isinstance(store, IndexStore) else IndexStore(store)
+    report = {"dir": str(store.dir), "ok": True, "errors": [],
+              "warnings": [], "shards_ok": [], "shards_corrupt": [],
+              "shards_missing": [], "legacy_unchecksummed": []}
+
+    def error(msg):
+        report["ok"] = False
+        report["errors"].append(msg)
+        log(f"[fsck] ERROR: {msg}")
+
+    def warn(msg):
+        report["warnings"].append(msg)
+        log(f"[fsck] warning: {msg}")
+
+    try:
+        m = store.manifest
+    except Exception as e:
+        error(f"manifest: {type(e).__name__}: {e}")
+        return report
+    try:
+        store.load_global_tree()
+    except Exception as e:
+        error(f"global tree: {type(e).__name__}: {e}")
+
+    n_shards = m["n_shards"]
+    for sid in range(n_shards):
+        if not store.shard_done(sid):
+            report["shards_missing"].append(sid)
+            if m["complete"]:
+                error(f"shard {sid:05d}: missing from a complete store")
+            continue
+        try:
+            store.verify_shard(sid, fields=list(_SHARD_FIELDS))
+        except ShardIntegrityError as e:
+            report["shards_corrupt"].append(sid)
+            error(str(e))
+            continue
+        report["shards_ok"].append(sid)
+        if store.shard_checksums(sid) is None:
+            report["legacy_unchecksummed"].append(sid)
+        if verbose:
+            log(f"[fsck] shard {sid:05d}: ok")
+    if report["legacy_unchecksummed"]:
+        warn(f"{len(report['legacy_unchecksummed'])} shard(s) predate the "
+             f"checksum sidecar (sizes verified, content not)")
+    if report["shards_missing"] and not m["complete"]:
+        warn(f"store incomplete: {len(report['shards_missing'])} shard(s) "
+             f"not yet built")
+
+    done = set(report["shards_ok"]) | set(report["shards_corrupt"])
+    for path in sorted(store.dir.glob("cursor*.json")):
+        owner = 0 if path.name == "cursor.json" \
+            else int(path.stem.split("_")[1])
+        cur = store.read_cursor(owner=owner)
+        if cur is None:
+            warn(f"{path.name}: unreadable (advisory only; resume will "
+                 f"re-scan)")
+        elif any(s not in done for s in range(cur["next_shard"])):
+            warn(f"{path.name}: next_shard={cur['next_shard']} but an "
+                 f"earlier shard is absent (stale cursor; resume "
+                 f"re-validates against disk)")
+
+    log(f"[fsck] {store.dir}: "
+        f"{len(report['shards_ok'])}/{n_shards} shards ok, "
+        f"{len(report['shards_corrupt'])} corrupt, "
+        f"{len(report['shards_missing'])} missing -> "
+        f"{'CLEAN' if report['ok'] else 'ERRORS'}")
+    return report
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.index.fsck",
+        description="Audit an index store's integrity (sizes + checksums "
+                    "for every shard file; manifest, global tree, cursors).")
+    p.add_argument("store", help="store directory (contains manifest.json)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the full report as JSON on stdout")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="log every shard, not just problems")
+    args = p.parse_args(argv)
+    quiet = (lambda *a, **k: None) if args.json else print
+    report = fsck_store(args.store, verbose=args.verbose, log=quiet)
+    if args.json:
+        print(json.dumps(report, indent=1))
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

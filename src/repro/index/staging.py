@@ -79,6 +79,12 @@ _COUNTERS = {
     "stall_s": obs.counter(
         "staging_stall_seconds_total",
         "time acquire() spent blocked waiting for staging"),
+    "retries": obs.counter(
+        "staging_retries_total",
+        "acquire() stagings retried after a transient (OSError) failure"),
+    "worker_restarts": obs.counter(
+        "staging_worker_restarts_total",
+        "prefetch worker threads resurrected after dying"),
 }
 _G_RESIDENT_BYTES = obs.gauge(
     "staging_resident_bytes", "device bytes currently staged (incl. "
@@ -119,11 +125,26 @@ class StagingPool:
     the historical shard-count LRU semantics hold exactly.
     ``host_cache_bytes`` bounds the host-side cache of assembled arrays
     (``None`` defaults to ``2 * budget_bytes``; ``0`` disables).
+
+    Fault tolerance: a sync `acquire` whose ``host_fn`` (or device_put)
+    raises an `OSError` — a flaky read — retries up to ``retries`` times
+    with capped deterministic exponential backoff (``retry_backoff_s *
+    2**attempt``, capped at 0.25 s; no jitter, so failure schedules are
+    reproducible). Non-OSError failures (notably the persistent
+    `store.ShardIntegrityError`) propagate immediately. Every failure
+    path — sync stage, prefetch issue, worker job — aborts its byte
+    reservation, so the budget never shrinks permanently (regression
+    tested). A prefetch worker that dies is resurrected on the next
+    `prefetch` or on an `acquire` that finds itself waiting behind the
+    dead worker's queue (``staging_worker_restarts_total``). ``faults``
+    takes a `faults.FaultPlan` used ONLY for worker-death injection here
+    (read-path injection lives in the view's ``host_fn``).
     """
 
     def __init__(self, budget_bytes: int, *, max_entries: Optional[int] = None,
                  host_cache_bytes: Optional[int] = None,
-                 prefetch: bool = True):
+                 prefetch: bool = True, retries: int = 2,
+                 retry_backoff_s: float = 0.02, faults=None):
         if budget_bytes < 1:
             raise ValueError("budget_bytes must be >= 1")
         if max_entries is not None and max_entries < 1:
@@ -134,6 +155,9 @@ class StagingPool:
                                  if host_cache_bytes is None
                                  else int(host_cache_bytes))
         self.prefetch_enabled = bool(prefetch)
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self._faults = faults
 
         self._cond = threading.Condition()
         self._lru: "OrderedDict[tuple, _Entry]" = OrderedDict()
@@ -261,8 +285,14 @@ class StagingPool:
     # -- the worker ----------------------------------------------------------
 
     def _ensure_worker(self) -> None:
+        """Start the worker if absent — or resurrect it if it died (the
+        queue, and any jobs still on it, survive the thread). cond held."""
+        if self._worker is not None and not self._worker.is_alive():
+            self._worker = None
+            self._m["worker_restarts"].inc()
         if self._worker is None:
-            self._q = queue.Queue()
+            if self._q is None:
+                self._q = queue.Queue()
             self._worker = threading.Thread(target=self._worker_loop,
                                             daemon=True)
             self._worker.start()
@@ -273,6 +303,15 @@ class StagingPool:
             if job is None:
                 return
             key, host_fn, inf = job
+            if self._faults is not None and self._faults.worker_death():
+                # simulated crash: abort THIS job's reservation (no leaked
+                # bytes) and exit without draining the queue — jobs behind
+                # it stay in flight until `_ensure_worker` resurrects a
+                # worker over the same queue, or the waiting acquire is
+                # notified by the abort and stages synchronously
+                with self._cond:
+                    self._abort(key, inf)
+                return
             try:
                 device = self._transfer(key, host_fn)
             except BaseException:
@@ -302,9 +341,15 @@ class StagingPool:
                 self._m["prefetch_skipped"].inc()
                 return False
             inf = self._begin(key, nbytes)
+            try:
+                self._ensure_worker()       # may spawn/resurrect a thread
+                self._q.put((key, host_fn, inf))
+            except BaseException:
+                # thread spawn can fail under resource pressure: never
+                # leak the reservation made two lines up
+                self._abort(key, inf)
+                raise
             self._m["prefetch_issued"].inc()
-            self._ensure_worker()
-        self._q.put((key, host_fn, inf))
         return True
 
     def acquire(self, key, host_fn: Callable[[], dict], nbytes: int,
@@ -316,47 +361,70 @@ class StagingPool:
         wait time lands in ``stats()['stall_s']``); otherwise it stages
         synchronously on the calling thread (full staging time is the
         stall). A call that cannot make room waits for another thread's
-        `release` rather than over-allocating."""
+        `release` rather than over-allocating.
+
+        A sync stage that fails with an `OSError` (transient read fault)
+        aborts its reservation and retries up to ``self.retries`` times
+        with capped deterministic backoff; any other failure (or retry
+        exhaustion) propagates with the reservation aborted — failure
+        never leaks budget bytes."""
         t0 = time.perf_counter()
         waited_inflight = False
-        with self._cond:
-            while True:
-                entry = self._lru.get(key)
-                if entry is not None:
-                    self._lru.move_to_end(key)
-                    entry.pins += 1
-                    self._m["device_hits"].inc()
-                    if waited_inflight:
-                        self._m["prefetch_hits"].inc()
-                        self._m["stall_s"].inc(time.perf_counter() - t0)
-                    return entry.device
-                if key in self._inflight:
-                    waited_inflight = True
+        attempt = 0
+        while True:
+            with self._cond:
+                while True:
+                    entry = self._lru.get(key)
+                    if entry is not None:
+                        self._lru.move_to_end(key)
+                        entry.pins += 1
+                        self._m["device_hits"].inc()
+                        if waited_inflight:
+                            self._m["prefetch_hits"].inc()
+                            self._m["stall_s"].inc(time.perf_counter() - t0)
+                        return entry.device
+                    if key in self._inflight:
+                        waited_inflight = True
+                        # the in-flight job may sit on the queue of a DEAD
+                        # worker — resurrect it so this wait can end (an
+                        # in-flight sync stage on another thread has no
+                        # worker involvement: only revive, never spawn)
+                        if self._worker is not None:
+                            self._ensure_worker()
+                        if not self._cond.wait(timeout=timeout_s):
+                            raise TimeoutError(
+                                f"staging of {key} did not complete within "
+                                f"{timeout_s}s")
+                        continue
+                    if self._make_room(nbytes):
+                        inf = self._begin(key, nbytes)
+                        break
                     if not self._cond.wait(timeout=timeout_s):
                         raise TimeoutError(
-                            f"staging of {key} did not complete within "
-                            f"{timeout_s}s")
+                            f"no staging budget for {key} within {timeout_s}s "
+                            f"(budget {self.budget_bytes} B all pinned — more "
+                            f"concurrent searchers than budgeted shards?)")
+            try:
+                device = self._transfer(key, host_fn)
+            except BaseException as e:
+                with self._cond:
+                    self._abort(key, inf)
+                # OSError = transient device/read fault -> bounded retry.
+                # ShardIntegrityError is deliberately NOT an OSError:
+                # corrupt bytes don't get better on re-read.
+                if isinstance(e, OSError) and attempt < self.retries:
+                    attempt += 1
+                    self._m["retries"].inc()
+                    time.sleep(min(self.retry_backoff_s
+                                   * (1 << (attempt - 1)), 0.25))
                     continue
-                if self._make_room(nbytes):
-                    inf = self._begin(key, nbytes)
-                    break
-                if not self._cond.wait(timeout=timeout_s):
-                    raise TimeoutError(
-                        f"no staging budget for {key} within {timeout_s}s "
-                        f"(budget {self.budget_bytes} B all pinned — more "
-                        f"concurrent searchers than budgeted shards?)")
-        try:
-            device = self._transfer(key, host_fn)
-        except BaseException:
+                raise
             with self._cond:
-                self._abort(key, inf)
-            raise
-        with self._cond:
-            self._m["staged"].inc()
-            entry = self._install(key, device, inf)
-            entry.pins += 1
-            self._m["stall_s"].inc(time.perf_counter() - t0)
-            return entry.device
+                self._m["staged"].inc()
+                entry = self._install(key, device, inf)
+                entry.pins += 1
+                self._m["stall_s"].inc(time.perf_counter() - t0)
+                return entry.device
 
     def release(self, key) -> None:
         """Unpin one `acquire` of ``key`` (the entry stays LRU-resident)."""

@@ -12,6 +12,9 @@ Layout (format_version 1 — see docs/INDEX_FORMAT.md):
         assign.i32               (rows,)    IVF bucket of each vector
         aq_norms.f32             (rows,)    ||xhat_aq||^2 (w/ centroid)
         pw_norms.f32             (rows,)    ||xhat_pw||^2
+        checksums.json           per-file {crc32, bytes} integrity
+                                 sidecar (optional: absent on legacy
+                                 stores; additive -> no version bump)
 
 Guarantees:
   - `save(index)` -> `load()` round-trips `SearchIndex` exactly: same
@@ -21,7 +24,18 @@ Guarantees:
     order exactly.
   - Shard writes are atomic (tmp dir + rename), so a killed builder never
     leaves a half-written shard behind; shard presence on disk IS the
-    resume cursor ground truth.
+    resume cursor ground truth. Every publish (manifest, cursor, shard)
+    fsyncs the tmp file AND the containing directory before/after the
+    rename, so "atomic" also survives power loss — a torn file can never
+    be published under the final name.
+  - Integrity is checkable at every read tier: `verify_shard` compares
+    sizes (always, derived from the manifest) and crc32 checksums
+    (when the sidecar exists) for on-disk files or in-memory host
+    arrays; a mismatch raises the typed `ShardIntegrityError` and
+    `ShardedIndexView` quarantines the shard (in-memory denylist +
+    `index_quarantined_shards_total`). `python -m repro.index.fsck`
+    audits a whole store. See docs/INDEX_FORMAT.md "Integrity &
+    durability".
   - Reads are mmap-backed (np.memmap): loading touches the code bytes
     once, on the way to the device, with no intermediate parse/copy.
 """
@@ -31,6 +45,7 @@ import dataclasses
 import json
 import os
 import shutil
+import zlib
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
@@ -44,12 +59,23 @@ from repro.configs.qinco2 import QincoConfig
 from repro.index.codes import CODE_DTYPE, PackedCodes, pack_codes
 
 FORMAT_VERSION = 1
+CHECKSUM_FILE = "checksums.json"
+# stdlib zlib.crc32: the environment has no crc32c wheel, and the sidecar
+# records the algorithm name so a future store can switch without a format
+# bump (readers reject unknown algos rather than mis-verify)
+CHECKSUM_ALGO = "crc32"
 
 # shards dropped by probe-aware scheduling, process-wide (each view also
 # keeps its historical per-view `skipped_shards_total` attribute)
 _C_SKIPPED = obs.counter(
     "search_skipped_shards_total",
     "shards skipped by probe-aware scheduling (zero probed buckets)")
+_C_INTEGRITY_FAIL = obs.counter(
+    "index_integrity_failures_total",
+    "shard integrity check failures (size or checksum mismatch)")
+_C_QUARANTINED = obs.counter(
+    "index_quarantined_shards_total",
+    "shards quarantined by a ShardedIndexView after an integrity failure")
 
 # sharded per-vector fields: name -> (file, dtype, trailing shape lambda)
 _SHARD_FIELDS = {
@@ -58,6 +84,60 @@ _SHARD_FIELDS = {
     "aq_norms": ("aq_norms.f32", np.float32),
     "pw_norms": ("pw_norms.f32", np.float32),
 }
+
+
+class ShardIntegrityError(RuntimeError):
+    """A shard failed an integrity check (missing/truncated file or
+    checksum mismatch). Deliberately NOT an OSError: retry policies key
+    on OSError for transient device faults, and integrity failures are
+    persistent — retrying cannot fix corrupt bytes, only quarantine and
+    (at build time) a rewrite can."""
+
+    def __init__(self, shard_id: int, file: str, reason: str):
+        self.shard_id = int(shard_id)
+        self.file = file
+        self.reason = reason
+        super().__init__(f"shard {shard_id:05d}: {file}: {reason}")
+
+
+def _crc_array(arr) -> int:
+    a = np.ascontiguousarray(arr)
+    return zlib.crc32(memoryview(a).cast("B")) & 0xFFFFFFFF
+
+
+def _crc_file(path) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                break
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _fsync_path(path) -> None:
+    """fsync a file or directory by path, best-effort for directories
+    (some platforms/filesystems reject opening or fsyncing a directory —
+    the rename is still atomic there, just not power-loss durable)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _durable_write_text(path, text: str) -> None:
+    """Write + flush + fsync (the caller renames and fsyncs the dir)."""
+    with open(path, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 # ---------------------------------------------------------------------------
@@ -185,8 +265,9 @@ class IndexStore:
 
     def _write_manifest(self, manifest: dict) -> None:
         tmp = self.manifest_path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(manifest, indent=1))
+        _durable_write_text(tmp, json.dumps(manifest, indent=1))
         os.rename(tmp, self.manifest_path)        # atomic publish
+        _fsync_path(self.dir)                     # ...and durable
         self._manifest = manifest
 
     def update_extra(self, **kv) -> None:
@@ -201,6 +282,92 @@ class IndexStore:
 
     def shard_done(self, shard_id: int) -> bool:
         return (self.shard_dir(shard_id) / _SHARD_FIELDS["codes"][0]).exists()
+
+    # -- integrity -----------------------------------------------------------
+
+    def shard_checksums(self, shard_id: int) -> Optional[dict]:
+        """The shard's checksum sidecar, or None on a legacy (pre-sidecar)
+        shard — size checks still apply there, crc checks do not."""
+        path = self.shard_dir(shard_id) / CHECKSUM_FILE
+        try:
+            text = path.read_text()
+        except FileNotFoundError:
+            return None
+        try:
+            cks = json.loads(text)
+        except ValueError:
+            raise self._integrity_fail(shard_id, CHECKSUM_FILE,
+                                       "unparseable sidecar") from None
+        if cks.get("algo") != CHECKSUM_ALGO:
+            raise self._integrity_fail(
+                shard_id, CHECKSUM_FILE,
+                f"unknown checksum algo {cks.get('algo')!r} "
+                f"(this reader verifies {CHECKSUM_ALGO!r})")
+        return cks
+
+    @staticmethod
+    def _integrity_fail(shard_id: int, file: str,
+                        reason: str) -> ShardIntegrityError:
+        _C_INTEGRITY_FAIL.inc()
+        return ShardIntegrityError(shard_id, file, reason)
+
+    def verify_shard(self, shard_id: int, *, arrays: Optional[dict] = None,
+                     fields: Optional[list] = None) -> None:
+        """Raise `ShardIntegrityError` if the shard is missing, truncated,
+        or checksum-mismatched; return silently when intact.
+
+        Expected byte sizes derive from the manifest (rows x itemsize), so
+        truncation is detectable even on legacy stores with no sidecar;
+        crc32 comparison happens whenever the sidecar exists.
+
+        With ``arrays`` (logical field name -> host array) the in-memory
+        bytes are checked instead of the files — that is what catches
+        corruption introduced *between* disk and device (a bad read, an
+        injected bit-flip) at staging-assembly time. ``fields`` restricts
+        the check to a subset (defaults: the arrays' keys, else every
+        field)."""
+        if fields is None:
+            fields = sorted(arrays) if arrays is not None \
+                else list(_SHARD_FIELDS)
+        cks = self.shard_checksums(shard_id)       # may raise (bad sidecar)
+        files = cks["files"] if cks is not None else {}
+        rows = self.shard_rows(shard_id)
+        M = self.manifest["M"]
+        d = self.shard_dir(shard_id)
+        for name in fields:
+            fname, dtype = _SHARD_FIELDS[name]
+            expect = rows * (M if name == "codes" else 1) \
+                * np.dtype(dtype).itemsize
+            rec = files.get(fname)
+            if rec is not None and int(rec["bytes"]) != expect:
+                raise self._integrity_fail(
+                    shard_id, fname, f"sidecar records {rec['bytes']} bytes,"
+                    f" manifest implies {expect}")
+            if arrays is not None:
+                arr = arrays[name]
+                if arr.nbytes != expect:
+                    raise self._integrity_fail(
+                        shard_id, fname, f"host array is {arr.nbytes} "
+                        f"bytes, expected {expect}")
+                if rec is not None and _crc_array(arr) != int(rec["crc32"]):
+                    raise self._integrity_fail(
+                        shard_id, fname, "crc32 mismatch on host array "
+                        "(corrupt read or bit flip)")
+            else:
+                path = d / fname
+                try:
+                    size = path.stat().st_size
+                except OSError:
+                    raise self._integrity_fail(shard_id, fname,
+                                               "missing") from None
+                if size != expect:
+                    raise self._integrity_fail(
+                        shard_id, fname,
+                        f"{size} bytes on disk, expected {expect} "
+                        f"(truncated?)")
+                if rec is not None and _crc_file(path) != int(rec["crc32"]):
+                    raise self._integrity_fail(
+                        shard_id, fname, "crc32 mismatch on disk")
 
     def write_shard(self, shard_id: int, *, codes: PackedCodes, assign,
                     aq_norms, pw_norms) -> None:
@@ -223,11 +390,20 @@ class IndexStore:
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
+        cks = {"algo": CHECKSUM_ALGO, "files": {}}
         for name, arr in arrays.items():
-            arr.tofile(tmp / _SHARD_FIELDS[name][0])
+            fname = _SHARD_FIELDS[name][0]
+            arr.tofile(tmp / fname)
+            _fsync_path(tmp / fname)
+            cks["files"][fname] = {"crc32": _crc_array(arr),
+                                   "bytes": int(arr.nbytes)}
+        _durable_write_text(tmp / CHECKSUM_FILE,
+                            json.dumps(cks, indent=1, sort_keys=True))
+        _fsync_path(tmp)          # dir entries durable before the publish
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_path(final.parent)
 
     def finalize(self) -> None:
         """Flip the manifest to complete once every shard is on disk."""
@@ -261,9 +437,10 @@ class IndexStore:
         re-assignment of absent non-owned ones)."""
         path = self.cursor_path_for(owner)
         tmp = path.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"next_shard": int(next_shard),
-                                   "fill": [int(f) for f in fill]}))
+        _durable_write_text(tmp, json.dumps({"next_shard": int(next_shard),
+                                             "fill": [int(f) for f in fill]}))
         os.rename(tmp, path)
+        _fsync_path(self.dir)
 
     def read_cursor(self, *, owner: int = 0) -> Optional[dict]:
         path = self.cursor_path_for(owner)
@@ -464,6 +641,27 @@ class ShardedIndexView:
     the shards present on disk (ids stay global). Shard 0 must exist —
     its row 0 is the id the resident bucket table pads with.
 
+    Integrity (``verify=True``): the construction-time assignment pass
+    first verifies each shard's `assign.i32` on disk (a corrupt
+    assignment would otherwise silently poison the running bucket fill,
+    and with it every LATER shard's within-bucket ranks); staging then
+    verifies the assembled host arrays (codes/assign/aq_norms) once per
+    host-cache fill inside `_host_shard`. Any failure quarantines the
+    shard: it joins the in-memory ``quarantined`` denylist, bumps
+    `index_quarantined_shards_total`, and `search_sharded` either skips
+    it (``on_shard_error="skip"``, coverage < 1.0) or propagates the
+    `ShardIntegrityError`. `pw_norms.f32` is only read through
+    `gather_rows` and is NOT staged, so its corruption is caught by
+    `repro.index.fsck`, not at serve time. A shard whose assignment is
+    corrupt at open never gets ranks/bitmaps; it is scheduled last and
+    treated as relevant to every query for coverage accounting.
+
+    ``faults`` accepts a `faults.FaultPlan` whose injection points wrap
+    the host-side read (latency spikes, transient `OSError`s, bit-flip
+    corruption of the assembled arrays) and the private pool's prefetch
+    worker (death/resurrection). ``faults=None`` (the default) is
+    zero-cost: a single `is None` test per hook.
+
     mmap lifetime: `open_shard` views are materialized (copied) before
     staging and row gathers copy into fresh host arrays, so nothing
     returned by this class (or cached by the pool) aliases the store
@@ -474,7 +672,8 @@ class ShardedIndexView:
     def __init__(self, store, *, max_resident_shards: int = 2,
                  allow_partial: bool = False, pool=None,
                  host_cache_bytes: Optional[int] = None,
-                 prefetch: bool = True):
+                 prefetch: bool = True, verify: bool = True,
+                 faults=None):
         from repro.core import ivf as ivf_mod
         from repro.core import pairwise as pw_mod
         from repro.index.staging import StagingPool
@@ -516,6 +715,18 @@ class ShardedIndexView:
             codebooks=jnp.asarray(g["pw_codebooks"]), K=self.K)
         self.qinco_params = jax.tree.map(jnp.asarray, g["qinco_params"])
 
+        self.verify = bool(verify)
+        self.faults = faults
+        self.quarantined: set = set()
+        self._open_bad: set = set()    # quarantined at open: no ranks/bitmap
+        if self.verify:
+            for sid in self.shard_ids:
+                try:
+                    self.store.verify_shard(sid, fields=["assign"])
+                except ShardIntegrityError:
+                    self._quarantine(sid)
+                    self._open_bad.add(sid)
+
         # one pass over the assign mmaps: within-bucket ranks + fills,
         # plus each shard's bucket-occupancy bitmap (which buckets have at
         # least one row here — what probe-aware scheduling skips on)
@@ -523,6 +734,8 @@ class ShardedIndexView:
         self._wbr: Dict[int, np.ndarray] = {}
         self._bucket_hit: Dict[int, np.ndarray] = {}
         for sid in self.shard_ids:
+            if sid in self._open_bad:
+                continue
             a = np.asarray(self.store.open_shard(sid)["assign"])
             self._wbr[sid], new_fill = ivf_mod.within_bucket_ranks(
                 a, self.k_ivf, fill)
@@ -540,9 +753,15 @@ class ShardedIndexView:
         self.pool = pool if pool is not None else StagingPool(
             self.max_resident_shards * worst,
             max_entries=self.max_resident_shards,
-            host_cache_bytes=host_cache_bytes, prefetch=prefetch)
+            host_cache_bytes=host_cache_bytes, prefetch=prefetch,
+            faults=faults)
         self._owner = self.pool.register()
         self.skipped_shards_total = 0
+
+    def _quarantine(self, shard_id: int) -> None:
+        if shard_id not in self.quarantined:
+            self.quarantined.add(shard_id)
+            _C_QUARANTINED.inc()
 
     # -- staging through the pool --------------------------------------------
 
@@ -577,15 +796,33 @@ class ShardedIndexView:
         """Assemble one shard's host-side scan arrays (the expensive part
         of staging — mmap read + concatenate + astype; the unit the
         pool's host cache holds on to). Returns fresh arrays only, never
-        mmap views (the pool's no-aliasing contract)."""
+        mmap views (the pool's no-aliasing contract).
+
+        This is also the integrity choke point: with ``verify`` on, the
+        read-back bytes are size- and crc-checked here, i.e. once per
+        host-cache FILL (a cache hit replays already-verified arrays), so
+        steady-state acquires pay nothing. A failure quarantines the
+        shard and raises `ShardIntegrityError` — the pool aborts the
+        reservation and `search_sharded` decides skip-vs-raise."""
+        if self.faults is not None:
+            self.faults.on_read(shard_id)      # may sleep / raise OSError
         sh = self.store.open_shard(shard_id)
-        codes = np.asarray(sh["codes"])
-        assign = np.asarray(sh["assign"])
+        arrays = {"codes": np.asarray(sh["codes"]),
+                  "assign": np.asarray(sh["assign"]),
+                  "aq_norms": np.asarray(sh["aq_norms"])}
+        if self.faults is not None and self.faults.corrupts(shard_id):
+            arrays = self.faults.corrupt_arrays(shard_id, arrays)
+        if self.verify:
+            try:
+                self.store.verify_shard(shard_id, arrays=arrays)
+            except ShardIntegrityError:
+                self._quarantine(shard_id)
+                raise
         ext = np.concatenate(
-            [codes.astype(self._ext_dtype, copy=False),
-             assign.astype(self._ext_dtype)[:, None]], axis=1)
+            [arrays["codes"].astype(self._ext_dtype, copy=False),
+             arrays["assign"].astype(self._ext_dtype)[:, None]], axis=1)
         return {"ext": ext, "wbr": self._wbr[shard_id],
-                "aq_norms": np.asarray(sh["aq_norms"])}
+                "aq_norms": arrays["aq_norms"]}
 
     def acquire(self, shard_id: int) -> dict:
         """Device-staged arrays for one shard, pinned until `release`."""
@@ -599,7 +836,11 @@ class ShardedIndexView:
 
     def prefetch(self, shard_id: int) -> bool:
         """Stage a shard in the background (evict-at-issue; see
-        `staging.StagingPool.prefetch`). Safe to call speculatively."""
+        `staging.StagingPool.prefetch`). Safe to call speculatively.
+        Quarantined shards are refused — re-reading them can only fail
+        the same integrity check again."""
+        if shard_id in self.quarantined:
+            return False
         from functools import partial
         return self.pool.prefetch((self._owner, shard_id),
                                   partial(self._host_shard, shard_id),
@@ -623,15 +864,20 @@ class ShardedIndexView:
         under a tight budget. The merge is keyed by resident-candidate
         rank, so any order is bit-identical."""
         probed = np.unique(np.asarray(probed_buckets).reshape(-1))
-        hit = [s for s in self.shard_ids
-               if bool(self._bucket_hit[s][probed].any())]
-        skipped = len(self.shard_ids) - len(hit)
+        hit = [s for s in self.shard_ids if s not in self._open_bad
+               and bool(self._bucket_hit[s][probed].any())]
+        skipped = len(self.shard_ids) - len(self._open_bad) - len(hit)
         self.skipped_shards_total += skipped      # legacy per-view attr
         if skipped:
             _C_SKIPPED.inc(skipped)
         resident = set(self.resident_shards)
+        # shards quarantined at open have no occupancy bitmap, so they
+        # cannot be probe-skipped: schedule them last — the search loop
+        # raises or skips per its error policy, and coverage accounting
+        # needs to see them as scheduled-but-unusable
         return ([s for s in hit if s in resident]
-                + [s for s in hit if s not in resident])
+                + [s for s in hit if s not in resident]
+                + sorted(self._open_bad))
 
     # -- shortlist row gather (steps 3-4 of the cascade) ---------------------
 

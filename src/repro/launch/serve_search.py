@@ -56,6 +56,10 @@ _C_COMPUTE = obs.counter(
     "service time spent computing (scan + merge + re-rank)")
 _G_OCCUPANCY = obs.gauge(
     "serve_batch_occupancy", "fraction of micro-batch slots used (last)")
+_C_DEGRADED = obs.counter(
+    "serve_degraded_queries_total",
+    "served queries answered with shard coverage < 1.0 (skipped/"
+    "quarantined/deadline-ejected shards)")
 
 
 @dataclasses.dataclass
@@ -74,6 +78,12 @@ class ServeStats:
     # re-rank tail). Resident serving reports stall 0.
     stall_ms: float = 0.0
     compute_ms: float = 0.0
+    # graceful-degradation accounting (out-of-core serving under faults
+    # or deadlines): queries whose shard coverage came back < 1.0, and
+    # the mean per-query coverage over the stream. A clean run reports
+    # 0 / 1.0.
+    degraded_queries: int = 0
+    mean_coverage: float = 1.0
 
     def row(self) -> str:
         return (f"queries={self.n_queries} batches={self.n_batches} "
@@ -81,6 +91,8 @@ class ServeStats:
                 f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
                 f"qps={self.qps:.0f} "
                 f"stall={self.stall_ms:.1f}ms compute={self.compute_ms:.1f}ms "
+                f"degraded={self.degraded_queries} "
+                f"coverage={self.mean_coverage:.3f} "
                 f"(warmup {self.warmup_s:.2f}s)")
 
     def to_json(self, *, staging: Optional[dict] = None) -> str:
@@ -113,19 +125,28 @@ class SearchServer:
     def __init__(self, index, *, micro_batch: int = 32, n_probe: int = 8,
                  n_short_aq: int = 64, n_short_pw: int = 16, topk: int = 10,
                  backend: str = "auto", tile_table=None,
-                 prefetch: bool = True):
+                 prefetch: bool = True, deadline_s: Optional[float] = None,
+                 on_shard_error: str = "raise"):
         if tile_table is not None:
             from repro.kernels import tuning
             tuning.load(tile_table)
         self.index = index
         self.micro_batch = micro_batch
         self.out_of_core = hasattr(index, "gather_rows")
+        # per-query wall-clock budget: a batch whose budget runs out mid-
+        # scan ejects its remaining shards and answers degraded (coverage
+        # < 1.0) instead of stalling the queue behind it. Resident serving
+        # has no shard loop — both knobs are out-of-core only.
+        self.deadline_s = deadline_s
+        self.last_coverage: Optional[np.ndarray] = None
         if self.out_of_core:
             self.d = int(index.centroids.shape[1])
             # prefetched staging is the default serving path: shard s+1
             # stages in the background while s is scanned
             search_fn = partial(search_mod.search_sharded,
-                                prefetch=prefetch)
+                                prefetch=prefetch,
+                                on_shard_error=on_shard_error,
+                                return_coverage=True)
         else:
             self.d = int(index.ivf.centroids.shape[1])
             search_fn = search_mod.search
@@ -133,16 +154,23 @@ class SearchServer:
             search_fn, n_probe=n_probe, n_short_aq=n_short_aq,
             n_short_pw=n_short_pw, topk=topk, cfg=index.cfg, backend=backend)
         t0 = time.perf_counter()
+        # warmup runs with NO deadline: it pays the jit compiles, which
+        # would otherwise eat any realistic per-query budget and warm
+        # nothing
         jax.block_until_ready(
             self._search(index, jnp.zeros((micro_batch, self.d),
                                           jnp.float32)))
         self.warmup_s = time.perf_counter() - t0
 
-    def search_batch(self, q):
+    def search_batch(self, q, *, deadline_s: Optional[float] = None):
         """q: (n <= micro_batch, d) -> (ids (n, topk), dists (n, topk)).
 
         Pads to the fixed micro-batch shape so every call hits the one
-        warmed executable (no stray recompiles at serve time)."""
+        warmed executable (no stray recompiles at serve time).
+        ``deadline_s`` overrides the server's per-query budget for this
+        batch (out-of-core only — it is a host-side argument, so it
+        never triggers a recompile). Per-query coverage of the last
+        batch lands in ``self.last_coverage`` (None for resident)."""
         with obs.span("serve/batch"):
             q = np.asarray(q, np.float32)
             n = q.shape[0]
@@ -157,7 +185,15 @@ class SearchServer:
             # span already fences at exit when tracing; the explicit
             # block stays because serve-time latency accounting needs
             # device-complete timing even with tracing off
-            ids, dists = self._search(self.index, jnp.asarray(q))
+            if self.out_of_core:
+                dl = deadline_s if deadline_s is not None else self.deadline_s
+                kw = {} if dl is None else {"deadline_s": dl}
+                ids, dists, cov = self._search(self.index, jnp.asarray(q),
+                                               **kw)
+                self.last_coverage = np.asarray(cov)[:n]
+            else:
+                ids, dists = self._search(self.index, jnp.asarray(q))
+                self.last_coverage = None
             jax.block_until_ready((ids, dists))
         return np.asarray(ids)[:n], np.asarray(dists)[:n]
 
@@ -179,6 +215,8 @@ class SearchServer:
         occ, batches = [], 0
         clock = 0.0
         service_total = 0.0
+        degraded = 0
+        cov_sum = 0.0
         stall0 = self._staging_stall_s()
         # p50/p99 come from a *windowed* quantile over the process-wide
         # latency histogram: snapshot before, interpolate over the delta
@@ -197,12 +235,27 @@ class SearchServer:
                     j += 1
                 full = j - i == self.micro_batch
                 start = max(t_open, arrival_s[j - 1]) if full else deadline
+            dl = None
+            if self.deadline_s is not None:
+                # remaining per-query budget at dispatch: the oldest query
+                # in the batch has already spent its (virtual-clock)
+                # queueing delay; the shard scan gets what is left
+                dl = max(0.0, self.deadline_s - max(0.0,
+                                                    start - arrival_s[i]))
             t0 = time.perf_counter()
             with obs.query_trace("serve_batch", size=j - i):
-                self.search_batch(queries[i:j])
+                self.search_batch(queries[i:j], deadline_s=dl)
             service = time.perf_counter() - t0
             service_total += service
             clock = start + service
+            if self.last_coverage is not None:
+                d = int(np.count_nonzero(self.last_coverage < 1.0))
+                if d:
+                    degraded += d
+                    _C_DEGRADED.inc(d)
+                cov_sum += float(self.last_coverage.sum())
+            else:
+                cov_sum += j - i
             for k in range(i, j):
                 _H_QUEUE.observe(max(0.0, start - arrival_s[k]))
                 lat_k = clock - arrival_s[k]
@@ -231,7 +284,9 @@ class SearchServer:
             mean_batch_occupancy=float(np.mean(occ)),
             qps=float(n / span),
             stall_ms=stall_s * 1e3,
-            compute_ms=max(0.0, service_total - stall_s) * 1e3)
+            compute_ms=max(0.0, service_total - stall_s) * 1e3,
+            degraded_queries=degraded,
+            mean_coverage=float(cov_sum / max(1, n)))
 
     def _staging_stall_s(self) -> float:
         """Cumulative time search batches spent blocked on shard staging
@@ -294,6 +349,23 @@ def main(argv: Optional[list] = None) -> ServeStats:
     ap.add_argument("--allow-partial", action="store_true",
                     help="serve an incomplete store (completed shards "
                          "only; requires --out-of-core or loads a prefix)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query wall-clock budget: eject remaining "
+                         "shards when it runs out and answer degraded "
+                         "(out-of-core only)")
+    ap.add_argument("--on-shard-error", choices=("raise", "skip"),
+                    default="raise",
+                    help="'skip': serve past failed/quarantined shards "
+                         "with coverage < 1.0 instead of crashing "
+                         "(out-of-core only)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="inject storage faults, e.g. "
+                         "'p_read_error=0.2,p_corrupt=0.1,seed=7' "
+                         "(see repro.index.faults.FaultPlan; "
+                         "out-of-core only)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip shard checksum verification at open and "
+                         "stage time (out-of-core only)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose a Prometheus /metrics + /metrics.json "
                          "scrape endpoint on this port (0 = ephemeral; "
@@ -315,13 +387,17 @@ def main(argv: Optional[list] = None) -> ServeStats:
     if args.trace:
         obs.enable_tracing()
 
-    from repro.index import IndexStore, ShardedIndexView
+    from repro.index import IndexStore, ShardedIndexView, parse_chaos
     if args.out_of_core:
+        faults = parse_chaos(args.chaos) if args.chaos else None
         index = ShardedIndexView(
             args.store, max_resident_shards=args.max_resident_shards,
-            allow_partial=args.allow_partial)
+            allow_partial=args.allow_partial, verify=not args.no_verify,
+            faults=faults)
         print(f"[serve_search] out-of-core: {len(index.shard_ids)} shards "
               f"mmap'd, staging budget {index.budget_bytes / 1e6:.1f} MB")
+        if faults is not None:
+            print(f"[serve_search] chaos: {args.chaos}")
     else:
         index = IndexStore(args.store).load(
             allow_partial=args.allow_partial)
@@ -329,7 +405,10 @@ def main(argv: Optional[list] = None) -> ServeStats:
         index, micro_batch=args.micro_batch, n_probe=args.n_probe,
         n_short_aq=args.n_short_aq, n_short_pw=args.n_short_pw,
         topk=args.topk, backend=args.backend, tile_table=args.tile_table,
-        prefetch=not args.no_prefetch)
+        prefetch=not args.no_prefetch,
+        deadline_s=(None if args.deadline_ms is None
+                    else args.deadline_ms / 1e3),
+        on_shard_error=args.on_shard_error)
     q, arrivals = synthetic_stream(index, args.queries, args.rate)
     stats = server.serve_stream(q, arrivals,
                                 max_wait_s=args.max_wait_ms / 1e3)
@@ -339,7 +418,8 @@ def main(argv: Optional[list] = None) -> ServeStats:
     staging = None
     if args.out_of_core:
         ps = index.pool.stats()
-        staging = dict(ps, skipped_shards=index.skipped_shards_total)
+        staging = dict(ps, skipped_shards=index.skipped_shards_total,
+                       quarantined_shards=len(index.quarantined))
         print(f"[serve_search] staging: staged={ps['staged']} "
               f"device_hits={ps['device_hits']} host_hits={ps['host_hits']} "
               f"prefetch_issued={ps['prefetch_issued']} "

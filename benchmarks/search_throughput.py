@@ -24,10 +24,22 @@ between the two is the latency the pipeline hides. Two more cold rows
 (``out_of_core_cold_verify`` / ``_noverify``) disable the host cache so
 every re-stage reassembles from the mmaps, and report the crc32
 integrity-verification overhead on that worst-case path (informational —
-verify-on is the serving default). `main(json_path=...)`
-writes the rows as machine-readable JSON (`benchmarks/run.py --only
-search` -> BENCH_search.json) so the search perf trajectory is recorded
-per CI run like encode/kernels.
+verify-on is the serving default).
+
+Two network rows (informational) serve the SAME resident index through
+the socket front door (`repro.launch.serve_search.SearchFrontDoor`) and
+drive it with `repro.launch.search_client`: ``net_closed`` is the
+self-throttling baseline (one request in flight — throughput gated by
+round-trip latency, the server never queues), ``net_open`` offers
+Poisson arrivals at ~2x the closed-loop rate, which is the load shape
+that actually exercises continuous batching, the bounded queue and the
+shed/retry path; its ``metrics`` record how many requests were shed and
+retried. qps counts query rows in both, so the framing + admission
+overhead reads directly against the in-process ``resident`` row.
+
+`main(json_path=...)` writes the rows as machine-readable JSON
+(`benchmarks/run.py --only search` -> BENCH_search.json) so the search
+perf trajectory is recorded per CI run like encode/kernels.
 """
 from __future__ import annotations
 
@@ -89,6 +101,46 @@ def _row(mode, n_shards, timed, batch):
     }
 
 
+def _net_rows(idx, batch, reps):
+    """Closed- vs open-loop serving over the socket front door (same
+    resident index, localhost TCP). Informational rows: scripts/
+    check_bench.py gates known (mode, n_shards) keys only."""
+    from repro.launch.search_client import (SearchClient, run_closed_loop,
+                                            run_open_loop)
+    from repro.launch.serve_search import SearchFrontDoor, SearchServer
+    server = SearchServer(idx, micro_batch=batch, **SEARCH_KW)
+    fd = SearchFrontDoor(max_queue=8 * batch, max_wait_s=1e-3)
+    fd.register("default", server)
+    fd.start()
+    try:
+        client = SearchClient("127.0.0.1", fd.port, max_retries=6,
+                              backoff_base_s=5e-3)
+        q = np.asarray(idx.ivf.centroids)[:batch].astype(np.float32)
+        qs = np.concatenate([q] * reps)
+        client.search(q)                              # connection warmup
+        closed = run_closed_loop(client, qs, batch=batch)
+        # offer ~2x what the closed loop achieved: enough pressure to
+        # form a real queue (and shed if the server falls behind),
+        # bounded wall-clock for the bench
+        rate = max(50.0, 2.0 * closed.achieved_qps / batch)
+        opened = run_open_loop(client, qs, rate, batch=batch, seed=0)
+        rows = []
+        for mode, st in (("net_closed", closed), ("net_open", opened)):
+            rows.append({
+                "mode": mode, "n_shards": 1,
+                "qps": st.achieved_qps,
+                "p50_ms": st.p50_ms, "p99_ms": st.p99_ms,
+                "metrics": {"offered_qps": st.offered_qps,
+                            "requests": float(st.n_requests),
+                            "shed": float(st.n_shed),
+                            "retries": float(st.n_retries),
+                            "failed": float(st.n_failed)},
+            })
+        return rows
+    finally:
+        fd.shutdown()
+
+
 def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
         shard_counts=SHARD_COUNTS, reps=10):
     xt, xb, xq, _ = bench_data("bigann", dim=dim, n_db=n_db, n_query=batch,
@@ -103,6 +155,7 @@ def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
     rows = [_row("resident", 1, _time_batches(
         lambda qq: search.search(idx, qq, cfg=cfg, **SEARCH_KW),
         q, reps=reps), batch)]
+    rows.extend(_net_rows(idx, batch, reps))
     for n_shards in shard_counts:
         d = tempfile.mkdtemp(prefix="bench_search_")
         try:

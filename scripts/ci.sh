@@ -209,6 +209,137 @@ finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
 
+# socket front-door smoke: a real server subprocess on an ephemeral port,
+# driven by the chaos client (connection drops + a malformed frame + a
+# vanishing client + an overload burst that sheds), counters asserted over
+# the live /metrics endpoint, then SIGTERM mid-stream -> graceful drain:
+# every accepted query answered exactly once, stats flushed, exit 0
+# (docs/SERVING.md)
+python - <<'PY'
+import json, os, shutil, signal, subprocess, sys, tempfile, threading
+import time, urllib.request
+import numpy as np, jax, jax.numpy as jnp
+from repro import obs
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import FaultPlan, IndexStore
+from repro.launch import transport as tp
+from repro.launch.search_client import (STATUS_VANISHED, SearchClient,
+                                        run_open_loop)
+
+rng = np.random.default_rng(0)
+xb = rng.normal(size=(600, 16)).astype(np.float32)
+cfg = tiny(epochs=1)
+params = training.init_qinco2(jax.random.key(0), xb[:256], cfg)
+idx = search.build_index(jax.random.key(1), jnp.asarray(xb), params, cfg,
+                         k_ivf=8, m_tilde=2, n_pair_books=4)
+d = tempfile.mkdtemp(prefix="ci_socket_smoke_")
+proc = None
+try:
+    IndexStore.save(d, idx, shard_size=256)
+    pf, sj, log = d + "/ports.json", d + "/stats.jsonl", d + "/server.log"
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_search",
+         "--store", d, "--port", "0", "--port-file", pf,
+         "--metrics-port", "0", "--micro-batch", "8",
+         "--max-queue", "16", "--shed-watermark", "0.5",
+         "--max-wait-ms", "1", "--stats-json", sj],
+        stdout=open(log, "w"), stderr=subprocess.STDOUT,
+        env=dict(os.environ, PYTHONPATH="src"))
+    t0 = time.time()
+    while not os.path.exists(pf):                 # warmup compile
+        assert proc.poll() is None, open(log).read()
+        assert time.time() - t0 < 180, "server never bound"
+        time.sleep(0.2)
+    ports = json.load(open(pf))
+    port, murl = ports["port"], f"http://127.0.0.1:{ports['metrics_port']}"
+    assert urllib.request.urlopen(murl + "/healthz").status == 200
+    assert urllib.request.urlopen(murl + "/readyz").status == 200
+
+    q = np.asarray(xb[:1] + 0.01, np.float32)
+    ok_rows = vanished = 0
+
+    # chaos: a connection drop that the retry clears (the dropped frame
+    # was never admitted -> no duplicate), one malformed frame answered
+    # INVALID and survived, one client that vanishes before its reply
+    seed = next(s for s in range(2000)
+                if FaultPlan(s, p_conn_drop=0.5).would_conn_drop(0, 0)
+                and not FaultPlan(s, p_conn_drop=0.5).would_conn_drop(0, 1))
+    fp_drop = FaultPlan(seed, p_conn_drop=0.5)
+    r = SearchClient("127.0.0.1", port, faults=fp_drop,
+                     max_retries=4).search(q, req_key=0)
+    assert r.ok and r.retries == 1, (r.status, r.retries)
+    assert fp_drop.injected.get("conn_drop") == 1
+    ok_rows += 1
+    fp_bad = FaultPlan(0, p_malformed=1.0)
+    r = SearchClient("127.0.0.1", port, faults=fp_bad).search(q, req_key="m")
+    assert r.ok and fp_bad.injected.get("malformed") == 1
+    ok_rows += 1
+    fp_gone = FaultPlan(0, p_client_vanish=1.0)
+    r = SearchClient("127.0.0.1", port, faults=fp_gone).search(q,
+                                                               req_key="v")
+    assert r.status == STATUS_VANISHED
+    vanished += 1
+
+    # overload burst past the watermark: 30 concurrent full-micro-batch
+    # requests (240 rows) against an 8-row queue cap — the aggregate
+    # service time dwarfs the arrival window, so shedding is structural,
+    # not a scheduling accident. Sheds are typed + hinted; retries clear
+    # some; exhausted requests end shed (never admitted, never doubled).
+    q8 = np.repeat(q, 8, axis=0)
+    burst = SearchClient("127.0.0.1", port, max_retries=10,
+                         backoff_base_s=0.02)
+    results = [None] * 30
+    ts = [threading.Thread(target=lambda i=i: results.__setitem__(
+        i, burst.search(q8, req_key=f"b{i}"))) for i in range(30)]
+    for t in ts: t.start()
+    for t in ts: t.join(30)
+    assert all(r is not None for r in results)
+    ok_rows += 8 * sum(1 for r in results if r.ok)
+    assert sum(r.retries for r in results) >= 1, "burst never retried"
+
+    snap = json.loads(urllib.request.urlopen(murl + "/metrics.json").read())
+    sv = lambda name, **kw: obs.series_value(snap, name, **kw)
+    assert sv("transport_conn_aborts_total") >= 1        # the dropped conn
+    assert sv("transport_frame_errors_total") >= 1       # the garbage frame
+    assert sv("frontdoor_shed_total") >= 1, "burst never shed"
+    assert sv("frontdoor_accepted_total", tenant="default") \
+        == sv("frontdoor_answered_total", tenant="default"), \
+        "accepted != answered at quiescence"
+
+    # SIGTERM mid-stream: open-loop load is still arriving when the drain
+    # starts; accepted-before-drain queries are answered, late ones get
+    # UNAVAILABLE / a closed listener, the process exits 0
+    stream = SearchClient("127.0.0.1", port, max_retries=0, timeout_s=10)
+    qs = np.repeat(q, 400, axis=0)
+    box = {}
+    th = threading.Thread(target=lambda: box.update(
+        st=run_open_loop(stream, qs, 300.0, seed=1)))
+    th.start()
+    time.sleep(0.4)
+    proc.send_signal(signal.SIGTERM)
+    assert proc.wait(timeout=60) == 0, open(log).read()
+    th.join(30)
+    ok_rows += int(box["st"].n_ok)
+
+    rec = json.loads(open(sj).read().strip())
+    assert rec["drained_clean"], rec
+    assert rec["n_accepted"] == rec["n_answered"], rec
+    # exactly once, end to end: every accepted query is accounted for by
+    # a client-received OK or the one deliberately vanished client
+    assert rec["n_accepted"] == ok_rows + vanished, (
+        rec["n_accepted"], ok_rows, vanished)
+    assert rec["n_shed"] >= 1 and rec["n_batches"] >= 1, rec
+    print("[ci] socket front-door smoke OK (chaos client survived drops/"
+          "malformed/vanish; shed+retry cleared the burst; SIGTERM drained "
+          f"{rec['n_accepted']} accepted == {rec['n_answered']} answered "
+          "exactly once; exit 0)")
+finally:
+    if proc is not None and proc.poll() is None:
+        proc.kill()
+    shutil.rmtree(d, ignore_errors=True)
+PY
+
 # kernel-backend smoke: xla vs pallas per-op timings for every dispatch op
 # (incl. the fused f_theta / adc_topk paths) -> BENCH_kernels.json, so each
 # CI run leaves a machine-readable perf data point

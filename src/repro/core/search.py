@@ -345,6 +345,7 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
                    cfg: QincoConfig = None, backend: str = "auto",
                    prefetch: bool = True,
                    deadline_s: Optional[float] = None,
+                   t_start_s: Optional[float] = None,
                    on_shard_error: str = "raise",
                    return_coverage: bool = False):
     """Out-of-core cascade over a `ShardedIndexView` — bit-identical
@@ -410,7 +411,15 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
       - ``deadline_s``: a wall-clock budget measured from call entry;
         once exceeded, remaining scheduled shards are ejected unfolded
         (`search_deadline_ejected_shards_total`) and the query answers
-        from what has folded so far.
+        from what has folded so far. ``t_start_s`` (a
+        `time.perf_counter` timestamp) moves the budget's origin before
+        call entry — the serving front door passes each batch's oldest
+        ARRIVAL time, so queueing delay is charged against the same
+        budget the shard loop checks instead of being subtracted by
+        every caller separately. A budget already exhausted at entry
+        (e.g. the queue ate all of it) folds nothing and answers from
+        the synthesized padding with coverage ~0 — degraded, never
+        stalled.
       - ``return_coverage``: returns ``(ids, dists, coverage)`` where
         coverage is (Q,) float32 — for each query, the fraction of its
         *relevant* scheduled shards (shards with at least one probed
@@ -421,7 +430,7 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
     if on_shard_error not in ("raise", "skip"):
         raise ValueError(f"on_shard_error={on_shard_error!r} "
                          f"(expected 'raise' or 'skip')")
-    t_start = time.perf_counter()
+    t_start = time.perf_counter() if t_start_s is None else float(t_start_s)
     cfg = cfg or view.cfg
     q = jnp.asarray(q, jnp.float32)
     cap = view.cap

@@ -34,6 +34,31 @@ Fault kinds:
   - **worker death** — the prefetch worker thread exits mid-queue;
     decided per job sequence number. The pool must resurrect it and
     `acquire` must recover the in-flight shard.
+
+Network fault kinds (injected CLIENT-side by
+`repro.launch.search_client`, exercising the `repro.launch.transport`
+server the way the storage kinds exercise staging — the server must
+survive all four without a crash, a hang, or a duplicate answer):
+
+  - **connection drop** — the client opens a connection, writes part of
+    the request frame, and drops it; the server's reader must discard
+    the truncated frame (`transport_conn_aborts_total`) and the client
+    retries on a fresh connection (the request was never admitted, so
+    the retry cannot duplicate work). Decided per (key, attempt) so a
+    retry usually goes through.
+  - **slow / partial writes** — the request frame is dribbled out in
+    small chunks with sleeps between them; the server's `_recv_exact`
+    loop must reassemble it (partial reads are normal, not errors).
+  - **malformed frame** — a valid length prefix around a garbage
+    payload; the server answers `INVALID_ARGUMENT`
+    (`transport_frame_errors_total`) and closes. Decided per key and
+    NOT retried-away — the client sends the real request as a separate
+    fresh attempt (a malformed frame is a client bug in production,
+    chaos fodder here).
+  - **client vanish** — the full request is sent but the client
+    disconnects without reading the response; the server's write fails
+    (`transport_send_failures_total`) and the query still counts as
+    answered exactly once. Decided per (key, attempt).
 """
 from __future__ import annotations
 
@@ -76,10 +101,17 @@ class FaultPlan:
     def __init__(self, seed: int = 0, *, p_read_error: float = 0.0,
                  read_error_max_per_key: Optional[int] = None,
                  p_latency: float = 0.0, latency_s: float = 0.002,
-                 p_corrupt: float = 0.0, p_worker_death: float = 0.0):
+                 p_corrupt: float = 0.0, p_worker_death: float = 0.0,
+                 p_conn_drop: float = 0.0, p_slow_write: float = 0.0,
+                 slow_write_chunk: int = 64, slow_write_s: float = 0.001,
+                 p_malformed: float = 0.0, p_client_vanish: float = 0.0):
         for name, p in (("p_read_error", p_read_error),
                         ("p_latency", p_latency), ("p_corrupt", p_corrupt),
-                        ("p_worker_death", p_worker_death)):
+                        ("p_worker_death", p_worker_death),
+                        ("p_conn_drop", p_conn_drop),
+                        ("p_slow_write", p_slow_write),
+                        ("p_malformed", p_malformed),
+                        ("p_client_vanish", p_client_vanish)):
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name}={p} outside [0, 1]")
         self.seed = int(seed)
@@ -90,6 +122,12 @@ class FaultPlan:
         self.latency_s = float(latency_s)
         self.p_corrupt = float(p_corrupt)
         self.p_worker_death = float(p_worker_death)
+        self.p_conn_drop = float(p_conn_drop)
+        self.p_slow_write = float(p_slow_write)
+        self.slow_write_chunk = int(slow_write_chunk)
+        self.slow_write_s = float(slow_write_s)
+        self.p_malformed = float(p_malformed)
+        self.p_client_vanish = float(p_client_vanish)
         self._lock = threading.Lock()
         self._attempts: Dict = {}
         self._read_faults: Dict = {}
@@ -164,6 +202,54 @@ class FaultPlan:
         out[name] = a
         return out
 
+    # -- network kinds (client-side injection; see module docstring) ---------
+    # Pure decision predicates + counting: the *mechanics* (partial
+    # writes, socket closes) live in `repro.launch.search_client`, which
+    # calls these per request attempt. Exposed as predicates for the same
+    # reason as `would_read_error`: harnesses pick seeds that GUARANTEE a
+    # scenario (">= 1 malformed frame") instead of hoping.
+
+    def would_conn_drop(self, key, attempt: int) -> bool:
+        return (self.p_conn_drop > 0
+                and self._roll("conn_drop", key, attempt) < self.p_conn_drop)
+
+    def conn_drop(self, key, attempt: int) -> bool:
+        if self.would_conn_drop(key, attempt):
+            self._count("conn_drop")
+            return True
+        return False
+
+    def slow_write(self, key, attempt: int) -> bool:
+        if (self.p_slow_write > 0
+                and self._roll("slow_write", key, attempt)
+                < self.p_slow_write):
+            self._count("slow_write")
+            return True
+        return False
+
+    def would_malform(self, key) -> bool:
+        """Per key only (one garbage frame per request, not per retry —
+        a malformed frame is not something a retry policy clears)."""
+        return (self.p_malformed > 0
+                and self._roll("malformed", key) < self.p_malformed)
+
+    def malformed(self, key) -> bool:
+        if self.would_malform(key):
+            self._count("malformed")
+            return True
+        return False
+
+    def would_client_vanish(self, key, attempt: int) -> bool:
+        return (self.p_client_vanish > 0
+                and self._roll("client_vanish", key, attempt)
+                < self.p_client_vanish)
+
+    def client_vanish(self, key, attempt: int) -> bool:
+        if self.would_client_vanish(key, attempt):
+            self._count("client_vanish")
+            return True
+        return False
+
     def worker_death(self) -> bool:
         """One prefetch-worker job pull: True = the worker thread should
         die now (per job-sequence decision)."""
@@ -191,7 +277,8 @@ def parse_chaos(spec: str) -> FaultPlan:
         k = k.strip()
         if not v:
             raise ValueError(f"chaos spec entry {part!r} is not key=value")
-        kv[k] = (int(v) if k in ("seed", "read_error_max_per_key")
+        kv[k] = (int(v) if k in ("seed", "read_error_max_per_key",
+                                 "slow_write_chunk")
                  else float(v))
     return FaultPlan(kv.pop("seed", 0), **kv)
 

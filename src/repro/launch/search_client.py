@@ -1,0 +1,457 @@
+"""Framed-TCP search client: typed retries, open-loop load, chaos.
+
+The client half of the docs/SERVING.md wire contract. Three jobs:
+
+  - **A correct retry policy.** `SearchClient.search` retries ONLY
+    transient conditions: `RESOURCE_EXHAUSTED` (shed) and `UNAVAILABLE`
+    (draining) replies — honoring the server's ``retry_after_ms`` hint,
+    else capped exponential backoff — plus transport failures where the
+    request frame provably never finished sending (the server admits a
+    request only after decoding the FULL frame, so a mid-send failure
+    cannot have been admitted and a retry cannot duplicate work).
+    `INVALID_ARGUMENT` / `NOT_FOUND` / `INTEGRITY_ERROR` / `INTERNAL`
+    return immediately: retrying a persistent failure re-runs it
+    (the same rule the storage layer applies to corrupt shards). A
+    connection that dies AFTER the frame was fully written is returned
+    as ``TRANSPORT_ERROR`` without retry — the server may have admitted
+    it, and exactly-once answering beats at-least-once guessing.
+  - **Open-loop load.** `run_open_loop` fires requests at Poisson
+    arrival times regardless of completions (one thread + connection
+    per in-flight request), which is what actually exercises shedding:
+    a closed loop self-throttles when the server slows down and can
+    never drive the queue past the watermark. `run_closed_loop` is the
+    self-throttling baseline the benchmark compares against.
+  - **Chaos.** With a `FaultPlan` (`repro.index.faults`), each request
+    attempt may be perturbed by the four network fault kinds — connection
+    drop mid-frame, slow/partial writes, one malformed frame, client
+    vanishing before the response — driving the server's transport
+    robustness paths deterministically (same seed, same faults).
+
+Every request attempt uses its own TCP connection (connect / send /
+recv / close): response demultiplexing is the server's per-connection
+write lock, concurrency is threads, and chaos teardown never poisons a
+shared socket.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import socket
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro import obs
+from repro.launch import transport as tp
+
+_C_REQS = obs.counter("client_requests_total",
+                      "client requests completed (label status=)")
+_C_RETRIES = obs.counter(
+    "client_retries_total",
+    "request attempts retried (shed/unavailable/mid-send failures)")
+_C_CHAOS = obs.counter(
+    "client_chaos_injected_total",
+    "network faults the chaos client injected (label kind=)")
+
+#: client-side statuses for outcomes that never got a server reply
+STATUS_TRANSPORT = "TRANSPORT_ERROR"     # conn died after full send
+STATUS_VANISHED = "CLIENT_VANISHED"      # chaos: left before the reply
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """One request's outcome. ``status`` is a `tp.STATUS_*` value or a
+    client-side `STATUS_*`; ids/dists/coverage are set iff OK."""
+    status: str
+    ids: Optional[np.ndarray] = None
+    dists: Optional[np.ndarray] = None
+    coverage: Optional[np.ndarray] = None
+    attempts: int = 1
+    retries: int = 0
+    latency_s: float = 0.0
+    retry_after_ms: Optional[float] = None
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == tp.STATUS_OK
+
+
+class _MidSendFailure(Exception):
+    """The connection died before the request frame finished sending:
+    the server cannot have admitted the request, so a retry is safe."""
+
+
+class SearchClient:
+    """Client for one `SearchFrontDoor` endpoint (thread-safe: every
+    attempt opens its own connection; shared state is counters)."""
+
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0,
+                 max_retries: int = 5, backoff_base_s: float = 0.01,
+                 backoff_cap_s: float = 0.5,
+                 faults=None):
+        self.host, self.port = host, int(port)
+        self.timeout_s = float(timeout_s)
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.faults = faults
+        self._id_lock = threading.Lock()
+        self._next_id = 0
+
+    def _req_id(self) -> int:
+        with self._id_lock:
+            self._next_id += 1
+            return self._next_id
+
+    def _connect(self) -> socket.socket:
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.timeout_s)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    # -- chaos mechanics (decisions come from the FaultPlan oracle) ----------
+
+    def _chaos_count(self, kind: str) -> None:
+        _C_CHAOS.labels(kind=kind).inc()
+
+    def _send_maybe_chaotic(self, sock: socket.socket, frame: bytes,
+                            key, attempt: int) -> None:
+        """Write the request frame, possibly perturbed: dropped partway
+        (raises `_MidSendFailure` — the retryable kind) or dribbled out
+        in small chunks (the server must reassemble)."""
+        fp = self.faults
+        if fp is not None and fp.conn_drop(key, attempt):
+            self._chaos_count("conn_drop")
+            cut = max(1, len(frame) // 2)
+            try:
+                sock.sendall(frame[:cut])
+            finally:
+                sock.close()
+            raise _MidSendFailure(f"injected connection drop after "
+                                  f"{cut}/{len(frame)} bytes")
+        if fp is not None and fp.slow_write(key, attempt):
+            self._chaos_count("slow_write")
+            step = max(1, fp.slow_write_chunk)
+            for i in range(0, len(frame), step):
+                sock.sendall(frame[i:i + step])
+                time.sleep(fp.slow_write_s)
+            return
+        try:
+            sock.sendall(frame)
+        except (ConnectionError, OSError) as e:
+            # sendall gives no byte count on failure; a frame that fits
+            # the socket buffer is accepted atomically, so a raising
+            # sendall means the kernel rejected the tail mid-write —
+            # the frame did not fully reach the server
+            raise _MidSendFailure(str(e)) from e
+
+    def _send_malformed(self, key) -> None:
+        """One garbage frame on its own connection (a valid length
+        prefix around undecodable payload): the server must answer
+        `INVALID_ARGUMENT` and close without crashing."""
+        self._chaos_count("malformed")
+        sock = self._connect()
+        try:
+            garbage = b"\xff\x00garbage-not-json" * 3
+            sock.sendall(tp._U32.pack(len(garbage)) + garbage)
+            try:
+                reply = tp.recv_frame(sock)       # best-effort: the typed
+            except tp.FrameError:                 # error, or the close
+                reply = None
+            if reply is not None:
+                assert reply[0].get("status") == tp.STATUS_INVALID
+        finally:
+            sock.close()
+
+    # -- the request path ----------------------------------------------------
+
+    def ping(self) -> dict:
+        sock = self._connect()
+        try:
+            tp.send_frame(sock, {"id": self._req_id(), "op": "ping"})
+            header, _ = tp.recv_frame(sock)
+            return header
+        finally:
+            sock.close()
+
+    def search(self, q, *, tenant: str = "default",
+               deadline_ms: Optional[float] = None,
+               req_key=None) -> SearchResult:
+        """One search request (``q``: (n, d) float32) with typed
+        retries. ``req_key`` seeds the chaos oracle (defaults to the
+        request id, so two clients with the same FaultPlan seed AND the
+        same keys inject identical faults)."""
+        q = np.ascontiguousarray(np.asarray(q, np.float32))
+        if q.ndim == 1:
+            q = q[None, :]
+        rid = self._req_id()
+        key = rid if req_key is None else req_key
+        header = {"id": rid, "op": "search", "tenant": tenant,
+                  "n": int(q.shape[0]), "d": int(q.shape[1])}
+        if deadline_ms is not None:
+            header["deadline_ms"] = float(deadline_ms)
+        frame = tp.encode_frame(header, q.astype("<f4").tobytes())
+        if self.faults is not None and self.faults.malformed(key):
+            self._send_malformed(key)
+        t0 = time.perf_counter()
+        retries = 0
+        hint: Optional[float] = None
+        last: Optional[SearchResult] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt > 0:
+                _C_RETRIES.inc()
+                retries += 1
+                backoff = min(self.backoff_cap_s,
+                              self.backoff_base_s * (2 ** (attempt - 1)))
+                if hint is not None:
+                    backoff = min(self.backoff_cap_s, hint / 1e3)
+                time.sleep(backoff)
+            try:
+                res = self._attempt(frame, key, attempt)
+            except _MidSendFailure:
+                continue                          # provably not admitted
+            except OSError as e:
+                # connect refused/timed out: nothing reached the server,
+                # retrying is safe (recv-side failures never raise OSError
+                # here — they return TRANSPORT_ERROR results)
+                last = SearchResult(status=STATUS_TRANSPORT, error=str(e))
+                continue
+            if res.status in tp.RETRYABLE_STATUSES:
+                hint = res.retry_after_ms
+                last = res
+                continue
+            res.attempts, res.retries = attempt + 1, retries
+            res.latency_s = time.perf_counter() - t0
+            _C_REQS.labels(status=res.status).inc()
+            return res
+        # retries exhausted: hand back the last transient rejection
+        out = last if last is not None else SearchResult(
+            status=STATUS_TRANSPORT, error="mid-send failures exhausted "
+                                           "retry budget")
+        out.attempts, out.retries = self.max_retries + 1, retries
+        out.latency_s = time.perf_counter() - t0
+        _C_REQS.labels(status=out.status).inc()
+        return out
+
+    def _attempt(self, frame: bytes, key, attempt: int) -> SearchResult:
+        sock = self._connect()
+        vanish = (self.faults is not None
+                  and self.faults.client_vanish(key, attempt))
+        try:
+            self._send_maybe_chaotic(sock, frame, key, attempt)
+            if vanish:
+                # the full request went out; leave before the answer.
+                # NO retry: the server admitted it and will answer it
+                # exactly once (into a dead socket).
+                self._chaos_count("client_vanish")
+                return SearchResult(status=STATUS_VANISHED)
+            try:
+                reply = tp.recv_frame(sock)
+            except tp.FrameError as e:
+                return SearchResult(status=STATUS_TRANSPORT, error=str(e))
+            if reply is None:
+                return SearchResult(status=STATUS_TRANSPORT,
+                                    error="connection closed before reply")
+            header, body = reply
+            return self._parse_reply(header, body)
+        finally:
+            sock.close()
+
+    @staticmethod
+    def _parse_reply(header: dict, body: bytes) -> SearchResult:
+        status = header.get("status", tp.STATUS_INTERNAL)
+        if status != tp.STATUS_OK:
+            ra = header.get("retry_after_ms")
+            return SearchResult(status=status,
+                                retry_after_ms=(float(ra) if ra is not None
+                                                else None),
+                                error=header.get("error"))
+        n, topk = int(header["n"]), int(header["topk"])
+        ids = np.frombuffer(body, "<i4", count=n * topk).reshape(n, topk)
+        off = n * topk * 4
+        dists = np.frombuffer(body, "<f4", count=n * topk,
+                              offset=off).reshape(n, topk)
+        cov = None
+        if header.get("has_coverage"):
+            cov = np.frombuffer(body, "<f4", count=n,
+                                offset=off + n * topk * 4)
+        return SearchResult(status=tp.STATUS_OK, ids=ids.copy(),
+                            dists=dists.copy(),
+                            coverage=None if cov is None else cov.copy())
+
+
+# ---------------------------------------------------------------------------
+# load generation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoadStats:
+    """Outcome of one load run (`run_open_loop` / `run_closed_loop`)."""
+    mode: str                      # "open" | "closed"
+    n_requests: int
+    n_ok: int
+    n_shed: int                    # transient rejections seen (pre-retry)
+    n_failed: int                  # non-OK final outcomes
+    n_retries: int
+    offered_qps: float
+    achieved_qps: float            # OK responses / wall-clock
+    p50_ms: float
+    p99_ms: float
+    mean_coverage: float
+
+    def row(self) -> str:
+        return (f"mode={self.mode} requests={self.n_requests} "
+                f"ok={self.n_ok} shed={self.n_shed} failed={self.n_failed} "
+                f"retries={self.n_retries} offered={self.offered_qps:.0f}qps "
+                f"achieved={self.achieved_qps:.0f}qps "
+                f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
+                f"coverage={self.mean_coverage:.3f}")
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+
+def _summarize(mode: str, results, span_s: float,
+               offered_qps: float) -> LoadStats:
+    """qps figures count query ROWS (not requests), so closed- and
+    open-loop rows in BENCH_search.json are comparable to the
+    in-process serving rows whatever the request batch size."""
+    ok = [r for r in results if r.ok]
+    ok_rows = sum(int(r.ids.shape[0]) for r in ok)
+    lats = np.asarray([r.latency_s for r in ok]) if ok else np.zeros(1)
+    covs = [float(r.coverage.mean()) for r in ok if r.coverage is not None]
+    return LoadStats(
+        mode=mode, n_requests=len(results), n_ok=len(ok),
+        n_shed=sum(1 for r in results
+                   if r.status in tp.RETRYABLE_STATUSES or r.retries),
+        n_failed=sum(1 for r in results if not r.ok),
+        n_retries=sum(r.retries for r in results),
+        offered_qps=offered_qps,
+        achieved_qps=ok_rows / max(span_s, 1e-9),
+        p50_ms=float(np.percentile(lats, 50)) * 1e3,
+        p99_ms=float(np.percentile(lats, 99)) * 1e3,
+        mean_coverage=float(np.mean(covs)) if covs else 1.0)
+
+
+def run_closed_loop(client: SearchClient, queries, *,
+                    tenant: str = "default",
+                    deadline_ms: Optional[float] = None,
+                    batch: int = 1) -> LoadStats:
+    """Back-to-back requests, one in flight: the classic self-throttling
+    load — throughput is gated by (latency x 1), the server never sees a
+    queue, and shedding never triggers. The baseline the open-loop rows
+    in BENCH_search.json are compared against."""
+    queries = np.asarray(queries, np.float32)
+    results = []
+    t0 = time.perf_counter()
+    for i in range(0, len(queries), batch):
+        results.append(client.search(queries[i:i + batch], tenant=tenant,
+                                     deadline_ms=deadline_ms, req_key=i))
+    span = time.perf_counter() - t0
+    stats = _summarize("closed", results, span, offered_qps=0.0)
+    stats.offered_qps = stats.achieved_qps     # closed loop: self-paced
+    return stats
+
+
+def run_open_loop(client: SearchClient, queries, rate_qps: float, *,
+                  tenant: str = "default",
+                  deadline_ms: Optional[float] = None,
+                  batch: int = 1, seed: int = 0,
+                  max_in_flight: int = 64) -> LoadStats:
+    """Poisson arrivals at ``rate_qps`` (per REQUEST), fired regardless
+    of completions — arrivals do not wait for responses, so when the
+    server falls behind the queue genuinely builds and the watermark /
+    quota / retry machinery actually runs. ``max_in_flight`` bounds
+    client-side threads (a full client is itself backpressure — counted
+    arrivals just coalesce onto the next free slot)."""
+    queries = np.asarray(queries, np.float32)
+    rng = np.random.default_rng(seed)
+    n_reqs = (len(queries) + batch - 1) // batch
+    gaps = rng.exponential(1.0 / rate_qps, size=n_reqs)
+    arrivals = np.cumsum(gaps)
+    results = [None] * n_reqs
+    sem = threading.Semaphore(max_in_flight)
+
+    def fire(i, lo):
+        try:
+            results[i] = client.search(
+                queries[lo:lo + batch], tenant=tenant,
+                deadline_ms=deadline_ms, req_key=i)
+        finally:
+            sem.release()
+
+    threads = []
+    t0 = time.perf_counter()
+    for i in range(n_reqs):
+        delay = arrivals[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        sem.acquire()
+        th = threading.Thread(target=fire, args=(i, i * batch), daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=client.timeout_s)
+    span = time.perf_counter() - t0
+    results = [r if r is not None
+               else SearchResult(status=STATUS_TRANSPORT, error="no result")
+               for r in results]
+    return _summarize("open", results, span,
+                      offered_qps=rate_qps * batch)
+
+
+def main(argv: Optional[list] = None) -> LoadStats:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--mode", choices=("open", "closed"), default="closed")
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="query rows per request")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="offered request rate (open loop)")
+    ap.add_argument("--tenant", default="default")
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--max-retries", type=int, default=5)
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="network fault spec, e.g. 'p_conn_drop=0.2,"
+                         "p_malformed=0.05,seed=7' (repro.index.faults)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats-json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    faults = None
+    if args.chaos:
+        from repro.index.faults import parse_chaos
+        faults = parse_chaos(args.chaos)
+    client = SearchClient(args.host, args.port,
+                          max_retries=args.max_retries, faults=faults)
+    pong = client.ping()
+    tinfo = pong["tenants"].get(args.tenant)
+    if tinfo is None:
+        raise SystemExit(f"tenant {args.tenant!r} not served "
+                         f"(have: {list(pong['tenants'])})")
+    rng = np.random.default_rng(args.seed)
+    q = rng.normal(size=(args.queries, tinfo["d"])).astype(np.float32)
+    if args.mode == "open":
+        stats = run_open_loop(client, q, args.rate, tenant=args.tenant,
+                              deadline_ms=args.deadline_ms,
+                              batch=args.batch, seed=args.seed)
+    else:
+        stats = run_closed_loop(client, q, tenant=args.tenant,
+                                deadline_ms=args.deadline_ms,
+                                batch=args.batch)
+    print(f"[search_client] {stats.row()}")
+    if args.stats_json:
+        with open(args.stats_json, "a") as f:
+            f.write(stats.to_json() + "\n")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import signal
+import threading
 import time
 from functools import partial
 from typing import Optional
@@ -162,14 +164,19 @@ class SearchServer:
                                           jnp.float32)))
         self.warmup_s = time.perf_counter() - t0
 
-    def search_batch(self, q, *, deadline_s: Optional[float] = None):
+    def search_batch(self, q, *, deadline_s: Optional[float] = None,
+                     t_start_s: Optional[float] = None):
         """q: (n <= micro_batch, d) -> (ids (n, topk), dists (n, topk)).
 
         Pads to the fixed micro-batch shape so every call hits the one
         warmed executable (no stray recompiles at serve time).
         ``deadline_s`` overrides the server's per-query budget for this
         batch (out-of-core only — it is a host-side argument, so it
-        never triggers a recompile). Per-query coverage of the last
+        never triggers a recompile); ``t_start_s`` moves the budget's
+        origin to an earlier `time.perf_counter` timestamp (the front
+        door passes the batch's arrival time, so queueing delay is
+        charged against the same budget — the `search_sharded`
+        remaining-budget machinery). Per-query coverage of the last
         batch lands in ``self.last_coverage`` (None for resident)."""
         with obs.span("serve/batch"):
             q = np.asarray(q, np.float32)
@@ -188,6 +195,8 @@ class SearchServer:
             if self.out_of_core:
                 dl = deadline_s if deadline_s is not None else self.deadline_s
                 kw = {} if dl is None else {"deadline_s": dl}
+                if dl is not None and t_start_s is not None:
+                    kw["t_start_s"] = t_start_s
                 ids, dists, cov = self._search(self.index, jnp.asarray(q),
                                                **kw)
                 self.last_coverage = np.asarray(cov)[:n]
@@ -212,6 +221,13 @@ class SearchServer:
         queries = np.asarray(queries, np.float32)
         arrival_s = np.asarray(arrival_s, np.float64)
         n = len(queries)
+        if n == 0:
+            # empty stream: a zeroed record, not an IndexError on
+            # arrival_s[0] (regression: tests/test_transport.py)
+            return ServeStats(n_queries=0, n_batches=0,
+                              warmup_s=self.warmup_s, p50_ms=0.0,
+                              p99_ms=0.0, mean_batch_occupancy=0.0,
+                              qps=0.0)
         occ, batches = [], 0
         clock = 0.0
         service_total = 0.0
@@ -323,7 +339,635 @@ def synthetic_stream(index, n_queries: int, rate_qps: float, *,
     return q.astype(np.float32), arrivals
 
 
-def main(argv: Optional[list] = None) -> ServeStats:
+# ---------------------------------------------------------------------------
+# The network front door: real transport + continuous-batching admission
+# ---------------------------------------------------------------------------
+
+# Front-door telemetry (docs/SERVING.md, docs/OBSERVABILITY.md). Latency/
+# queue histograms and the accepted/answered/shed counters carry a
+# `tenant=` label (one child series per registered store/view); the
+# unlabeled default series aggregates across tenants and feeds
+# `FrontDoorStats` percentiles.
+_G_FD_DEPTH = obs.gauge(
+    "frontdoor_queue_depth",
+    "admitted queries awaiting dispatch (unlabeled = global, "
+    "tenant= children = per tenant)")
+_G_FD_READY = obs.gauge(
+    "frontdoor_ready", "1 while accepting, 0 while draining/stopped")
+_C_FD_ACCEPTED = obs.counter(
+    "frontdoor_accepted_total", "queries admitted to the batch queue")
+_C_FD_ANSWERED = obs.counter(
+    "frontdoor_answered_total",
+    "admitted queries answered (response dispatched, whether or not the "
+    "client was still there to read it)")
+_C_FD_SHED = obs.counter(
+    "frontdoor_shed_total",
+    "queries rejected RESOURCE_EXHAUSTED (queue watermark / tenant quota)")
+_C_FD_REJECTED = obs.counter(
+    "frontdoor_rejected_total",
+    "requests rejected before admission (label reason=invalid|not_found|"
+    "unavailable)")
+_C_FD_DRAINED = obs.counter(
+    "frontdoor_drained_queries_total",
+    "queries answered during graceful drain (accepted before shutdown)")
+_C_FD_BATCHES = obs.counter(
+    "frontdoor_batches_total", "continuous micro-batches dispatched")
+_H_FD_LATENCY = obs.histogram(
+    "frontdoor_latency_seconds",
+    "admission -> response-dispatched latency (label tenant=)")
+_H_FD_QUEUE = obs.histogram(
+    "frontdoor_queue_seconds",
+    "admission -> batch-dispatch queueing delay (label tenant=)")
+_G_FD_OCC = obs.gauge(
+    "frontdoor_batch_occupancy",
+    "fraction of micro-batch slots used by the last dispatched batch")
+
+
+class _PendingRequest:
+    """One admitted search request (1..micro_batch query rows) waiting in
+    a tenant's queue for the forming micro-batch."""
+
+    __slots__ = ("conn", "req_id", "q", "n", "arrival", "deadline_s")
+
+    def __init__(self, conn, req_id, q, arrival, deadline_s):
+        self.conn = conn
+        self.req_id = req_id
+        self.q = q
+        self.n = q.shape[0]
+        self.arrival = arrival
+        self.deadline_s = deadline_s
+
+
+class _Tenant:
+    """One registered store/view: a warmed `SearchServer` executable, a
+    pending-request queue, and a queued-row quota."""
+
+    def __init__(self, name: str, server: SearchServer, quota: int):
+        import collections
+        self.name = name
+        self.server = server
+        self.quota = quota
+        self.pending = collections.deque()
+        self.queued = 0                       # rows, not requests
+        self.accepted = 0
+        self.answered = 0
+        self.shed = 0
+        self.g_depth = _G_FD_DEPTH.labels(tenant=name)
+        self.c_accepted = _C_FD_ACCEPTED.labels(tenant=name)
+        self.c_answered = _C_FD_ANSWERED.labels(tenant=name)
+        self.c_shed = _C_FD_SHED.labels(tenant=name)
+        self.h_latency = _H_FD_LATENCY.labels(tenant=name)
+        self.h_queue = _H_FD_QUEUE.labels(tenant=name)
+
+    def formed_rows(self, mb: int):
+        """(rows that would dispatch now, batch-is-full) without popping:
+        leading requests that fit in ``mb`` rows, never splitting a
+        request across batches (each response frame answers one request
+        exactly once)."""
+        rows = 0
+        for r in self.pending:
+            if rows + r.n > mb:
+                return rows, True              # next request doesn't fit
+            rows += r.n
+            if rows == mb:
+                return rows, True
+        return rows, False
+
+
+@dataclasses.dataclass
+class FrontDoorStats:
+    """Lifetime totals of one `SearchFrontDoor` (the socket-serving
+    analogue of `ServeStats`; written as the ``--stats-json`` line).
+    Every *accepted* query is eventually *answered* — the drain
+    invariant CI asserts (`accepted == answered`)."""
+    n_accepted: int
+    n_answered: int
+    n_shed: int
+    n_rejected: int
+    n_drained: int
+    n_batches: int
+    p50_ms: float
+    p99_ms: float
+    mean_batch_occupancy: float
+    qps: float                     # answered / serving wall-clock
+    drained_clean: bool            # shutdown finished with an empty queue
+    per_tenant: dict = dataclasses.field(default_factory=dict)
+
+    def row(self) -> str:
+        return (f"accepted={self.n_accepted} answered={self.n_answered} "
+                f"shed={self.n_shed} rejected={self.n_rejected} "
+                f"drained={self.n_drained} batches={self.n_batches} "
+                f"occupancy={self.mean_batch_occupancy:.2f} "
+                f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
+                f"qps={self.qps:.0f} clean_drain={self.drained_clean}")
+
+    def to_json(self, *, staging: Optional[dict] = None) -> str:
+        rec = dataclasses.asdict(self)
+        if staging is not None:
+            rec["staging"] = staging
+        return json.dumps(rec, sort_keys=True)
+
+
+class SearchFrontDoor:
+    """Overload-robust socket front door over one or more `SearchServer`
+    tenants (docs/SERVING.md).
+
+    - **Real transport**: length-prefixed JSON+binary frames over TCP
+      (`repro.launch.transport`), one accept thread, per-connection
+      readers that only validate + enqueue.
+    - **Continuous-batching admission**: an arriving query joins the
+      *currently forming* micro-batch of its tenant; the batch
+      dispatches when full or when its oldest query has waited
+      ``max_wait_s`` — no fixed windows, no next-window wait.
+    - **Bounded queue + shedding**: admission is capped at ``max_queue``
+      queued rows; past ``shed_watermark * max_queue`` (and past a
+      tenant's ``quota``) requests are shed with a typed
+      `RESOURCE_EXHAUSTED` rejection carrying a ``retry_after_ms`` hint
+      derived from the backlog and the EWMA batch service time.
+    - **Deadline propagation**: a request's ``deadline_ms`` budget runs
+      from ADMISSION — at dispatch the batch passes the tightest
+      (arrival, budget) pair into `search_sharded(deadline_s=,
+      t_start_s=)`, so queueing delay spends the same budget the shard
+      loop checks and an exhausted budget answers degraded instead of
+      stalling the queue.
+    - **Multi-tenancy**: several named stores/views register under one
+      scheduler; ready tenants are served round-robin so one hot tenant
+      cannot starve the rest, and per-tenant quotas bound each tenant's
+      share of the queue.
+    - **Graceful drain**: `shutdown()` (or SIGTERM via `main`) stops
+      accepting, answers every already-admitted query (dispatching
+      part-full batches immediately), replies `UNAVAILABLE` to requests
+      racing in on live connections, then closes the transport.
+      `/healthz` / `/readyz` hang off the obs metrics endpoint via
+      `attach_health`.
+
+    Results are bit-identical to the in-process `serve_stream` path:
+    admission only decides *when* `SearchServer.search_batch` runs and
+    with which rows — never what it computes.
+    """
+
+    def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
+                 max_wait_s: float = 2e-3, max_queue: int = 256,
+                 shed_watermark: float = 0.75):
+        if not 0.0 < shed_watermark <= 1.0:
+            raise ValueError(f"shed_watermark={shed_watermark} outside "
+                             f"(0, 1]")
+        if max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} < 1")
+        self._host, self._want_port = host, port
+        self.max_wait_s = float(max_wait_s)
+        self.max_queue = int(max_queue)
+        self.watermark = max(1, int(shed_watermark * max_queue))
+        self._tenants: dict = {}
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._rr = 0
+        self._queued_total = 0
+        self._draining = False
+        self._drained_clean = False
+        self._transport = None
+        self._dispatcher: Optional[threading.Thread] = None
+        self._ewma_batch_s: Optional[float] = None
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        # lifetime totals (registry-independent, so stats work with the
+        # registry disabled too)
+        self.n_accepted = 0
+        self.n_answered = 0
+        self.n_shed = 0
+        self.n_rejected = 0
+        self.n_drained = 0
+        self.n_batches = 0
+        self._occ: list = []
+        self._lat_win = _H_FD_LATENCY.collect()
+        self._lat_fallback: Optional[list] = [] if not obs.enabled() else None
+
+    # -- tenancy -------------------------------------------------------------
+
+    def register(self, name: str, index, *, quota: Optional[int] = None,
+                 **server_kw) -> SearchServer:
+        """Register a store/view as tenant ``name`` (warms one
+        `SearchServer` executable). ``quota`` caps the tenant's queued
+        rows (default: the whole queue)."""
+        if self._draining:
+            raise RuntimeError("front door is draining")
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        server = (index if isinstance(index, SearchServer)
+                  else SearchServer(index, **server_kw))
+        with self._lock:
+            self._tenants[name] = _Tenant(
+                name, server, int(quota) if quota else self.max_queue)
+        return server
+
+    @property
+    def tenants(self) -> tuple:
+        return tuple(self._tenants)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> int:
+        """Bind the transport and start the dispatcher; returns the
+        bound port."""
+        from repro.launch import transport as tp
+        if self._transport is not None:
+            raise RuntimeError("already started")
+        if not self._tenants:
+            raise RuntimeError("register at least one tenant before start")
+        self._transport = tp.TransportServer(
+            self._handle_frame, host=self._host, port=self._want_port)
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="frontdoor-dispatch",
+            daemon=True)
+        self._dispatcher.start()
+        _G_FD_READY.set(1)
+        return self._transport.port
+
+    @property
+    def port(self) -> int:
+        return self._transport.port
+
+    @property
+    def accepting(self) -> bool:
+        return (self._transport is not None and not self._draining
+                and self._transport.accepting)
+
+    def attach_health(self, metrics_server) -> None:
+        """Hang ``/healthz`` (process liveness) and ``/readyz``
+        (accepting vs draining) off an `obs.MetricsServer`."""
+        def healthz():
+            return 200, "text/plain", b"ok\n"
+
+        def readyz():
+            if self.accepting:
+                return 200, "text/plain", b"ready\n"
+            return 503, "text/plain", b"draining\n"
+
+        metrics_server.add_route("/healthz", healthz)
+        metrics_server.add_route("/readyz", readyz)
+
+    def shutdown(self, *, timeout_s: float = 30.0) -> bool:
+        """Graceful drain: stop accepting, answer everything admitted,
+        close the transport. True if the queue drained fully inside
+        ``timeout_s`` (the clean-drain invariant). Idempotent."""
+        with self._cond:
+            already = self._draining
+            self._draining = True
+            self._cond.notify_all()
+        _G_FD_READY.set(0)
+        if self._transport is not None:
+            self._transport.stop_accepting()
+        if self._dispatcher is not None:
+            self._dispatcher.join(timeout=timeout_s)
+            clean = not self._dispatcher.is_alive()
+        else:
+            clean = True
+        with self._lock:
+            self._drained_clean = clean and self._queued_total == 0
+        if self._transport is not None and not already:
+            self._transport.close()
+        return self._drained_clean
+
+    # -- admission (transport reader threads) --------------------------------
+
+    def _reject(self, conn, req_id, status, msg, *, reason=None,
+                retry_after_ms=None, tenant: Optional[_Tenant] = None,
+                n: int = 1) -> None:
+        hdr = {"id": req_id, "status": status, "error": msg}
+        from repro.launch import transport as tp
+        if status == tp.STATUS_SHED:
+            hdr["retry_after_ms"] = (retry_after_ms
+                                     if retry_after_ms is not None
+                                     else self._retry_after_ms())
+            self.n_shed += n
+            _C_FD_SHED.inc(n)
+            if tenant is not None:
+                tenant.shed += n
+                tenant.c_shed.inc(n)
+        else:
+            self.n_rejected += 1
+            _C_FD_REJECTED.labels(reason=reason or status.lower()).inc()
+        conn.send(hdr)
+
+    def _retry_after_ms(self) -> float:
+        """Backlog-derived backoff hint: how long the current queue
+        takes to drain at the EWMA batch service rate (clamped to
+        [1 ms, 2 s]; 25 ms before any batch has been timed)."""
+        svc = self._ewma_batch_s
+        if svc is None:
+            return 25.0
+        mb = max(t.server.micro_batch for t in self._tenants.values())
+        est = (self._queued_total / max(1, mb)) * svc * 1e3
+        return float(min(2000.0, max(1.0, est)))
+
+    def _handle_frame(self, conn, header: dict, body: bytes) -> None:
+        from repro.launch import transport as tp
+        req_id = header.get("id")
+        op = header.get("op")
+        if op == "ping":
+            # pong carries the serving shapes so a client can build
+            # well-formed queries without out-of-band config
+            conn.send({"id": req_id, "status": tp.STATUS_OK, "op": "pong",
+                       "accepting": self.accepting,
+                       "tenants": {name: {"d": t.server.d,
+                                          "micro_batch": t.server.micro_batch}
+                                   for name, t in self._tenants.items()}})
+            return
+        if op != "search":
+            self._reject(conn, req_id, tp.STATUS_INVALID,
+                         f"unknown op {op!r}", reason="invalid")
+            return
+        tenant = self._tenants.get(header.get("tenant", "default"))
+        if tenant is None:
+            self._reject(conn, req_id, tp.STATUS_NOT_FOUND,
+                         f"unknown tenant {header.get('tenant')!r}; "
+                         f"registered: {list(self._tenants)}",
+                         reason="not_found")
+            return
+        srv = tenant.server
+        try:
+            n, d = int(header["n"]), int(header["d"])
+        except (KeyError, TypeError, ValueError):
+            self._reject(conn, req_id, tp.STATUS_INVALID,
+                         "header needs integer n and d", reason="invalid")
+            return
+        if d != srv.d or not 1 <= n <= srv.micro_batch:
+            self._reject(conn, req_id, tp.STATUS_INVALID,
+                         f"bad shape n={n} d={d} (tenant serves d={srv.d}, "
+                         f"micro_batch={srv.micro_batch})", reason="invalid")
+            return
+        if len(body) != n * d * 4:
+            self._reject(conn, req_id, tp.STATUS_INVALID,
+                         f"body is {len(body)} bytes, expected {n * d * 4}",
+                         reason="invalid")
+            return
+        deadline_s = None
+        if header.get("deadline_ms") is not None:
+            try:
+                deadline_s = float(header["deadline_ms"]) / 1e3
+            except (TypeError, ValueError):
+                self._reject(conn, req_id, tp.STATUS_INVALID,
+                             "deadline_ms must be a number",
+                             reason="invalid")
+                return
+            if deadline_s <= 0:
+                self._reject(conn, req_id, tp.STATUS_INVALID,
+                             "deadline_ms must be > 0", reason="invalid")
+                return
+        q = np.frombuffer(body, "<f4").reshape(n, d).astype(np.float32)
+        req = _PendingRequest(conn, req_id, q, time.perf_counter(),
+                              deadline_s)
+        # admission decision under the lock, rejection SEND outside it —
+        # a client that stopped reading must stall its own socket, never
+        # the scheduler's condition variable
+        verdict = None
+        with self._cond:
+            if self._draining or not self._transport.accepting:
+                verdict = (tp.STATUS_UNAVAILABLE, "draining", "unavailable")
+            elif tenant.queued + n > tenant.quota:
+                verdict = (tp.STATUS_SHED,
+                           f"tenant {tenant.name!r} over quota "
+                           f"({tenant.queued}+{n} > {tenant.quota})", None)
+            elif (self._queued_total + n > self.watermark
+                    or self._queued_total + n > self.max_queue):
+                verdict = (tp.STATUS_SHED,
+                           f"queue depth {self._queued_total}+{n} past "
+                           f"watermark {self.watermark}", None)
+            else:
+                self._admit_locked(tenant, req, n)
+        if verdict is not None:
+            status, msg, reason = verdict
+            self._reject(conn, req_id, status, msg, reason=reason,
+                         tenant=tenant, n=n)
+
+    def _admit_locked(self, tenant: _Tenant, req: _PendingRequest,
+                      n: int) -> None:
+        tenant.pending.append(req)
+        tenant.queued += n
+        self._queued_total += n
+        tenant.accepted += n
+        self.n_accepted += n
+        if self._t_first is None:
+            self._t_first = req.arrival
+        tenant.c_accepted.inc(n)
+        _C_FD_ACCEPTED.inc(n)
+        tenant.g_depth.set(tenant.queued)
+        _G_FD_DEPTH.set(self._queued_total)
+        self._cond.notify_all()
+
+    # -- continuous batching + dispatch (one scheduler thread) ---------------
+
+    def _pick_tenant(self) -> Optional[_Tenant]:
+        """Round-robin over tenants with pending work (called under the
+        lock): the cursor advances past the served tenant, so a hot
+        tenant hands the scheduler to the next ready one every batch."""
+        names = list(self._tenants)
+        for off in range(len(names)):
+            t = self._tenants[names[(self._rr + off) % len(names)]]
+            if t.pending:
+                self._rr = (self._rr + off + 1) % len(names)
+                return t
+        return None
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                t = self._pick_tenant()
+                while t is None:
+                    if self._draining:
+                        return                    # drained: queue is empty
+                    self._cond.wait(timeout=0.1)
+                    t = self._pick_tenant()
+                # continuous batching: wait for the forming batch to
+                # fill, but never past the oldest query's max_wait — new
+                # arrivals notify the condition and JOIN this batch
+                mb = t.server.micro_batch
+                while not self._draining:
+                    rows, full = t.formed_rows(mb)
+                    expire = t.pending[0].arrival + self.max_wait_s
+                    now = time.perf_counter()
+                    if full or now >= expire:
+                        break
+                    self._cond.wait(timeout=min(expire - now, 0.05))
+                batch, rows = [], 0
+                while t.pending and rows + t.pending[0].n <= mb:
+                    r = t.pending.popleft()
+                    batch.append(r)
+                    rows += r.n
+                t.queued -= rows
+                self._queued_total -= rows
+                t.g_depth.set(t.queued)
+                _G_FD_DEPTH.set(self._queued_total)
+                draining = self._draining
+            try:
+                self._dispatch(t, batch, rows, draining)
+            except Exception as e:                # noqa: BLE001
+                # a dispatch failure must not kill the scheduler: every
+                # request in the batch gets a typed error, the loop lives
+                from repro.launch import transport as tp
+                from repro.index.store import ShardIntegrityError
+                status = (tp.STATUS_INTEGRITY
+                          if isinstance(e, ShardIntegrityError)
+                          else tp.STATUS_INTERNAL)
+                for r in batch:
+                    self._count_answered(t, r, draining)
+                    r.conn.send({"id": r.req_id, "status": status,
+                                 "error": f"{type(e).__name__}: {e}"})
+
+    def _count_answered(self, t: _Tenant, r: _PendingRequest,
+                        draining: bool) -> None:
+        t.answered += r.n
+        self.n_answered += r.n
+        t.c_answered.inc(r.n)
+        _C_FD_ANSWERED.inc(r.n)
+        if draining:
+            self.n_drained += r.n
+            _C_FD_DRAINED.inc(r.n)
+
+    def _dispatch(self, t: _Tenant, batch, rows: int, draining: bool
+                  ) -> None:
+        from repro.launch import transport as tp
+        q = np.concatenate([r.q for r in batch])
+        t_dispatch = time.perf_counter()
+        # tightest absolute deadline across the batch: budget measured
+        # from that request's ADMISSION (t_start_s), so its queueing
+        # delay has already been spent when the shard loop starts
+        dl_req = min((r for r in batch if r.deadline_s is not None),
+                     key=lambda r: r.arrival + r.deadline_s, default=None)
+        kw = {}
+        if dl_req is not None and t.server.out_of_core:
+            kw = {"deadline_s": dl_req.deadline_s,
+                  "t_start_s": dl_req.arrival}
+        t0 = time.perf_counter()
+        with obs.query_trace("frontdoor_batch", size=rows, tenant=t.name):
+            ids, dists = t.server.search_batch(q, **kw)
+        service = time.perf_counter() - t0
+        self._ewma_batch_s = (service if self._ewma_batch_s is None
+                              else 0.8 * self._ewma_batch_s + 0.2 * service)
+        cov = t.server.last_coverage
+        t_done = time.perf_counter()
+        off = 0
+        for r in batch:
+            body = (np.ascontiguousarray(ids[off:off + r.n], "<i4").tobytes()
+                    + np.ascontiguousarray(dists[off:off + r.n],
+                                           "<f4").tobytes())
+            hdr = {"id": r.req_id, "status": tp.STATUS_OK, "n": r.n,
+                   "topk": int(ids.shape[1]), "has_coverage": False}
+            if cov is not None:
+                hdr["has_coverage"] = True
+                body += np.ascontiguousarray(cov[off:off + r.n],
+                                             "<f4").tobytes()
+            # count BEFORE the send: a client acting on its reply must
+            # already see the answer in the counters (no read-your-own-
+            # answer race for harnesses asserting accepted == answered)
+            self._count_answered(t, r, draining)
+            r.conn.send(hdr, body)
+            lat = t_done - r.arrival
+            t.h_latency.observe(lat)
+            _H_FD_LATENCY.observe(lat)
+            t.h_queue.observe(t_dispatch - r.arrival)
+            _H_FD_QUEUE.observe(t_dispatch - r.arrival)
+            if self._lat_fallback is not None:
+                self._lat_fallback.append(lat)
+            off += r.n
+        self.n_batches += 1
+        _C_FD_BATCHES.inc()
+        occ = rows / t.server.micro_batch
+        self._occ.append(occ)
+        _G_FD_OCC.set(occ)
+        self._t_last = t_done
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self) -> FrontDoorStats:
+        if self._lat_fallback is not None:
+            arr = np.asarray(self._lat_fallback or [0.0])
+            p50, p99 = (float(np.percentile(arr, 50)),
+                        float(np.percentile(arr, 99)))
+        else:
+            p50 = _H_FD_LATENCY.quantile(0.5, since=self._lat_win)
+            p99 = _H_FD_LATENCY.quantile(0.99, since=self._lat_win)
+        span = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
+        return FrontDoorStats(
+            n_accepted=self.n_accepted, n_answered=self.n_answered,
+            n_shed=self.n_shed, n_rejected=self.n_rejected,
+            n_drained=self.n_drained, n_batches=self.n_batches,
+            p50_ms=p50 * 1e3, p99_ms=p99 * 1e3,
+            mean_batch_occupancy=float(np.mean(self._occ)) if self._occ
+            else 0.0,
+            qps=float(self.n_answered / span) if span > 0 else 0.0,
+            drained_clean=self._drained_clean,
+            per_tenant={name: {"accepted": t.accepted,
+                               "answered": t.answered, "shed": t.shed}
+                        for name, t in self._tenants.items()})
+
+
+def _serve_socket(args, server: SearchServer, index) -> FrontDoorStats:
+    """Socket mode body of `main`: bind the front door, serve until
+    SIGTERM/SIGINT (or `last_front_door.shutdown()` from a harness
+    thread), drain, flush stats, close the metrics endpoint."""
+    global last_front_door
+    front = SearchFrontDoor(
+        port=args.port, max_wait_s=args.max_wait_ms / 1e3,
+        max_queue=args.max_queue, shed_watermark=args.shed_watermark)
+    front.register(args.tenant, server, quota=args.quota)
+    last_front_door = front
+    port = front.start()
+    if last_metrics_server is not None:
+        front.attach_health(last_metrics_server)
+    print(f"[serve_search] front door on :{port} "
+          f"(tenant={args.tenant!r} micro_batch={server.micro_batch} "
+          f"max_queue={front.max_queue} watermark={front.watermark})",
+          flush=True)
+    if args.port_file:
+        with open(args.port_file, "w") as f:
+            json.dump({"port": port,
+                       "metrics_port": (last_metrics_server.port
+                                        if last_metrics_server else None)},
+                      f)
+    stop = threading.Event()
+    if threading.current_thread() is threading.main_thread():
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, lambda *_: stop.set())
+    # serve until told to stop; a harness embedding main() on a side
+    # thread calls last_front_door.shutdown() instead of signaling
+    while not stop.is_set():
+        if front._dispatcher is not None and not front._dispatcher.is_alive():
+            break                              # drained via shutdown()
+        stop.wait(timeout=0.2)
+    print("[serve_search] draining...", flush=True)
+    clean = front.shutdown()
+    stats = front.stats()
+    if args.trace:
+        obs.disable_tracing()
+    print(f"[serve_search] {stats.row()}")
+    staging = None
+    if args.out_of_core:
+        ps = index.pool.stats()
+        staging = dict(ps, skipped_shards=index.skipped_shards_total,
+                       quarantined_shards=len(index.quarantined))
+    if args.stats_json:
+        with open(args.stats_json, "a") as f:
+            f.write(stats.to_json(staging=staging) + "\n")
+    if last_metrics_server is not None:
+        last_metrics_server.close()
+    print(f"[serve_search] drain {'clean' if clean else 'DIRTY'}; "
+          f"sockets closed", flush=True)
+    return stats
+
+
+def main(argv: Optional[list] = None):
+    """Entry point. Two modes:
+
+    - **stream** (default): generate a synthetic Poisson stream and
+      drain it in-process through `SearchServer.serve_stream`; returns
+      `ServeStats`.
+    - **socket** (``--port``): bind the `SearchFrontDoor` transport and
+      serve framed requests until SIGTERM/SIGINT, then drain gracefully;
+      returns `FrontDoorStats`.
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--store", required=True)
     ap.add_argument("--queries", type=int, default=256)
@@ -378,7 +1022,42 @@ def main(argv: Optional[list] = None) -> ServeStats:
                          "(jit-aware fenced spans; see "
                          "docs/OBSERVABILITY.md for the perturbation "
                          "caveat)")
+    # socket mode (docs/SERVING.md): bind the front-door transport
+    # instead of draining a synthetic in-process stream
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve framed requests over TCP on this port "
+                         "(0 = ephemeral) until SIGTERM, then drain "
+                         "gracefully; omit for in-process stream mode")
+    ap.add_argument("--port-file", default=None, metavar="PATH",
+                    help="write a JSON line {'port':..,'metrics_port':..} "
+                         "once the sockets are bound (how harnesses find "
+                         "an ephemeral port)")
+    ap.add_argument("--tenant", default="default",
+                    help="tenant name this store registers as")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="bound on admitted-but-undispatched query rows")
+    ap.add_argument("--shed-watermark", type=float, default=0.75,
+                    help="fraction of --max-queue past which requests "
+                         "are shed RESOURCE_EXHAUSTED")
+    ap.add_argument("--quota", type=int, default=None,
+                    help="per-tenant queued-row quota (default: the "
+                         "whole queue)")
     args = ap.parse_args(argv)
+
+    # out-of-core-only knobs must not silently no-op on a resident
+    # server: fail loud at the CLI boundary
+    if not args.out_of_core:
+        bad = [flag for flag, on in (
+            ("--chaos", args.chaos is not None),
+            ("--deadline-ms", args.deadline_ms is not None),
+            ("--on-shard-error skip", args.on_shard_error == "skip"),
+            ("--no-verify", args.no_verify)) if on]
+        if bad:
+            ap.error(f"{', '.join(bad)} require(s) --out-of-core: these "
+                     f"knobs act on the sharded read path (fault "
+                     f"injection, shard deadline ejection, skip-on-error, "
+                     f"checksum verification) and would silently do "
+                     f"nothing on a resident index")
 
     global last_metrics_server
     if args.metrics_port is not None:
@@ -409,6 +1088,8 @@ def main(argv: Optional[list] = None) -> ServeStats:
         deadline_s=(None if args.deadline_ms is None
                     else args.deadline_ms / 1e3),
         on_shard_error=args.on_shard_error)
+    if args.port is not None:
+        return _serve_socket(args, server, index)
     q, arrivals = synthetic_stream(index, args.queries, args.rate)
     stats = server.serve_stream(q, arrivals,
                                 max_wait_s=args.max_wait_ms / 1e3)
@@ -436,6 +1117,11 @@ def main(argv: Optional[list] = None) -> ServeStats:
 # in-process harnesses (ci.sh serve smoke, tests) can find its bound
 # ephemeral port; the server lives until process exit or `.close()`
 last_metrics_server: Optional[obs.MetricsServer] = None
+
+# the front door from the last `main(--port ...)` call: harnesses
+# embedding socket mode on a side thread (no signals there) stop it by
+# calling `last_front_door.shutdown()`
+last_front_door: Optional["SearchFrontDoor"] = None
 
 
 if __name__ == "__main__":

@@ -1,0 +1,311 @@
+"""Socket transport for the search front door: length-prefixed frames.
+
+The network edge the serving stack sits behind (docs/SERVING.md). One
+TCP listener, one accept thread, one reader thread per connection —
+each decoded request frame is handed to the front door's admission
+callback on the reader thread, and responses are written back later
+(from the dispatch thread) through a per-connection write lock, so a
+slow client never blocks another connection's reads or the batcher.
+
+Wire format (all integers big-endian):
+
+    frame   := u32 payload_len | payload        (payload_len <= MAX_FRAME)
+    payload := u32 header_len | header_json | body
+
+``header_json`` is a UTF-8 JSON object; ``body`` is raw little-endian
+binary (query vectors f32, result ids i32 + dists f32 + coverage f32)
+whose layout the header describes. Request/response header shapes and
+the status-code taxonomy live in docs/SERVING.md; the `STATUS_*`
+constants below are the single source of truth for the codes, and
+`RETRYABLE_STATUSES` is the client-side retry contract: transient
+overload (`RESOURCE_EXHAUSTED`) and drain (`UNAVAILABLE`) may be
+retried, everything else — malformed requests, unknown tenants,
+integrity failures — must not be (mirroring the storage-layer rule
+that retries never clear persistent corruption).
+
+Robustness contract of the reader loop, exercised by the network fault
+kinds in `repro.index.faults` (connection drops, slow/partial writes,
+malformed frames, clients vanishing mid-response):
+
+  - partial reads are normal: `_recv_exact` loops until the frame is
+    complete or the peer is gone;
+  - a malformed frame (oversized length, truncated payload, bad JSON)
+    gets one best-effort `INVALID_ARGUMENT` reply and the connection is
+    CLOSED — framing state after garbage is unrecoverable by design;
+  - a connection dying at any point (mid-frame, mid-response) is
+    counted and cleaned up, never raised into the accept loop;
+  - writes go through `Connection.send`, which serializes frames per
+    connection and converts peer-vanished errors into a `False` return
+    (+ `transport_send_failures_total`) so the dispatcher treats an
+    unreachable client as delivered-and-gone, not as a server fault.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+from typing import Callable, Optional
+
+from repro import obs
+
+MAX_FRAME = 1 << 26            # 64 MB: > any sane micro-batch, < a DoS
+_U32 = struct.Struct(">I")
+
+# status taxonomy (docs/SERVING.md) ------------------------------------------
+STATUS_OK = "OK"
+STATUS_INVALID = "INVALID_ARGUMENT"      # malformed frame / bad shapes
+STATUS_NOT_FOUND = "NOT_FOUND"           # unknown tenant
+STATUS_SHED = "RESOURCE_EXHAUSTED"       # load-shed: queue past watermark
+STATUS_UNAVAILABLE = "UNAVAILABLE"       # draining / not accepting
+STATUS_INTEGRITY = "INTEGRITY_ERROR"     # shard integrity: never retry
+STATUS_INTERNAL = "INTERNAL"             # unexpected server-side failure
+
+#: the client retry policy: ONLY transient conditions. Integrity and
+#: argument errors are persistent — retrying them re-runs a failure.
+RETRYABLE_STATUSES = frozenset({STATUS_SHED, STATUS_UNAVAILABLE})
+
+_C_CONNS = obs.counter("transport_connections_total",
+                       "TCP connections accepted")
+_C_FRAMES = obs.counter("transport_frames_total",
+                        "request frames decoded (label dir=in|out)")
+_C_FRAME_ERRORS = obs.counter(
+    "transport_frame_errors_total",
+    "malformed frames (bad length/JSON) answered INVALID_ARGUMENT")
+_C_CONN_ABORTS = obs.counter(
+    "transport_conn_aborts_total",
+    "connections dropped mid-frame or mid-stream by the peer")
+_C_SEND_FAILS = obs.counter(
+    "transport_send_failures_total",
+    "response frames that could not be written (client vanished)")
+_G_OPEN = obs.gauge("transport_open_connections", "currently open conns")
+
+
+class FrameError(ValueError):
+    """Malformed wire data: bad lengths, truncated payload, bad JSON."""
+
+
+class ConnectionAbort(FrameError):
+    """The peer vanished mid-frame (connection drop): there is nobody
+    left to answer, so this is cleanup, not a protocol error."""
+
+
+def encode_frame(header: dict, body: bytes = b"") -> bytes:
+    hdr = json.dumps(header, separators=(",", ":")).encode()
+    payload_len = 4 + len(hdr) + len(body)
+    if payload_len > MAX_FRAME:
+        raise FrameError(f"frame of {payload_len} bytes exceeds MAX_FRAME")
+    return b"".join((_U32.pack(payload_len), _U32.pack(len(hdr)), hdr, body))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes. None = clean EOF before the first byte;
+    `FrameError` = EOF mid-read (a peer that vanished inside a frame)."""
+    chunks, got = [], 0
+    while got < n:
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except (ConnectionError, OSError):
+            chunk = b""
+        if not chunk:
+            if got == 0:
+                return None
+            raise ConnectionAbort(f"EOF {got}/{n} bytes into a frame")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> Optional[tuple]:
+    """-> (header dict, body bytes), or None on clean EOF between
+    frames. Raises `FrameError` on malformed data."""
+    raw = _recv_exact(sock, 4)
+    if raw is None:
+        return None
+    (payload_len,) = _U32.unpack(raw)
+    if not 4 <= payload_len <= MAX_FRAME:
+        raise FrameError(f"payload length {payload_len} outside "
+                         f"[4, {MAX_FRAME}]")
+    payload = _recv_exact(sock, payload_len)
+    if payload is None:
+        raise ConnectionAbort("EOF before payload")
+    (hdr_len,) = _U32.unpack(payload[:4])
+    if hdr_len > payload_len - 4:
+        raise FrameError(f"header length {hdr_len} exceeds payload")
+    try:
+        header = json.loads(payload[4:4 + hdr_len].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise FrameError(f"bad header JSON: {e}") from e
+    if not isinstance(header, dict):
+        raise FrameError(f"header is {type(header).__name__}, not object")
+    return header, payload[4 + hdr_len:]
+
+
+def send_frame(sock: socket.socket, header: dict, body: bytes = b"") -> None:
+    sock.sendall(encode_frame(header, body))
+
+
+class Connection:
+    """One accepted client connection: framed reads on the owner reader
+    thread, thread-safe framed writes from anywhere (the dispatcher)."""
+
+    def __init__(self, sock: socket.socket, peer: str):
+        self._sock = sock
+        self.peer = peer
+        self._wlock = threading.Lock()
+        self._closed = False
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def send(self, header: dict, body: bytes = b"") -> bool:
+        """Write one response frame. False = the client is gone (counted
+        in `transport_send_failures_total`); the caller's work is done
+        either way — a vanished client is not a server failure."""
+        frame = encode_frame(header, body)
+        with self._wlock:
+            if self._closed:
+                _C_SEND_FAILS.inc()
+                return False
+            try:
+                self._sock.sendall(frame)
+            except (ConnectionError, OSError):
+                _C_SEND_FAILS.inc()
+                self._close_locked()
+                return False
+        _C_FRAMES.labels(dir="out").inc()
+        return True
+
+    def _close_locked(self) -> None:
+        if not self._closed:
+            self._closed = True
+            try:
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            _G_OPEN.dec()
+
+    def close(self) -> None:
+        with self._wlock:
+            self._close_locked()
+
+
+class TransportServer:
+    """Accept loop + per-connection reader threads over framed TCP.
+
+    ``handler(conn, header, body)`` runs on the connection's reader
+    thread for every decoded frame; it must not block for long (the
+    front door's handler only validates + enqueues — the admission
+    contract). `stop_accepting()` closes the listener while leaving
+    live connections readable/writable (the drain half-state);
+    `close()` tears everything down.
+    """
+
+    def __init__(self, handler: Callable[[Connection, dict, bytes], None],
+                 *, host: str = "127.0.0.1", port: int = 0,
+                 backlog: int = 128):
+        self._handler = handler
+        self._listener = socket.create_server((host, port), backlog=backlog)
+        self.host = host
+        self.port = self._listener.getsockname()[1]
+        self._lock = threading.Lock()
+        self._conns: set = set()
+        self._accepting = True
+        self._closed = False
+        self._threads = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="transport-accept", daemon=True)
+        self._accept_thread.start()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def accepting(self) -> bool:
+        return self._accepting
+
+    def stop_accepting(self) -> None:
+        """Close the listener (new connects are refused by the OS); live
+        connections keep flowing — the first half of a graceful drain."""
+        with self._lock:
+            if not self._accepting:
+                return
+            self._accepting = False
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        self._accept_thread.join(timeout=5.0)
+
+    def close(self) -> None:
+        """Full teardown: stop accepting, close every connection, join
+        the reader threads."""
+        self.stop_accepting()
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            conns = list(self._conns)
+            threads = list(self._threads)
+        for c in conns:
+            c.close()
+        for t in threads:
+            t.join(timeout=5.0)
+
+    # -- loops ---------------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, addr = self._listener.accept()
+            except OSError:           # listener closed: drain or shutdown
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = Connection(sock, f"{addr[0]}:{addr[1]}")
+            _C_CONNS.inc()
+            _G_OPEN.inc()
+            t = threading.Thread(target=self._reader_loop,
+                                 args=(conn, sock),
+                                 name=f"transport-read-{addr[1]}",
+                                 daemon=True)
+            with self._lock:
+                self._conns.add(conn)
+                self._threads.append(t)
+            t.start()
+
+    def _reader_loop(self, conn: Connection, sock: socket.socket) -> None:
+        try:
+            while not conn.closed:
+                try:
+                    frame = recv_frame(sock)
+                except ConnectionAbort:
+                    # the peer dropped mid-frame: nobody to answer
+                    _C_CONN_ABORTS.inc()
+                    break
+                except FrameError:
+                    # garbage on the wire: framing state is gone, so one
+                    # best-effort typed error, then hang up
+                    _C_FRAME_ERRORS.inc()
+                    conn.send({"status": STATUS_INVALID,
+                               "error": "malformed frame; closing"})
+                    break
+                if frame is None:                    # clean EOF
+                    return
+                _C_FRAMES.labels(dir="in").inc()
+                header, body = frame
+                try:
+                    self._handler(conn, header, body)
+                except Exception as e:               # handler bug: reply,
+                    conn.send({"id": header.get("id"),  # don't kill reads
+                               "status": STATUS_INTERNAL,
+                               "error": f"{type(e).__name__}: {e}"})
+        except (ConnectionError, OSError):
+            _C_CONN_ABORTS.inc()
+        finally:
+            conn.close()
+            with self._lock:
+                self._conns.discard(conn)

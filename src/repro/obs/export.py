@@ -167,9 +167,22 @@ def series_value(snap: dict, name: str, **labels) -> float:
 
 class _Handler(BaseHTTPRequestHandler):
     registry: MetricsRegistry = None      # set per-server via subclass dict
+    routes: dict = {}                     # path -> fn() -> (code, ct, body)
 
     def do_GET(self):                                     # noqa: N802
         path = self.path.split("?")[0]
+        route = self.routes.get(path)
+        if route is not None:
+            # extra routes (health/readiness probes): the dict is shared
+            # with the owning MetricsServer, so `add_route` after start
+            # is visible immediately
+            code, ctype, body = route()
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+            return
         if path in ("/metrics", "/"):
             body = render_prometheus(self.registry).encode()
             ctype = "text/plain; version=0.0.4; charset=utf-8"
@@ -199,7 +212,9 @@ class MetricsServer:
                  registry: Optional[MetricsRegistry] = None,
                  host: str = "127.0.0.1"):
         reg = registry or REGISTRY
-        handler = type("_BoundHandler", (_Handler,), {"registry": reg})
+        self._routes: dict = {}
+        handler = type("_BoundHandler", (_Handler,),
+                       {"registry": reg, "routes": self._routes})
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self._httpd.daemon_threads = True
         self.host = host
@@ -211,6 +226,13 @@ class MetricsServer:
     @property
     def url(self) -> str:
         return f"http://{self.host}:{self.port}"
+
+    def add_route(self, path: str, fn) -> None:
+        """Register an extra GET route: ``fn() -> (status_code, content_
+        type, body_bytes)``. How the search front door hangs its
+        ``/healthz`` / ``/readyz`` probes off the existing obs endpoint
+        instead of opening another port (docs/SERVING.md)."""
+        self._routes[path] = fn
 
     def close(self) -> None:
         self._httpd.shutdown()

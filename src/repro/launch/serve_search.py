@@ -423,9 +423,21 @@ class _Tenant:
         """(rows that would dispatch now, batch-is-full) without popping:
         leading requests that fit in ``mb`` rows, never splitting a
         request across batches (each response frame answers one request
-        exactly once)."""
+        exactly once).
+
+        Deadline-carrying requests are never co-batched: the shard loop
+        takes ONE ``deadline_s`` per `search_batch` call, so mixing
+        deadlines would eject shards for every query in the batch and
+        degrade co-batched requests that never asked for a budget
+        (violating admission-never-changes-what-is-computed). A request
+        with a deadline dispatches as its own immediately-full batch; a
+        deadline request behind no-deadline ones closes the forming
+        batch at the boundary (it goes next, alone)."""
         rows = 0
         for r in self.pending:
+            if r.deadline_s is not None:
+                # head: solo immediately-full batch; non-head: boundary
+                return (r.n, True) if rows == 0 else (rows, True)
             if rows + r.n > mb:
                 return rows, True              # next request doesn't fit
             rows += r.n
@@ -485,11 +497,15 @@ class SearchFrontDoor:
       `RESOURCE_EXHAUSTED` rejection carrying a ``retry_after_ms`` hint
       derived from the backlog and the EWMA batch service time.
     - **Deadline propagation**: a request's ``deadline_ms`` budget runs
-      from ADMISSION — at dispatch the batch passes the tightest
-      (arrival, budget) pair into `search_sharded(deadline_s=,
-      t_start_s=)`, so queueing delay spends the same budget the shard
-      loop checks and an exhausted budget answers degraded instead of
-      stalling the queue.
+      from ADMISSION — at dispatch its (arrival, budget) pair goes into
+      `search_sharded(deadline_s=, t_start_s=)`, so queueing delay
+      spends the same budget the shard loop checks and an exhausted
+      budget answers degraded instead of stalling the queue. A deadline
+      request dispatches as its own single-request batch (its budget
+      must never eject shards for co-batched neighbors that asked for
+      none) and is rejected `INVALID_ARGUMENT` on resident tenants
+      (no shard loop — mirrors the ``--deadline-ms``-requires-
+      ``--out-of-core`` CLI rule).
     - **Multi-tenancy**: several named stores/views register under one
       scheduler; ready tenants are served round-robin so one hot tenant
       cannot starve the rest, and per-tenant quotas bound each tenant's
@@ -635,18 +651,25 @@ class SearchFrontDoor:
                 n: int = 1) -> None:
         hdr = {"id": req_id, "status": status, "error": msg}
         from repro.launch import transport as tp
-        if status == tp.STATUS_SHED:
-            hdr["retry_after_ms"] = (retry_after_ms
-                                     if retry_after_ms is not None
-                                     else self._retry_after_ms())
-            self.n_shed += n
-            _C_FD_SHED.inc(n)
-            if tenant is not None:
-                tenant.shed += n
-                tenant.c_shed.inc(n)
-        else:
-            self.n_rejected += 1
-            _C_FD_REJECTED.labels(reason=reason or status.lower()).inc()
+        # rejections arrive on concurrent transport reader threads and
+        # Python `+=` on attributes is not atomic: the shed/rejected
+        # totals (the accepted/shed/rejected accounting CI asserts on)
+        # mutate under the scheduler lock. Only the SEND stays outside
+        # it — a client that stopped reading must stall its own socket,
+        # never the scheduler.
+        with self._lock:
+            if status == tp.STATUS_SHED:
+                hdr["retry_after_ms"] = (retry_after_ms
+                                         if retry_after_ms is not None
+                                         else self._retry_after_ms())
+                self.n_shed += n
+                _C_FD_SHED.inc(n)
+                if tenant is not None:
+                    tenant.shed += n
+                    tenant.c_shed.inc(n)
+            else:
+                self.n_rejected += 1
+                _C_FD_REJECTED.labels(reason=reason or status.lower()).inc()
         conn.send(hdr)
 
     def _retry_after_ms(self) -> float:
@@ -713,6 +736,16 @@ class SearchFrontDoor:
             if deadline_s <= 0:
                 self._reject(conn, req_id, tp.STATUS_INVALID,
                              "deadline_ms must be > 0", reason="invalid")
+                return
+            if not srv.out_of_core:
+                # the network mirror of the --deadline-ms/--out-of-core
+                # argparse rule: a resident tenant has no shard loop to
+                # eject, so the knob must fail loud, never silently no-op
+                self._reject(conn, req_id, tp.STATUS_INVALID,
+                             f"deadline_ms requires an out-of-core "
+                             f"tenant; {tenant.name!r} serves a resident "
+                             f"index (no shard loop to eject)",
+                             reason="invalid")
                 return
         q = np.frombuffer(body, "<f4").reshape(n, d).astype(np.float32)
         req = _PendingRequest(conn, req_id, q, time.perf_counter(),
@@ -789,11 +822,20 @@ class SearchFrontDoor:
                     if full or now >= expire:
                         break
                     self._cond.wait(timeout=min(expire - now, 0.05))
+                # pop the formed batch, honoring the same boundaries as
+                # `formed_rows`: a deadline request is always alone
                 batch, rows = [], 0
-                while t.pending and rows + t.pending[0].n <= mb:
+                if t.pending and t.pending[0].deadline_s is not None:
                     r = t.pending.popleft()
                     batch.append(r)
-                    rows += r.n
+                    rows = r.n
+                else:
+                    while (t.pending
+                           and t.pending[0].deadline_s is None
+                           and rows + t.pending[0].n <= mb):
+                        r = t.pending.popleft()
+                        batch.append(r)
+                        rows += r.n
                 t.queued -= rows
                 self._queued_total -= rows
                 t.g_depth.set(t.queued)
@@ -829,15 +871,16 @@ class SearchFrontDoor:
         from repro.launch import transport as tp
         q = np.concatenate([r.q for r in batch])
         t_dispatch = time.perf_counter()
-        # tightest absolute deadline across the batch: budget measured
-        # from that request's ADMISSION (t_start_s), so its queueing
-        # delay has already been spent when the shard loop starts
-        dl_req = min((r for r in batch if r.deadline_s is not None),
-                     key=lambda r: r.arrival + r.deadline_s, default=None)
+        # a deadline request dispatches alone (`formed_rows` boundary)
+        # and admission rejects deadlines on resident tenants, so the
+        # batch's budget — measured from ITS admission (t_start_s), so
+        # queueing delay is already spent when the shard loop starts —
+        # only ever bounds the one request that asked for it
         kw = {}
-        if dl_req is not None and t.server.out_of_core:
-            kw = {"deadline_s": dl_req.deadline_s,
-                  "t_start_s": dl_req.arrival}
+        if batch[0].deadline_s is not None:
+            assert len(batch) == 1, "deadline requests dispatch solo"
+            kw = {"deadline_s": batch[0].deadline_s,
+                  "t_start_s": batch[0].arrival}
         t0 = time.perf_counter()
         with obs.query_trace("frontdoor_batch", size=rows, tenant=t.name):
             ids, dists = t.server.search_batch(q, **kw)

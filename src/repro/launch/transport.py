@@ -37,7 +37,13 @@ malformed frames, clients vanishing mid-response):
   - writes go through `Connection.send`, which serializes frames per
     connection and converts peer-vanished errors into a `False` return
     (+ `transport_send_failures_total`) so the dispatcher treats an
-    unreachable client as delivered-and-gone, not as a server fault.
+    unreachable client as delivered-and-gone, not as a server fault;
+  - sends are bounded by a per-socket send timeout (`SO_SNDTIMEO`, so
+    the reader's blocking `recv` is untouched): a client that keeps the
+    connection open but stops READING fills its TCP buffer until
+    `sendall` times out, which is treated exactly like a vanished
+    client (counted, connection closed) — a slow reader stalls one
+    `send` for at most `send_timeout_s`, never the dispatcher forever.
 """
 from __future__ import annotations
 
@@ -51,6 +57,11 @@ from repro import obs
 
 MAX_FRAME = 1 << 26            # 64 MB: > any sane micro-batch, < a DoS
 _U32 = struct.Struct(">I")
+
+#: bound on one blocked response write: past this, the peer is treated
+#: as vanished. Generous — a healthy client drains its receive buffer
+#: in milliseconds; only a stopped reader ever gets here.
+SEND_TIMEOUT_S = 5.0
 
 # status taxonomy (docs/SERVING.md) ------------------------------------------
 STATUS_OK = "OK"
@@ -147,13 +158,32 @@ def send_frame(sock: socket.socket, header: dict, body: bytes = b"") -> None:
 
 class Connection:
     """One accepted client connection: framed reads on the owner reader
-    thread, thread-safe framed writes from anywhere (the dispatcher)."""
+    thread, thread-safe framed writes from anywhere (the dispatcher).
 
-    def __init__(self, sock: socket.socket, peer: str):
+    ``send_timeout_s`` arms `SO_SNDTIMEO` on the socket (send-side
+    only — the reader's blocking `recv` keeps waiting indefinitely
+    between frames): a peer that stops reading makes `sendall` fail
+    after at most that long instead of blocking the caller — critical
+    because OK responses are written from the single dispatcher thread,
+    which must never be held hostage by one stalled client.
+    """
+
+    def __init__(self, sock: socket.socket, peer: str, *,
+                 send_timeout_s: float = SEND_TIMEOUT_S):
         self._sock = sock
         self.peer = peer
         self._wlock = threading.Lock()
         self._closed = False
+        if send_timeout_s is not None and send_timeout_s > 0:
+            sec = int(send_timeout_s)
+            usec = int((send_timeout_s - sec) * 1e6)
+            try:
+                sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDTIMEO,
+                                struct.pack("ll", sec, usec))
+            except (OSError, ValueError):
+                # platform without SO_SNDTIMEO: degrade to unbounded
+                # sends rather than refuse the connection
+                pass
 
     @property
     def closed(self) -> bool:
@@ -162,7 +192,11 @@ class Connection:
     def send(self, header: dict, body: bytes = b"") -> bool:
         """Write one response frame. False = the client is gone (counted
         in `transport_send_failures_total`); the caller's work is done
-        either way — a vanished client is not a server failure."""
+        either way — a vanished client is not a server failure. A send
+        that times out (`SO_SNDTIMEO`: the peer stopped reading and its
+        TCP buffer is full) raises `socket.timeout`, an `OSError` — the
+        same vanished-client path: framing state mid-frame is
+        unrecoverable anyway, so the connection closes."""
         frame = encode_frame(header, body)
         with self._wlock:
             if self._closed:
@@ -208,8 +242,10 @@ class TransportServer:
 
     def __init__(self, handler: Callable[[Connection, dict, bytes], None],
                  *, host: str = "127.0.0.1", port: int = 0,
-                 backlog: int = 128):
+                 backlog: int = 128,
+                 send_timeout_s: float = SEND_TIMEOUT_S):
         self._handler = handler
+        self._send_timeout_s = send_timeout_s
         self._listener = socket.create_server((host, port), backlog=backlog)
         self.host = host
         self.port = self._listener.getsockname()[1]
@@ -235,6 +271,15 @@ class TransportServer:
             if not self._accepting:
                 return
             self._accepting = False
+        # shutdown() BEFORE close(): on Linux, close() does NOT wake a
+        # thread blocked in accept() — the syscall holds the socket
+        # alive, so the "closed" listener keeps accepting and the join
+        # below eats its full timeout. shutdown() interrupts the
+        # blocked accept (EINVAL) so the accept loop exits promptly.
+        try:
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass                      # not listening / already gone
         try:
             self._listener.close()
         except OSError:
@@ -265,7 +310,8 @@ class TransportServer:
             except OSError:           # listener closed: drain or shutdown
                 return
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            conn = Connection(sock, f"{addr[0]}:{addr[1]}")
+            conn = Connection(sock, f"{addr[0]}:{addr[1]}",
+                              send_timeout_s=self._send_timeout_s)
             _C_CONNS.inc()
             _G_OPEN.inc()
             t = threading.Thread(target=self._reader_loop,
@@ -309,3 +355,10 @@ class TransportServer:
             conn.close()
             with self._lock:
                 self._conns.discard(conn)
+                # prune ourselves so a long-running server doesn't keep
+                # one dead Thread (and its conn closure) per connection
+                # ever accepted
+                try:
+                    self._threads.remove(threading.current_thread())
+                except ValueError:
+                    pass                  # close() already snapshotted us

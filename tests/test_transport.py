@@ -42,7 +42,7 @@ from repro.launch import transport as tp
 from repro.launch.search_client import (
     STATUS_VANISHED, SearchClient, run_closed_loop, run_open_loop)
 from repro.launch.serve_search import (
-    SearchFrontDoor, SearchServer, ServeStats)
+    SearchFrontDoor, SearchServer, ServeStats, _PendingRequest, _Tenant)
 
 from conftest import clustered
 
@@ -114,6 +114,74 @@ def test_frame_malformed_and_abort():
     with pytest.raises(tp.ConnectionAbort):
         tp.recv_frame(b)
     b.close()
+
+
+def test_slow_reader_send_times_out_not_wedges():
+    """A client that keeps the connection open but stops READING fills
+    its TCP buffer; the per-socket send timeout turns the would-be
+    forever-blocked `sendall` into a counted send failure + close —
+    other connections keep being served and `close()` doesn't deadlock
+    on the write lock a blocked sendall would hold."""
+    from repro import obs
+    big = b"x" * (1 << 21)                       # 2 MB reply
+
+    def handler(conn, header, body):
+        conn.send({"id": header.get("id"), "status": tp.STATUS_OK}, big)
+
+    srv = tp.TransportServer(handler, send_timeout_s=0.3)
+    fails0 = obs.series_value(obs.snapshot(),
+                              "transport_send_failures_total")
+    try:
+        stalled = socket.socket()
+        stalled.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 1 << 14)
+        stalled.connect(("127.0.0.1", srv.port))
+        t0 = time.perf_counter()
+        for i in range(8):                       # never reads a reply
+            tp.send_frame(stalled, {"id": i})
+        # the stalled connection must be torn down within a few timeout
+        # periods, never block indefinitely
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline:
+            fails = obs.series_value(obs.snapshot(),
+                                     "transport_send_failures_total")
+            if fails > fails0:
+                break
+            time.sleep(0.02)
+        assert fails > fails0, "blocked sendall never timed out"
+        assert time.perf_counter() - t0 < 10
+        # a healthy client on another connection is still answered
+        ok = socket.create_connection(("127.0.0.1", srv.port), timeout=5)
+        tp.send_frame(ok, {"id": 99})
+        header, body = tp.recv_frame(ok)
+        assert header["status"] == tp.STATUS_OK and body == big
+        ok.close()
+        stalled.close()
+    finally:
+        t0 = time.perf_counter()
+        srv.close()                              # must not deadlock
+        assert time.perf_counter() - t0 < 10
+
+
+def test_reader_threads_pruned_after_disconnect():
+    # regression: one Thread object leaked per connection ever accepted
+    srv = tp.TransportServer(lambda conn, h, b: conn.send({"ok": 1}))
+    try:
+        for _ in range(5):
+            s = socket.create_connection(("127.0.0.1", srv.port),
+                                         timeout=5)
+            tp.send_frame(s, {"id": 0})
+            tp.recv_frame(s)
+            s.close()
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline:
+            with srv._lock:
+                if not srv._threads and not srv._conns:
+                    break
+            time.sleep(0.01)
+        with srv._lock:
+            assert srv._threads == [] and not srv._conns
+    finally:
+        srv.close()
 
 
 def test_transport_server_echo_and_malformed():
@@ -269,13 +337,19 @@ def test_typed_rejections():
         assert r.status == tp.STATUS_INVALID
         r = client.search(q, deadline_ms=-5)
         assert r.status == tp.STATUS_INVALID
+        # a VALID deadline on a resident tenant is rejected too (no
+        # shard loop to eject — the network mirror of the CLI rule), so
+        # the knob never silently no-ops
+        r = client.search(q, deadline_ms=50)
+        assert r.status == tp.STATUS_INVALID and r.retries == 0
+        assert "out-of-core" in r.error
         # unknown op straight on the wire
         sock = socket.create_connection(("127.0.0.1", fd.port), timeout=5)
         tp.send_frame(sock, {"id": 1, "op": "mystery"})
         header, _ = tp.recv_frame(sock)
         assert header["status"] == tp.STATUS_INVALID
         sock.close()
-        assert fd.n_rejected == 4 + 1 and fd.n_shed == 0
+        assert fd.n_rejected == 5 + 1 and fd.n_shed == 0
     finally:
         fd.shutdown()
 
@@ -421,6 +495,57 @@ def test_socket_deadline_propagates_arrival_origin():
         # budget origin = the request's admission timestamp, in the
         # perf_counter clock, strictly before "now"
         assert call["t_start_s"] <= time.perf_counter()
+    finally:
+        fd.shutdown()
+
+
+def test_deadline_requests_form_solo_batches():
+    """`formed_rows` boundaries: a deadline-carrying request is never
+    co-batched (its budget must not eject shards for neighbors that
+    asked for none) — solo immediately-full batch at the head, batch
+    boundary when queued behind no-deadline requests."""
+    srv = _fake_server(d=4, micro_batch=8, out_of_core=True)
+    t = _Tenant("t", srv, 64)
+
+    def mk(n, dl):
+        return _PendingRequest(None, 0, np.zeros((n, 4), np.float32),
+                               0.0, dl)
+
+    t.pending.extend([mk(2, None), mk(1, None), mk(1, 0.5), mk(3, None)])
+    assert t.formed_rows(8) == (3, True)    # closes at the deadline req
+    t.pending.popleft()
+    t.pending.popleft()
+    assert t.formed_rows(8) == (1, True)    # deadline head: solo + full
+    t.pending.popleft()
+    assert t.formed_rows(8) == (3, False)   # plain tail: normal fill wait
+
+
+def test_socket_deadline_never_degrades_cobatched_neighbor():
+    """A no-deadline request concurrent with a deadline-carrying one
+    must reach `search_batch` in its own batch with NO deadline — the
+    old tightest-deadline-of-the-batch rule answered it degraded for a
+    budget it never asked for."""
+    srv = _fake_server(d=4, micro_batch=2, out_of_core=True)
+    fd = _front(srv, max_wait_s=0.25)
+    try:
+        client = SearchClient("127.0.0.1", fd.port)
+        q = np.zeros((1, 4), np.float32)
+        results = [None, None]
+        ts = [threading.Thread(target=lambda: results.__setitem__(
+                  0, client.search(q))),
+              threading.Thread(target=lambda: results.__setitem__(
+                  1, client.search(q, deadline_ms=200)))]
+        for th in ts:
+            th.start()
+        for th in ts:
+            th.join(10)
+        assert all(r is not None and r.ok for r in results)
+        calls = srv._fake_calls
+        assert len(calls) == 2 and all(c["n"] == 1 for c in calls)
+        dl_calls = [c for c in calls if "deadline_s" in c]
+        assert len(dl_calls) == 1
+        assert dl_calls[0]["deadline_s"] == pytest.approx(0.2)
+        assert fd.n_batches == 2
     finally:
         fd.shutdown()
 

@@ -37,6 +37,14 @@ shed/retry path; its ``metrics`` record how many requests were shed and
 retried. qps counts query rows in both, so the framing + admission
 overhead reads directly against the in-process ``resident`` row.
 
+Four live-mutation rows (informational) measure the churn story:
+``out_of_core_churn`` is steady-state QPS over a view carrying delta
+shards + a tombstone bitmap, with recall@10 against exact float search
+over the surviving vectors in its ``metrics`` (recall-under-churn);
+``mutation_append`` / ``mutation_delete`` / ``mutation_compact`` report
+rows-per-second through `IndexStore.append`, `IndexStore.delete`, and
+`Compactor.run` (qps = mutation throughput for these rows).
+
 `main(json_path=...)` writes the rows as machine-readable JSON
 (`benchmarks/run.py --only search` -> BENCH_search.json) so the search
 perf trajectory is recorded per CI run like encode/kernels.
@@ -141,6 +149,74 @@ def _net_rows(idx, batch, reps):
         fd.shutdown()
 
 
+def _mutation_rows(idx, xb, q, cfg, batch, reps):
+    """Live-mutation rows (informational): mutation throughput for
+    append/delete/compact, and search under churn — QPS over a view
+    carrying delta shards + tombstones, with recall@10 against exact
+    float search over the surviving vectors in ``metrics`` (the
+    recall-under-churn number; deletes mask inside the scan, so churn
+    must cost scan overhead, not recall)."""
+    from repro.index import Compactor
+    d = tempfile.mkdtemp(prefix="bench_mut_")
+    try:
+        n_db = len(xb)
+        IndexStore.save(d, idx, shard_size=-(-n_db // 4))
+        store = IndexStore(d)
+        view = ShardedIndexView(d, max_resident_shards=8)
+        rng = np.random.default_rng(5)
+        xa = (xb[rng.integers(0, n_db, size=n_db // 8)]
+              + rng.normal(scale=0.05, size=(n_db // 8, xb.shape[1]))
+              ).astype(np.float32)
+        t0 = time.perf_counter()
+        store.append(xa)
+        append_s = time.perf_counter() - t0
+        dels = rng.choice(np.arange(1, n_db), size=n_db // 16,
+                          replace=False)
+        t0 = time.perf_counter()
+        store.delete(dels)
+        delete_s = time.perf_counter() - t0
+        view.refresh()
+
+        churn = _row("out_of_core_churn", 4, _time_batches(
+            lambda qq: search.search_sharded(view, qq, cfg=cfg,
+                                             **SEARCH_KW),
+            q, reps=reps), batch)
+        # recall@10 vs exact float search over the survivors
+        allx = np.concatenate([xb, np.asarray(xa)])
+        alive = ~store.tombstone_bits()
+        ids, _ = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+        ids = np.asarray(ids)
+        d2 = ((np.asarray(q)[:, None, :] - allx[None, :, :]) ** 2).sum(-1)
+        d2[:, ~alive] = np.inf
+        exact = np.argsort(d2, axis=1)[:, :SEARCH_KW["topk"]]
+        recall = float(np.mean([
+            len(set(ids[i].tolist()) & set(exact[i].tolist()))
+            / SEARCH_KW["topk"] for i in range(len(ids))]))
+        churn["metrics"].update(
+            recall_at_10=recall, appended_rows=float(len(xa)),
+            deleted_rows=float(len(dels)))
+
+        t0 = time.perf_counter()
+        rep = Compactor(store).run()
+        compact_s = time.perf_counter() - t0
+        stub = {"p50_ms": 0.0, "p99_ms": 0.0}
+        return [
+            churn,
+            dict(stub, mode="mutation_append", n_shards=4,
+                 qps=float(len(xa) / append_s),
+                 metrics={"rows": float(len(xa))}),
+            dict(stub, mode="mutation_delete", n_shards=4,
+                 qps=float(len(dels) / delete_s),
+                 metrics={"rows": float(len(dels))}),
+            dict(stub, mode="mutation_compact", n_shards=4,
+                 qps=float(rep["n_alive"] / compact_s),
+                 metrics={"rows_dropped": float(rep["rows_dropped"]),
+                          "shards_written": float(rep["shards_written"])}),
+        ]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
         shard_counts=SHARD_COUNTS, reps=10):
     xt, xb, xq, _ = bench_data("bigann", dim=dim, n_db=n_db, n_query=batch,
@@ -156,6 +232,7 @@ def run(dim=16, M=4, K=16, n_db=2048, batch=32, seed=0, *,
         lambda qq: search.search(idx, qq, cfg=cfg, **SEARCH_KW),
         q, reps=reps), batch)]
     rows.extend(_net_rows(idx, batch, reps))
+    rows.extend(_mutation_rows(idx, xb, q, cfg, batch, reps))
     for n_shards in shard_counts:
         d = tempfile.mkdtemp(prefix="bench_search_")
         try:

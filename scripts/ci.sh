@@ -340,6 +340,131 @@ finally:
     shutil.rmtree(d, ignore_errors=True)
 PY
 
+# live-mutation smoke: a --refresh-ms server subprocess picks up appends,
+# deletes, and a compaction published by a mutator in this process, under
+# query traffic the whole time. Gates: deleted ids never returned after the
+# refresh, appended rows findable, generation bump observed over /metrics,
+# accepted == answered after drain, zero degraded queries (tombstones mask
+# inside the scan — they must not look like shard skips), fsck clean, and
+# the server gc'd the superseded generation (unlink-after-release).
+# (docs/INDEX_FORMAT.md "Mutation", docs/SERVING.md)
+python - <<'PY'
+import json, os, shutil, signal, subprocess, sys, tempfile, time
+import urllib.request
+import numpy as np, jax, jax.numpy as jnp
+from repro import obs
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import Compactor, IndexStore
+from repro.launch.search_client import SearchClient
+
+rng = np.random.default_rng(0)
+xb = rng.normal(size=(600, 16)).astype(np.float32)
+cfg = tiny(epochs=1)
+params = training.init_qinco2(jax.random.key(0), xb[:256], cfg)
+idx = search.build_index(jax.random.key(1), jnp.asarray(xb), params, cfg,
+                         k_ivf=8, m_tilde=2, n_pair_books=4)
+d = tempfile.mkdtemp(prefix="ci_mutation_smoke_")
+proc = None
+try:
+    IndexStore.save(d, idx, shard_size=256)
+    pf, sj, log = d + "/ports.json", d + "/stats.jsonl", d + "/server.log"
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_search",
+         "--store", d, "--port", "0", "--port-file", pf,
+         "--out-of-core", "--max-resident-shards", "2",
+         "--refresh-ms", "100", "--metrics-port", "0",
+         "--micro-batch", "8", "--max-wait-ms", "1", "--stats-json", sj],
+        stdout=open(log, "w"), stderr=subprocess.STDOUT,
+        env=dict(os.environ, PYTHONPATH="src"))
+    t0 = time.time()
+    while not os.path.exists(pf):
+        assert proc.poll() is None, open(log).read()
+        assert time.time() - t0 < 180, "server never bound"
+        time.sleep(0.2)
+    ports = json.load(open(pf))
+    murl = f"http://127.0.0.1:{ports['metrics_port']}"
+    client = SearchClient("127.0.0.1", ports["port"], timeout_s=30)
+
+    def snap():
+        return json.loads(
+            urllib.request.urlopen(murl + "/metrics.json").read())
+
+    def wait_for(pred, what, timeout=20):
+        t0 = time.time()
+        while True:
+            s = snap()
+            if pred(s):
+                return s
+            assert time.time() - t0 < timeout, f"timed out waiting: {what}"
+            time.sleep(0.1)
+
+    q = np.asarray(xb[7:8] + 0.01, np.float32)
+    r = client.search(q, req_key="base")
+    assert r.ok
+    victim = int(next(i for i in r.ids[0] if i != 0))  # never delete row 0
+
+    store = IndexStore(d)
+    store.delete([victim])
+    refreshes0 = obs.series_value(snap(), "index_refreshes_total")
+    wait_for(lambda s: obs.series_value(s, "index_refreshes_total")
+             > refreshes0, "tombstone refresh")
+    for i in range(5):                    # the delete must stick, every time
+        r = client.search(q, req_key=f"del{i}")
+        assert r.ok and victim not in r.ids[0], (victim, r.ids)
+
+    xa = (xb[50:70] + 0.001).astype(np.float32)
+    store.append(xa)
+    refreshes1 = obs.series_value(snap(), "index_refreshes_total")
+    wait_for(lambda s: obs.series_value(s, "index_refreshes_total")
+             > refreshes1, "delta refresh")
+    r = client.search(np.asarray(xa[:1]), req_key="app")
+    assert r.ok and (r.ids[0] >= 600).any(), r.ids  # appended row findable
+
+    # churn: queries racing a second append + delete round
+    store.append(xa)
+    store.delete([int(r.ids[0].max())])
+    for i in range(20):
+        r = client.search(q, req_key=f"churn{i}")
+        assert r.ok and victim not in r.ids[0]
+
+    # quiesce mutation, then compact (no gc: the server gc's for itself
+    # once its last old-generation pin releases) and watch the live view
+    # adopt the new generation mid-traffic
+    rep = Compactor(store).run()
+    assert rep["compacted"] and rep["generation"] == 1, rep
+    wait_for(lambda s: obs.series_value(s, "index_generation") == 1,
+             "generation pickup", timeout=30)
+    for i in range(5):
+        assert client.search(q, req_key=f"post{i}").ok
+    t0 = time.time()
+    while store.orphan_paths():           # unlink-after-release, server-side
+        assert time.time() - t0 < 20, \
+            f"server never gc'd: {store.orphan_paths()}"
+        client.search(q, req_key=f"gc{time.time()}")
+        time.sleep(0.2)
+
+    s = snap()
+    assert obs.series_value(s, "search_degraded_queries_total") == 0
+    assert obs.series_value(s, "index_refreshes_total") >= 3
+    proc.send_signal(signal.SIGTERM)
+    assert proc.wait(timeout=60) == 0, open(log).read()
+    rec = json.loads(open(sj).read().strip())
+    assert rec["drained_clean"] and rec["n_accepted"] == rec["n_answered"]
+
+    from repro.index import fsck_store
+    assert fsck_store(d, log=lambda *a, **k: None)["ok"]
+    assert not IndexStore(d).mutated
+    print("[ci] live-mutation smoke OK (delete masked under traffic, "
+          "append served after refresh, compaction adopted mid-stream "
+          f"with gc after release; {rec['n_accepted']} accepted == "
+          f"{rec['n_answered']} answered; fsck clean)")
+finally:
+    if proc is not None and proc.poll() is None:
+        proc.kill()
+    shutil.rmtree(d, ignore_errors=True)
+PY
+
 # kernel-backend smoke: xla vs pallas per-op timings for every dispatch op
 # (incl. the fused f_theta / adc_topk paths) -> BENCH_kernels.json, so each
 # CI run leaves a machine-readable perf data point

@@ -54,6 +54,9 @@ _C_EJECTED = obs.counter(
 _C_DEGRADED = obs.counter(
     "search_degraded_queries_total",
     "queries answered with shard coverage < 1.0")
+_C_TOMBSTONED = obs.counter(
+    "search_tombstoned_rows_total",
+    "tombstoned (deleted) rows masked inside fused per-shard scans")
 
 
 @dataclasses.dataclass
@@ -241,22 +244,33 @@ def _probe_and_masked_lut(centroids, aq_books, q, n_probe: int):
     return top_b, lut
 
 
-def _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base, *,
+def _shard_shortlist(ext, wbr, norms, dead, lut_masked, top_b, base, *,
                      k: int, cap: int, backend: str):
     """One shard's contribution: fused `ops.adc_topk` scan (the per-shard
     kernel the distributed path uses — the (Q, N_loc) score matrix never
     leaves VMEM) + the resident-candidate rank of every survivor.
+
+    ``dead`` (None, or (N_loc,) bool) tombstone-masks deleted rows inside
+    the same scan: `ops.adc_topk` folds `TOMBSTONE_PENALTY` into their
+    norms (scoring them below every probed AND non-probed row, the same
+    finite-penalty trick `_NOT_PROBED` uses), and any dead row that still
+    surfaces in a starved top-k is post-masked here to the exact
+    (-inf, `_POS_SENTINEL`) a rebuilt survivor store would produce.
+    ``dead=None`` is the historical bit-exact path, untouched.
 
     Returns (vals, pos, gids), each (Q, k'): vals exactly equal the
     resident step-2 scores for probed rows and -inf otherwise; pos is
     the survivor's position in resident `search()`'s candidate array
     (probe_rank * cap + within-bucket rank, `_POS_SENTINEL` for
     non-probed rows); gids are global database ids."""
-    vals, loc = ops.adc_topk(ext, lut_masked, k, norms=norms,
+    vals, loc = ops.adc_topk(ext, lut_masked, k, norms=norms, dead=dead,
                              backend=backend)             # (Q, k')
     b_c = jnp.take(ext[:, -1].astype(jnp.int32), loc)     # survivor buckets
     hit = b_c[..., None] == top_b[:, None, :]             # (Q, k', P)
     found = jnp.any(hit, axis=-1)
+    if dead is not None:
+        found = jnp.logical_and(found,
+                                jnp.logical_not(jnp.take(dead, loc)))
     rank = jnp.argmax(hit, axis=-1).astype(jnp.int32)     # probe rank
     pos = jnp.where(found, rank * cap + jnp.take(wbr, loc), _POS_SENTINEL)
     vals = jnp.where(found, vals, -jnp.inf)
@@ -264,16 +278,19 @@ def _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base, *,
 
 
 @partial(jax.jit, static_argnames=("k", "cap", "backend"))
-def _fold_shard(vals, pos, gids, ext, wbr, norms, lut_masked, top_b, base,
-                *, k: int, cap: int, backend: str):
+def _fold_shard(vals, pos, gids, ext, wbr, norms, dead, lut_masked, top_b,
+                base, *, k: int, cap: int, backend: str):
     """Shortlist one shard AND fold it into the running (Q, k) merge in a
     single jitted launch. The shard loop used to dispatch the shortlist,
     three concatenates, and the ranked merge as separate executables per
     shard; at small per-shard row counts those fixed dispatch costs — not
     the ADC math — dominated the out-of-core gap, so the whole per-shard
-    step is one compiled computation (one dispatch per shard)."""
+    step is one compiled computation (one dispatch per shard). ``dead``
+    is None for all-alive shards (empty pytree — the pre-mutation trace)
+    or the shard's tombstone mask."""
     from repro.parallel.collectives import merge_topk_ranked
-    nv, np_, ng = _shard_shortlist(ext, wbr, norms, lut_masked, top_b, base,
+    nv, np_, ng = _shard_shortlist(ext, wbr, norms, dead, lut_masked,
+                                   top_b, base,
                                    k=k, cap=cap, backend=backend)
     return merge_topk_ranked(jnp.concatenate([vals, nv], axis=1),
                              jnp.concatenate([pos, np_], axis=1),
@@ -441,74 +458,87 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
     _C_SEARCH_CALLS.inc()
     _C_SEARCH_QUERIES.inc(Q)
 
-    with obs.query_trace("search_sharded", queries=Q):
-        with obs.span("search/probe") as sp:
-            top_b, lut_m = _probe_and_masked_lut(
-                view.centroids, view.aq_books, q, n_probe)
-            sp.fence(top_b, lut_m)
-        with obs.span("search/schedule"):
-            sched = view.schedule_shards(np.asarray(top_b))
-        state = (jnp.full((Q, n_short_aq), -jnp.inf, jnp.float32),
-                 jnp.full((Q, n_short_aq), _POS_SENTINEL, jnp.int32),
-                 jnp.zeros((Q, n_short_aq), jnp.int32))
-        from repro.index.store import ShardIntegrityError
-        folded = []
-        for i, sid in enumerate(sched):
-            if (deadline_s is not None
-                    and time.perf_counter() - t_start > deadline_s):
-                _C_EJECTED.inc(len(sched) - i)      # answer with what folded
-                break
-            if sid in view.quarantined:
-                if on_shard_error == "raise":
-                    raise ShardIntegrityError(
-                        sid, "<denylist>",
-                        "quarantined by an earlier integrity failure")
-                _C_SHARD_ERRORS.inc()
-                continue
-            try:
-                with obs.span("search/acquire"):
-                    st = view.acquire(sid)
-            except (OSError, ShardIntegrityError):
-                # OSError: reads still failing after the pool's retries,
-                # or a staging timeout (TimeoutError). Device-side fold
-                # failures below are NOT caught — those mean the process,
-                # not the shard, is unhealthy.
-                if on_shard_error == "raise":
-                    raise
-                _C_SHARD_ERRORS.inc()
-                continue
-            if prefetch and i + 1 < len(sched):
-                view.prefetch(sched[i + 1])  # stages while sid is scanned
-            with obs.span("search/fold") as sp:
-                state = _fold_shard(
-                    *state, st["ext"], st["wbr"], st["aq_norms"], lut_m,
-                    top_b, np.int32(sid * view.shard_size), k=n_short_aq,
-                    cap=cap, backend=backend)
-                sp.fence(state)
-            view.release(sid)
-            folded.append(sid)
-        _C_SHARDS_FOLDED.inc(len(folded))
-        coverage = None
-        if return_coverage or len(folded) < len(sched):
-            coverage = _shard_coverage(view, np.asarray(top_b), sched,
-                                       folded)
-            n_degraded = int(np.count_nonzero(coverage < 1.0))
-            if n_degraded:
-                _C_DEGRADED.inc(n_degraded)
-        pad = _padding_entries(top_b, view.bucket_fill, cap=cap,
-                               p_pad=min(n_short_aq, cap))
-        s1, _, ids1 = _merge_state(state, pad, n_short_aq)
+    # pin one view-state snapshot for the whole call: a concurrent
+    # `view.refresh()` (new deltas, new tombstones, a compacted
+    # generation) can never change a query already admitted — it only
+    # affects calls that pin after the swap
+    vst = view.pin()
+    try:
+        with obs.query_trace("search_sharded", queries=Q):
+            with obs.span("search/probe") as sp:
+                top_b, lut_m = _probe_and_masked_lut(
+                    view.centroids, view.aq_books, q, n_probe)
+                sp.fence(top_b, lut_m)
+            with obs.span("search/schedule"):
+                sched = view.schedule_shards(np.asarray(top_b), vst)
+            state = (jnp.full((Q, n_short_aq), -jnp.inf, jnp.float32),
+                     jnp.full((Q, n_short_aq), _POS_SENTINEL, jnp.int32),
+                     jnp.zeros((Q, n_short_aq), jnp.int32))
+            from repro.index.store import ShardIntegrityError
+            folded = []
+            for i, sid in enumerate(sched):
+                if (deadline_s is not None
+                        and time.perf_counter() - t_start > deadline_s):
+                    _C_EJECTED.inc(len(sched) - i)  # answer with what folded
+                    break
+                if sid in view.quarantined:
+                    if on_shard_error == "raise":
+                        raise ShardIntegrityError(
+                            sid, "<denylist>",
+                            "quarantined by an earlier integrity failure")
+                    _C_SHARD_ERRORS.inc()
+                    continue
+                try:
+                    with obs.span("search/acquire"):
+                        ent = view.acquire(sid, vst)
+                except (OSError, ShardIntegrityError):
+                    # OSError: reads still failing after the pool's retries,
+                    # or a staging timeout (TimeoutError). Device-side fold
+                    # failures below are NOT caught — those mean the process,
+                    # not the shard, is unhealthy.
+                    if on_shard_error == "raise":
+                        raise
+                    _C_SHARD_ERRORS.inc()
+                    continue
+                if prefetch and i + 1 < len(sched):
+                    view.prefetch(sched[i + 1], vst)  # stages during scan
+                dead_np = vst.dead.get(sid)
+                with obs.span("search/fold") as sp:
+                    state = _fold_shard(
+                        *state, ent["ext"], ent["wbr"], ent["aq_norms"],
+                        None if dead_np is None else jnp.asarray(dead_np),
+                        lut_m, top_b, np.int32(vst.lo[sid]), k=n_short_aq,
+                        cap=cap, backend=backend)
+                    sp.fence(state)
+                if dead_np is not None:
+                    _C_TOMBSTONED.inc(int(np.count_nonzero(dead_np)))
+                view.release(sid, vst)
+                folded.append(sid)
+            _C_SHARDS_FOLDED.inc(len(folded))
+            coverage = None
+            if return_coverage or len(folded) < len(sched):
+                coverage = _shard_coverage(vst, np.asarray(top_b), sched,
+                                           folded)
+                n_degraded = int(np.count_nonzero(coverage < 1.0))
+                if n_degraded:
+                    _C_DEGRADED.inc(n_degraded)
+            pad = _padding_entries(top_b, vst.bucket_fill, cap=cap,
+                                   p_pad=min(n_short_aq, cap))
+            s1, _, ids1 = _merge_state(state, pad, n_short_aq)
 
-        with obs.span("search/gather"):
-            codes1, assign1, pw_norms1 = view.gather_rows(np.asarray(ids1))
-        with obs.span("search/rerank") as sp:
-            out = _rerank_shortlist(
-                q, s1, ids1, jnp.asarray(codes1), jnp.asarray(assign1),
-                jnp.asarray(pw_norms1), view.pw.codebooks,
-                view.centroid_codes, view.centroids, view.qinco_params,
-                n_short_pw=n_short_pw, topk=topk, cfg=cfg, backend=backend,
-                pairs=view.pw.pairs, K=view.K)
-            sp.fence(out)
+            with obs.span("search/gather"):
+                codes1, assign1, pw_norms1 = view.gather_rows(
+                    np.asarray(ids1), vst)
+            with obs.span("search/rerank") as sp:
+                out = _rerank_shortlist(
+                    q, s1, ids1, jnp.asarray(codes1), jnp.asarray(assign1),
+                    jnp.asarray(pw_norms1), view.pw.codebooks,
+                    view.centroid_codes, view.centroids, view.qinco_params,
+                    n_short_pw=n_short_pw, topk=topk, cfg=cfg,
+                    backend=backend, pairs=view.pw.pairs, K=view.K)
+                sp.fence(out)
+    finally:
+        view.unpin(vst)
     if return_coverage:
         if coverage is None:
             coverage = np.ones(Q, np.float32)
@@ -516,7 +546,7 @@ def search_sharded(view, q, *, n_probe: int = 4, n_short_aq: int = 64,
     return out
 
 
-def _shard_coverage(view, top_b, sched, folded):
+def _shard_coverage(vst, top_b, sched, folded):
     """(Q,) fraction of each query's relevant scheduled shards that
     folded. Relevance comes from the per-shard bucket-occupancy bitmaps
     (a shard with none of the query's probed buckets could not have
@@ -528,7 +558,7 @@ def _shard_coverage(view, top_b, sched, folded):
     got = np.zeros(Q, np.float64)
     folded_set = set(folded)
     for sid in sched:
-        hit = view._bucket_hit.get(sid)
+        hit = vst.hit.get(sid)
         rel = np.ones(Q, bool) if hit is None else hit[top_b].any(axis=1)
         total += rel
         if sid in folded_set:

@@ -11,7 +11,13 @@
                 transient-read retries, worker resurrection
     builder.py  resumable streaming build driver (shard cursor), with
                 data-axis shard-range ownership for multi-host builds;
-                checksum-failing shards are rewritten at resume
+                checksum-failing shards are rewritten at resume; its
+                `encode_rows` is also what `IndexStore.append` seals
+                delta shards through
+    compact.py  Compactor: folds delta shards + tombstones into a new
+                base-shard generation, byte-identical to a fresh build
+                of the survivors (atomic manifest swap, resume cursor,
+                unlink deferred to gc_orphans)
     faults.py   FaultPlan: seeded deterministic fault injection (read
                 errors, latency, bit flips, worker death) for chaos
                 tests and the CI chaos smoke
@@ -24,13 +30,15 @@ mid-dataset, and serving degrades gracefully (skip + coverage, not
 crash) when the storage layer misbehaves.
 """
 from repro.index.builder import (StreamingIndexBuilder,  # noqa: F401
-                                 owner_range)
+                                 encode_rows, owner_range)
 from repro.index.codes import (CODE_DTYPE, PackedCodes,  # noqa: F401
                                pack_codes, unpack_codes)
+from repro.index.compact import Compactor  # noqa: F401
 from repro.index.faults import (FaultPlan,  # noqa: F401
                                 TransientReadError, corrupt_file,
                                 parse_chaos)
 from repro.index.fsck import fsck_store  # noqa: F401
 from repro.index.staging import StagingPool  # noqa: F401
-from repro.index.store import (FORMAT_VERSION, IndexStore,  # noqa: F401
+from repro.index.store import (FORMAT_VERSION,  # noqa: F401
+                               MUTATED_FORMAT_VERSION, IndexStore,
                                ShardIntegrityError, ShardedIndexView)

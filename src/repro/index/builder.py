@@ -70,6 +70,56 @@ _G_ROWS_PER_S = obs.gauge(
     "build_rows_per_s", "encode throughput over the last sealed shard")
 
 
+def encode_rows(x, global_tree, cfg: QincoConfig, fill, cap: int, *,
+                encode_chunk: int = 4096, backend: str = "auto"):
+    """The per-shard encode pipeline as a standalone function: coarse
+    assignment (continuing the running capacity-spill ``fill``), chunked
+    QINCo2 encoding, and both cascade norms, all derived from the store's
+    ``global_tree`` (centroids, AQ/pairwise codebooks, QINCo2 params).
+
+    This is THE one implementation `StreamingIndexBuilder.build` runs per
+    shard — and the one `IndexStore.append` encodes delta shards through,
+    so appended rows get byte-wise the codes a streaming build of the same
+    rows at the same fill state would produce (shard content depends only
+    on (global state, row block, fill-at-entry)).
+
+    Returns (packed_codes (n, M) uint8, assign (n,) int32,
+    aq_norms (n,) f32, pw_norms (n,) f32, updated fill).
+    """
+    x = np.ascontiguousarray(np.asarray(x, np.float32))
+    cent = np.asarray(global_tree["centroids"])
+    raw = ivf_mod.assign_to_centroids(cent, x)
+    assign, fill = ivf_mod.assign_with_spill(x, cent, raw, cap, fill)
+    resid = x - cent[assign]
+    codes, _, _ = enc.encode_dataset(
+        global_tree["qinco_params"], resid, cfg, cfg.A_eval, cfg.B_eval,
+        chunk=min(encode_chunk, len(resid)), backend=backend)
+    codes_j = jnp.asarray(codes)
+    aq_books = jnp.asarray(global_tree["aq_books"])
+    recon_aq = aq_mod.aq_decode(aq_books, codes_j) + jnp.asarray(cent)[assign]
+    aq_norms = jnp.sum(recon_aq * recon_aq, axis=-1)
+    tilde = global_tree["centroid_codes"]
+    if tilde is not None:
+        ext = jnp.concatenate([codes_j, jnp.asarray(tilde)[assign]], axis=1)
+    else:
+        ext = codes_j
+    pw = global_tree["_pw_decoder"]
+    recon_pw = pw.decode(ext)
+    pw_norms = jnp.sum(recon_pw * recon_pw, axis=-1)
+    return (pack_codes(codes, cfg.K), assign, np.asarray(aq_norms),
+            np.asarray(pw_norms), fill)
+
+
+def make_pw_decoder(manifest: dict, global_tree: dict):
+    """The store's pairwise decoder, and the `global_tree` augmented with
+    it under the private ``_pw_decoder`` key `encode_rows` consumes."""
+    pw = pw_mod.PairwiseDecoder(
+        pairs=tuple(tuple(p) for p in manifest["pw_pairs"]),
+        codebooks=jnp.asarray(global_tree["pw_codebooks"]),
+        K=manifest["K"])
+    return dict(global_tree, _pw_decoder=pw)
+
+
 def owner_range(n_shards: int, host_id: int, n_hosts: int):
     """Contiguous balanced shard-ownership split: host ``host_id`` of
     ``n_hosts`` owns shards [lo, hi). Ranges partition [0, n_shards)
@@ -285,6 +335,12 @@ class StreamingIndexBuilder:
         m = store.manifest
         if m["complete"]:
             return True
+        if m.get("deltas") or m.get("tombstone") or m.get("generation"):
+            raise ValueError(
+                f"store {store.dir} carries mutation state (delta shards / "
+                f"tombstones / a compacted generation); the streaming "
+                f"builder only writes pristine v1 stores — compact first "
+                f"or use IndexStore.append")
         if len(xb) != m["n_total"]:
             raise ValueError(f"database has {len(xb)} rows; store was "
                              f"initialized for {m['n_total']}")
@@ -293,12 +349,9 @@ class StreamingIndexBuilder:
         cfg = QincoConfig(**m["cfg"])
         g = store.load_global_tree()
         cent = np.asarray(g["centroids"])
-        aq_books = jnp.asarray(g["aq_books"])
-        pw = pw_mod.PairwiseDecoder(
-            pairs=tuple(tuple(p) for p in m["pw_pairs"]),
-            codebooks=jnp.asarray(g["pw_codebooks"]), K=m["K"])
-        params = jax.tree.map(jnp.asarray, g["qinco_params"])
-        tilde_books = g["centroid_codes"]
+        gt = make_pw_decoder(m, g)
+        gt["aq_books"] = jnp.asarray(g["aq_books"])
+        gt["qinco_params"] = jax.tree.map(jnp.asarray, g["qinco_params"])
 
         start, fill = self._resume_state(xb, cent, lo, hi, host_id)
         if start > lo:
@@ -310,29 +363,15 @@ class StreamingIndexBuilder:
         built = 0
         for sid in range(start, hi):
             t0 = time.perf_counter()
-            assign, x_s, fill = self._shard_assign(xb, cent, sid, fill)
-            resid = x_s - cent[assign]
-            codes, _, _ = enc.encode_dataset(
-                params, resid, cfg, cfg.A_eval, cfg.B_eval,
-                chunk=min(self.encode_chunk, len(resid)),
-                backend=self.backend)
-            codes_j = jnp.asarray(codes)
-
-            recon_aq = (aq_mod.aq_decode(aq_books, codes_j)
-                        + jnp.asarray(cent)[assign])
-            aq_norms = jnp.sum(recon_aq * recon_aq, axis=-1)
-            if tilde_books is not None:
-                ext = jnp.concatenate(
-                    [codes_j, jnp.asarray(tilde_books)[assign]], axis=1)
-            else:
-                ext = codes_j
-            recon_pw = pw.decode(ext)
-            pw_norms = jnp.sum(recon_pw * recon_pw, axis=-1)
-
+            lo_row = sid * m["shard_size"]
+            x_s = np.asarray(xb[lo_row:lo_row + store.shard_rows(sid)],
+                             np.float32)
+            packed, assign, aq_norms, pw_norms, fill = encode_rows(
+                x_s, gt, cfg, fill, m["cap"],
+                encode_chunk=self.encode_chunk, backend=self.backend)
             store.write_shard(
-                sid, codes=PackedCodes(pack_codes(codes, m["K"]), m["K"]),
-                assign=assign, aq_norms=np.asarray(aq_norms),
-                pw_norms=np.asarray(pw_norms))
+                sid, codes=PackedCodes(packed, m["K"]),
+                assign=assign, aq_norms=aq_norms, pw_norms=pw_norms)
             store.write_cursor(sid + 1, fill, owner=host_id)
             built += 1
             dt = time.perf_counter() - t0

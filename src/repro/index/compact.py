@@ -1,0 +1,234 @@
+"""Background compaction: fold delta shards + tombstones into base shards.
+
+`Compactor.run` rewrites a mutated store (sealed delta shards from
+`IndexStore.append`, a tombstone bitmap from `IndexStore.delete`) into a
+fresh base-shard **generation** holding exactly the surviving rows in
+global-id order, then swaps the manifest atomically. The output is
+byte-identical to `IndexStore.save` over the same survivor arrays — both
+publish through `IndexStore._publish_array_dir`, so "compaction == fresh
+build of the survivors" is structural (and fsck-verifiable), not a
+coincidence kept alive by tests.
+
+Crash safety / resume:
+  - every output shard publishes atomically (tmp dir + rename + fsync),
+    so a killed compactor never leaves a half shard under a final name;
+  - `compact_cursor.json` records the target generation AND the mutation
+    signature being folded (delta ids + tombstone seq). A resume whose
+    live signature still matches skips already-published output shards;
+    a mismatch (more mutations landed since) wipes the partial target
+    generation and starts over — the cursor is advisory, shard presence
+    is ground truth, exactly like the build cursor;
+  - the manifest swap is the commit point: readers see the old
+    generation in full, then the new generation in full, never a mix.
+
+The compactor NEVER unlinks superseded files (old-generation shards,
+folded delta dirs, the old tombstone bitmap). That is `gc_orphans`'s
+job, and the live `ShardedIndexView` runs it only after the last search
+pinned to the old state releases — the unlink-after-release rule
+(docs/INDEX_FORMAT.md "Mutation", docs/SERVING.md "Graceful drain").
+
+CLI:  python -m repro.index.compact STORE [--gc] [--json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro import obs
+from repro.index.store import (MUTATED_FORMAT_VERSION, IndexStore,
+                               _durable_write_text, _fsync_path)
+
+_C_RUNS = obs.counter(
+    "compact_runs_total", "compaction runs that published a new generation")
+_C_SHARDS = obs.counter(
+    "compact_shards_written_total",
+    "base shards written by the compactor (resume skips count nothing)")
+_C_DROPPED = obs.counter(
+    "compact_rows_dropped_total", "tombstoned rows dropped by compaction")
+_C_SECONDS = obs.counter(
+    "compact_seconds_total", "wall seconds spent inside Compactor.run")
+
+
+class Compactor:
+    """Merge a store's pending mutation state into a new base generation.
+
+    Single-writer by contract (like the builder): at most one compactor
+    per store at a time, and it must not race `append`/`delete` — the
+    signature check turns such a race into a clean restart, not
+    corruption, but concurrent mutators should simply pause mutation
+    while a compaction runs (the CI smoke does exactly that)."""
+
+    def __init__(self, store, *, verify: bool = True):
+        self.store = store if isinstance(store, IndexStore) \
+            else IndexStore(store)
+        self.verify = bool(verify)
+
+    # -- survivor gather -----------------------------------------------------
+
+    def _gather_survivors(self, bits: np.ndarray) -> dict:
+        """Host arrays of the alive rows in global-id order: base shards
+        first (manifest order), then deltas (append order) — the same
+        order a fresh build over the survivor vectors would encode."""
+        store = self.store
+        m = store.manifest
+        units = []                                  # (arrays-dict, lo, rows)
+        for sid in range(m["n_shards"]):
+            if self.verify:
+                store.verify_shard(sid)
+            units.append((store.open_shard(sid), sid * m["shard_size"],
+                          store.shard_rows(sid)))
+        for d in store.deltas:
+            did = int(d["id"])
+            if self.verify:
+                store.verify_delta(did)
+        lo = m["n_total"]
+        for d in store.deltas:
+            did, rows = int(d["id"]), int(d["rows"])
+            units.append((store.open_delta(did), lo, rows))
+            lo += rows
+        n_alive = int(np.count_nonzero(~bits))
+        out = {
+            "codes": np.empty((n_alive, m["M"]), np.uint8),
+            "assign": np.empty(n_alive, np.int32),
+            "aq_norms": np.empty(n_alive, np.float32),
+            "pw_norms": np.empty(n_alive, np.float32),
+        }
+        at = 0
+        for sh, lo, rows in units:
+            alive = ~bits[lo:lo + rows]
+            k = int(np.count_nonzero(alive))
+            if k == 0:
+                continue
+            for name, arr in out.items():
+                arr[at:at + k] = np.asarray(sh[name])[alive]
+            at += k
+        assert at == n_alive
+        return out
+
+    # -- the run -------------------------------------------------------------
+
+    def run(self, *, max_shards: Optional[int] = None) -> dict:
+        """Fold pending deltas + tombstones into generation ``gen + 1``.
+
+        ``max_shards`` bounds how many NEW output shards this call
+        publishes before returning (cursor left in place) — the hook the
+        kill/resume tests use to stop the compactor at a deterministic
+        point; a later `run()` resumes from the published prefix.
+
+        Returns a report dict; ``compacted`` is False when the store had
+        nothing pending (the no-op case) or True once the new manifest
+        published. ``partial`` marks a `max_shards` early return."""
+        t0 = time.perf_counter()
+        store = self.store
+        m = store.reload_manifest()
+        if not m["complete"]:
+            raise ValueError(f"store {store.dir} is incomplete; only a "
+                             f"finalized store can be compacted")
+        if not store.mutated:
+            return {"compacted": False, "reason": "no pending mutation"}
+        gen = store.generation
+        target = gen + 1
+        t = m.get("tombstone")
+        sig = {"deltas": [int(d["id"]) for d in store.deltas],
+               "tombstone_seq": None if t is None else int(t["seq"])}
+
+        bits = store.tombstone_bits()               # verified vs manifest
+        n_alive = int(np.count_nonzero(~bits))
+        if n_alive == 0:
+            raise ValueError(f"refusing to compact {store.dir} to an "
+                             f"empty store (every row is tombstoned)")
+
+        gen_root = store.dir / "shards" / f"gen_{target:03d}"
+        cur = store.read_compact_cursor()
+        if cur is not None and (int(cur.get("generation", -1)) != target
+                                or cur.get("sig") != sig):
+            # mutation state moved on (or a stale cursor from a published
+            # run survived): the partial output folds the WRONG row set
+            shutil.rmtree(gen_root, ignore_errors=True)
+            try:
+                os.unlink(store.compact_cursor_path)
+            except OSError:
+                pass
+        tmp = store.compact_cursor_path.with_suffix(".tmp")
+        _durable_write_text(tmp, json.dumps(
+            {"generation": target, "sig": sig, "n_alive": n_alive}))
+        os.rename(tmp, store.compact_cursor_path)
+        _fsync_path(store.dir)
+
+        arrs = self._gather_survivors(bits)
+        shard_size = int(m["shard_size"])
+        n_shards_new = -(-n_alive // shard_size)
+        written = 0
+        for sid in range(n_shards_new):
+            final = gen_root / f"shard_{sid:05d}"
+            if (final / "codes.u8").exists():
+                continue                            # resume: already published
+            if max_shards is not None and written >= max_shards:
+                _C_SECONDS.inc(time.perf_counter() - t0)
+                return {"compacted": False, "partial": True,
+                        "generation": target, "shards_written": written,
+                        "shards_total": n_shards_new}
+            lo = sid * shard_size
+            rows = min(shard_size, n_alive - lo)
+            store._publish_array_dir(
+                final, {name: arr[lo:lo + rows]
+                        for name, arr in arrs.items()},
+                rows, f"shard {sid}")
+            written += 1
+        _C_SHARDS.inc(written)
+
+        manifest = dict(m, n_total=n_alive, n_shards=int(n_shards_new),
+                        generation=target, deltas=[], tombstone=None,
+                        format_version=MUTATED_FORMAT_VERSION,
+                        complete=True)
+        store._write_manifest(manifest)             # the commit point
+        try:
+            os.unlink(store.compact_cursor_path)
+        except OSError:
+            pass
+        _fsync_path(store.dir)
+        dropped = int(np.count_nonzero(bits))
+        _C_RUNS.inc()
+        _C_DROPPED.inc(dropped)
+        _C_SECONDS.inc(time.perf_counter() - t0)
+        return {"compacted": True, "generation": target,
+                "n_alive": n_alive, "rows_dropped": dropped,
+                "shards_written": written, "shards_total": n_shards_new}
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.index.compact",
+        description="Fold a store's delta shards + tombstones into a new "
+                    "base generation (atomic manifest swap; superseded "
+                    "files are left for gc)")
+    p.add_argument("store", help="index store directory")
+    p.add_argument("--gc", action="store_true",
+                   help="also unlink superseded files afterwards — ONLY "
+                        "safe when no live reader is pinned to the old "
+                        "generation (an attached server gc's for itself "
+                        "after its refresh)")
+    p.add_argument("--max-shards", type=int, default=None,
+                   help="publish at most N new shards then stop (resume "
+                        "later); test/ops hook")
+    p.add_argument("--json", action="store_true", help="machine output")
+    args = p.parse_args(argv)
+    report = Compactor(args.store).run(max_shards=args.max_shards)
+    if report.get("compacted") and args.gc:
+        removed = IndexStore(args.store).gc_orphans()
+        report["gc_removed"] = [str(r) for r in removed]
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    else:
+        print(report)
+    return 0 if report.get("compacted") or "reason" in report else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

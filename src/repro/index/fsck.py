@@ -2,7 +2,9 @@
 
 Walks one `IndexStore` end to end — manifest, global checkpoint tree,
 every shard (all four per-vector files, sizes always, crc32 when the
-shard has a checksum sidecar), and the resume cursors — and reports
+shard has a checksum sidecar), every delta shard, the live tombstone
+bitmap (bytes + crc32 + popcount vs the manifest record), the compact
+cursor, and the resume cursors — and reports
 every problem it finds, naming the exact shard and file. Exit status 0
 means clean (warnings like legacy unchecksummed shards or a stale
 cursor do not fail the audit); 1 means at least one hard error.
@@ -80,6 +82,53 @@ def fsck_store(store, *, verbose: bool = False, log=print) -> dict:
     if report["shards_missing"] and not m["complete"]:
         warn(f"store incomplete: {len(report['shards_missing'])} shard(s) "
              f"not yet built")
+
+    # -- mutation state (format v2): delta shards + tombstone bitmap ------
+    report["deltas_ok"] = []
+    report["deltas_corrupt"] = []
+    for d in store.deltas:
+        did = int(d["id"])
+        try:
+            store.verify_delta(did, fields=list(_SHARD_FIELDS))
+        except ShardIntegrityError as e:
+            report["deltas_corrupt"].append(did)
+            error(str(e))
+            continue
+        report["deltas_ok"].append(did)
+        if verbose:
+            log(f"[fsck] delta {did:05d}: ok")
+    if m.get("tombstone") is not None:
+        try:
+            bits = store.tombstone_bits()
+            t = m["tombstone"]
+            if int(bits.sum()) != int(t["n_deleted"]):
+                error(f"tombstone {t['seq']:08d}: popcount "
+                      f"{int(bits.sum())} != manifest n_deleted "
+                      f"{t['n_deleted']}")
+        except (ShardIntegrityError, OSError) as e:
+            error(f"tombstone: {e}")
+    cc = store.read_compact_cursor()
+    if cc is not None:
+        live_sig = {"deltas": [int(d["id"]) for d in store.deltas],
+                    "tombstone_seq": None if m.get("tombstone") is None
+                    else int(m["tombstone"]["seq"])}
+        if int(cc.get("generation", -1)) != store.generation + 1 \
+                or cc.get("sig") != live_sig:
+            warn("compact_cursor.json: stale (compaction published or the "
+                 "mutation set moved on; the next run restarts cleanly)")
+        else:
+            warn("compact_cursor.json: compaction in progress (advisory; "
+                 "partial target-generation shards are expected)")
+
+    # orphans: on-disk state the live manifest no longer references —
+    # harmless (a reader pinned to the old generation may still need
+    # them) but worth surfacing so operators know gc has not run yet
+    orphans = store.orphan_paths()
+    if orphans:
+        warn(f"{len(orphans)} superseded path(s) awaiting gc "
+             f"(old generations / folded deltas / stale tombstones); "
+             f"run gc_orphans() or `python -m repro.index.compact --gc` "
+             f"once no reader is pinned to the old generation")
 
     done = set(report["shards_ok"]) | set(report["shards_corrupt"])
     for path in sorted(store.dir.glob("cursor*.json")):

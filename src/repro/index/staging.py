@@ -197,6 +197,14 @@ class StagingPool:
                 return list(self._lru)
             return [sid for (o, sid) in self._lru if o == owner]
 
+    def owner_pins(self, owner: int) -> int:
+        """Outstanding acquire pins across one owner's entries. A retired
+        view state is safe to `drop_owner` (and its on-disk generation
+        safe to unlink) only once this reaches zero."""
+        with self._cond:
+            return sum(e.pins for (o, _), e in self._lru.items()
+                       if o == owner)
+
     def stats(self) -> dict:
         """The legacy per-pool stats dict, now a compatibility view over
         this pool's registry series (`staging_*_total{pool=<id>}` on the

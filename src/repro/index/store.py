@@ -1,10 +1,12 @@
 """On-disk sharded index format: JSON manifest + raw per-shard files.
 
-Layout (format_version 1 — see docs/INDEX_FORMAT.md):
+Layout (format_version 1; mutated stores publish 2 — see
+docs/INDEX_FORMAT.md "Mutation"):
 
     store_dir/
       manifest.json            format version, cfg, decoder metadata,
-                               shard table, treespec, `complete` flag
+                               shard table, treespec, `complete` flag;
+                               v2 adds `deltas`, `tombstone`, `generation`
       global/step_000000000/   non-sharded arrays (centroids, codebooks,
                                QINCo2 params) via checkpoint.CheckpointManager
       shards/shard_00000/      per-vector arrays, raw little-endian:
@@ -15,6 +17,17 @@ Layout (format_version 1 — see docs/INDEX_FORMAT.md):
         checksums.json           per-file {crc32, bytes} integrity
                                  sidecar (optional: absent on legacy
                                  stores; additive -> no version bump)
+      shards/gen_001/shard_*/  base shards of compacted generation >= 1
+                               (generation 0 keeps the flat v1 naming, so
+                               v1 readers and unmutated stores are
+                               byte-for-byte untouched)
+      deltas/delta_00000/      rows sealed by `append()` — exactly the
+                               base-shard file set + sidecar, <= shard_size
+                               rows each
+      tombstones/tomb_00000000.bm
+                               packed little-endian delete bitmap over the
+                               gross global id space; the manifest record
+                               (seq/bytes/crc32) is its integrity sidecar
 
 Guarantees:
   - `save(index)` -> `load()` round-trips `SearchIndex` exactly: same
@@ -45,6 +58,7 @@ import dataclasses
 import json
 import os
 import shutil
+import threading
 import zlib
 from pathlib import Path
 from typing import Any, Dict, List, Optional
@@ -59,6 +73,11 @@ from repro.configs.qinco2 import QincoConfig
 from repro.index.codes import CODE_DTYPE, PackedCodes, pack_codes
 
 FORMAT_VERSION = 1
+# mutation state (deltas / tombstone / generation) bumps the manifest to
+# v2 so v1-only readers hard-fail instead of silently serving deleted
+# rows; this reader accepts both
+MUTATED_FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (FORMAT_VERSION, MUTATED_FORMAT_VERSION)
 CHECKSUM_FILE = "checksums.json"
 # stdlib zlib.crc32: the environment has no crc32c wheel, and the sidecar
 # records the algorithm name so a future store can switch without a format
@@ -76,6 +95,21 @@ _C_INTEGRITY_FAIL = obs.counter(
 _C_QUARANTINED = obs.counter(
     "index_quarantined_shards_total",
     "shards quarantined by a ShardedIndexView after an integrity failure")
+_C_DELTA_SHARDS = obs.counter(
+    "index_delta_shards_total",
+    "delta shards sealed and published by IndexStore.append")
+_C_DELTA_ROWS = obs.counter(
+    "index_delta_rows_total",
+    "rows appended into delta shards by IndexStore.append")
+_C_DELETED = obs.counter(
+    "index_deleted_rows_total",
+    "rows newly tombstoned by IndexStore.delete")
+_C_REFRESH = obs.counter(
+    "index_refreshes_total",
+    "ShardedIndexView.refresh calls that adopted a changed manifest")
+_G_GENERATION = obs.gauge(
+    "index_generation",
+    "base-shard generation the live view is serving (bumps on compaction)")
 
 # sharded per-vector fields: name -> (file, dtype, trailing shape lambda)
 _SHARD_FIELDS = {
@@ -93,11 +127,16 @@ class ShardIntegrityError(RuntimeError):
     persistent — retrying cannot fix corrupt bytes, only quarantine and
     (at build time) a rewrite can."""
 
-    def __init__(self, shard_id: int, file: str, reason: str):
-        self.shard_id = int(shard_id)
+    def __init__(self, shard_id, file: str, reason: str):
+        # `shard_id` is an int for base shards (historical contract) or a
+        # descriptive string for other shard-format units ("delta 00002",
+        # "tombstone 00000001") — same typed failure, same quarantine path
+        self.shard_id = shard_id if isinstance(shard_id, str) else int(shard_id)
         self.file = file
         self.reason = reason
-        super().__init__(f"shard {shard_id:05d}: {file}: {reason}")
+        ident = shard_id if isinstance(shard_id, str) \
+            else f"shard {shard_id:05d}"
+        super().__init__(f"{ident}: {file}: {reason}")
 
 
 def _crc_array(arr) -> int:
@@ -206,8 +245,27 @@ class IndexStore:
     def manifest_path(self) -> Path:
         return self.dir / "manifest.json"
 
-    def shard_dir(self, shard_id: int) -> Path:
-        return self.dir / "shards" / f"shard_{shard_id:05d}"
+    def shard_dir(self, shard_id: int,
+                  generation: Optional[int] = None) -> Path:
+        """Base-shard directory. Generation 0 keeps the flat v1 layout;
+        compacted generations live under ``shards/gen_NNN/``. Default:
+        the manifest's current generation."""
+        if generation is None:
+            generation = self.generation
+        root = self.dir / "shards"
+        if generation:
+            root = root / f"gen_{generation:03d}"
+        return root / f"shard_{shard_id:05d}"
+
+    def delta_dir(self, delta_id: int) -> Path:
+        return self.dir / "deltas" / f"delta_{delta_id:05d}"
+
+    def tombstone_path(self, seq: int) -> Path:
+        return self.dir / "tombstones" / f"tomb_{seq:08d}.bm"
+
+    @property
+    def compact_cursor_path(self) -> Path:
+        return self.dir / "compact_cursor.json"
 
     def exists(self) -> bool:
         return self.manifest_path.exists()
@@ -217,11 +275,51 @@ class IndexStore:
         if self._manifest is None:
             self._manifest = json.loads(self.manifest_path.read_text())
             v = self._manifest.get("format_version")
-            if v != FORMAT_VERSION:
+            if v not in SUPPORTED_VERSIONS:
                 raise ValueError(
                     f"store {self.dir} has format_version={v}; this reader "
-                    f"understands {FORMAT_VERSION} (see INDEX_FORMAT.md)")
+                    f"understands {list(SUPPORTED_VERSIONS)} "
+                    f"(see INDEX_FORMAT.md)")
         return self._manifest
+
+    def reload_manifest(self) -> dict:
+        """Drop the cached manifest and re-read from disk. Mutators
+        publish whole new manifests atomically (tmp+rename), so a live
+        reader polls through this — it either sees the old state or the
+        new, never a torn one."""
+        self._manifest = None
+        return self.manifest
+
+    # -- mutation-state accessors (empty/zero on v1 manifests) ---------------
+
+    @property
+    def generation(self) -> int:
+        return int(self.manifest.get("generation", 0))
+
+    @property
+    def deltas(self) -> List[dict]:
+        return list(self.manifest.get("deltas") or [])
+
+    @property
+    def tombstone(self) -> Optional[dict]:
+        return self.manifest.get("tombstone")
+
+    @property
+    def mutated(self) -> bool:
+        """True while uncompacted mutation state (deltas or tombstones)
+        is pending."""
+        m = self.manifest
+        return bool(m.get("deltas")) or m.get("tombstone") is not None
+
+    def total_rows(self) -> int:
+        """Gross rows: base + sealed deltas. Tombstoned rows keep their
+        slots (and ids) until compaction, so this never shrinks within a
+        generation."""
+        return int(self.manifest["n_total"]) + \
+            sum(int(d["rows"]) for d in self.deltas)
+
+    def delta_rows(self, delta_id: int) -> int:
+        return int(self.deltas[delta_id]["rows"])
 
     # -- writer side ---------------------------------------------------------
 
@@ -285,10 +383,8 @@ class IndexStore:
 
     # -- integrity -----------------------------------------------------------
 
-    def shard_checksums(self, shard_id: int) -> Optional[dict]:
-        """The shard's checksum sidecar, or None on a legacy (pre-sidecar)
-        shard — size checks still apply there, crc checks do not."""
-        path = self.shard_dir(shard_id) / CHECKSUM_FILE
+    def _read_sidecar(self, d: Path, ident) -> Optional[dict]:
+        path = d / CHECKSUM_FILE
         try:
             text = path.read_text()
         except FileNotFoundError:
@@ -296,14 +392,19 @@ class IndexStore:
         try:
             cks = json.loads(text)
         except ValueError:
-            raise self._integrity_fail(shard_id, CHECKSUM_FILE,
+            raise self._integrity_fail(ident, CHECKSUM_FILE,
                                        "unparseable sidecar") from None
         if cks.get("algo") != CHECKSUM_ALGO:
             raise self._integrity_fail(
-                shard_id, CHECKSUM_FILE,
+                ident, CHECKSUM_FILE,
                 f"unknown checksum algo {cks.get('algo')!r} "
                 f"(this reader verifies {CHECKSUM_ALGO!r})")
         return cks
+
+    def shard_checksums(self, shard_id: int) -> Optional[dict]:
+        """The shard's checksum sidecar, or None on a legacy (pre-sidecar)
+        shard — size checks still apply there, crc checks do not."""
+        return self._read_sidecar(self.shard_dir(shard_id), shard_id)
 
     @staticmethod
     def _integrity_fail(shard_id: int, file: str,
@@ -326,14 +427,29 @@ class IndexStore:
         injected bit-flip) at staging-assembly time. ``fields`` restricts
         the check to a subset (defaults: the arrays' keys, else every
         field)."""
+        self._verify_dir(self.shard_dir(shard_id), self.shard_rows(shard_id),
+                         shard_id, arrays=arrays, fields=fields)
+
+    def verify_delta(self, delta_id: int, *, arrays: Optional[dict] = None,
+                     fields: Optional[list] = None) -> None:
+        """`verify_shard` for a sealed delta shard (same file set, same
+        sidecar, same typed failure)."""
+        self._verify_dir(self.delta_dir(delta_id), self.delta_rows(delta_id),
+                         f"delta {delta_id:05d}", arrays=arrays,
+                         fields=fields)
+
+    def _verify_dir(self, d: Path, rows: int, ident, *,
+                    arrays: Optional[dict] = None,
+                    fields: Optional[list] = None) -> None:
+        """The one integrity checker for any shard-format directory (base
+        shard of any generation, delta shard). ``ident`` is the int shard
+        id or a descriptive string for the error message."""
         if fields is None:
             fields = sorted(arrays) if arrays is not None \
                 else list(_SHARD_FIELDS)
-        cks = self.shard_checksums(shard_id)       # may raise (bad sidecar)
+        cks = self._read_sidecar(d, ident)         # may raise (bad sidecar)
         files = cks["files"] if cks is not None else {}
-        rows = self.shard_rows(shard_id)
         M = self.manifest["M"]
-        d = self.shard_dir(shard_id)
         for name in fields:
             fname, dtype = _SHARD_FIELDS[name]
             expect = rows * (M if name == "codes" else 1) \
@@ -341,51 +457,69 @@ class IndexStore:
             rec = files.get(fname)
             if rec is not None and int(rec["bytes"]) != expect:
                 raise self._integrity_fail(
-                    shard_id, fname, f"sidecar records {rec['bytes']} bytes,"
+                    ident, fname, f"sidecar records {rec['bytes']} bytes,"
                     f" manifest implies {expect}")
             if arrays is not None:
                 arr = arrays[name]
                 if arr.nbytes != expect:
                     raise self._integrity_fail(
-                        shard_id, fname, f"host array is {arr.nbytes} "
+                        ident, fname, f"host array is {arr.nbytes} "
                         f"bytes, expected {expect}")
                 if rec is not None and _crc_array(arr) != int(rec["crc32"]):
                     raise self._integrity_fail(
-                        shard_id, fname, "crc32 mismatch on host array "
+                        ident, fname, "crc32 mismatch on host array "
                         "(corrupt read or bit flip)")
             else:
                 path = d / fname
                 try:
                     size = path.stat().st_size
                 except OSError:
-                    raise self._integrity_fail(shard_id, fname,
+                    raise self._integrity_fail(ident, fname,
                                                "missing") from None
                 if size != expect:
                     raise self._integrity_fail(
-                        shard_id, fname,
+                        ident, fname,
                         f"{size} bytes on disk, expected {expect} "
                         f"(truncated?)")
                 if rec is not None and _crc_file(path) != int(rec["crc32"]):
                     raise self._integrity_fail(
-                        shard_id, fname, "crc32 mismatch on disk")
+                        ident, fname, "crc32 mismatch on disk")
 
-    def write_shard(self, shard_id: int, *, codes: PackedCodes, assign,
-                    aq_norms, pw_norms) -> None:
-        """Atomically persist one shard (tmp dir + rename)."""
-        rows = self.shard_rows(shard_id)
+    @staticmethod
+    def _as_shard_arrays(codes, assign, aq_norms, pw_norms) -> dict:
         arrays = {
-            "codes": np.ascontiguousarray(np.asarray(codes.codes)),
+            "codes": np.ascontiguousarray(np.asarray(
+                codes.codes if isinstance(codes, PackedCodes) else codes)),
             "assign": np.asarray(assign, np.int32),
             "aq_norms": np.asarray(aq_norms, np.float32),
             "pw_norms": np.asarray(pw_norms, np.float32),
         }
         if arrays["codes"].dtype != CODE_DTYPE:
             raise ValueError(f"shard codes must be {np.dtype(CODE_DTYPE)}")
+        return arrays
+
+    def write_shard(self, shard_id: int, *, codes: PackedCodes, assign,
+                    aq_norms, pw_norms) -> None:
+        """Atomically persist one shard (tmp dir + rename)."""
+        self._publish_array_dir(
+            self.shard_dir(shard_id),
+            self._as_shard_arrays(codes, assign, aq_norms, pw_norms),
+            self.shard_rows(shard_id), f"shard {shard_id}")
+
+    def _publish_array_dir(self, final: Path, arrays: dict, rows: int,
+                           ident: str) -> None:
+        """The ONE writer for any shard-format directory — base shards
+        (builder, one-shot save), delta shards (`append`), and compaction
+        output all publish through here, which is what makes "compaction
+        output is byte-identical to a fresh build of the survivors" a
+        structural property rather than a test-enforced coincidence.
+
+        tmp dir -> tofile+fsync per field -> checksum sidecar -> fsync ->
+        rename -> fsync parent: atomic and power-loss durable."""
         for name, arr in arrays.items():
             if arr.shape[0] != rows:
-                raise ValueError(f"shard {shard_id} field {name}: "
+                raise ValueError(f"{ident} field {name}: "
                                  f"{arr.shape[0]} rows, expected {rows}")
-        final = self.shard_dir(shard_id)
         tmp = final.with_name(f".tmp_{final.name}")
         if tmp.exists():
             shutil.rmtree(tmp)
@@ -451,12 +585,238 @@ class IndexStore:
         except (ValueError, OSError):
             return None
 
+    def read_compact_cursor(self) -> Optional[dict]:
+        """The compactor's resume state (target generation + the mutation
+        signature it is folding), or None. Advisory like the build
+        cursor: shard presence in the target generation dir is ground
+        truth, and a signature mismatch wipes the partial output."""
+        try:
+            return json.loads(self.compact_cursor_path.read_text())
+        except (OSError, ValueError):
+            return None
+
+    # -- live mutation: delta shards + tombstone bitmap ----------------------
+
+    def gross_fill(self) -> np.ndarray:
+        """Per-bucket occupancy over base + delta rows, tombstoned rows
+        INCLUDED. Deleted rows keep their bucket slots until compaction,
+        which is what keeps every already-staged shard's within-bucket
+        ranks immutable under append/delete — the live view never has to
+        invalidate its pool. One O(N) pass over the assign mmaps
+        (4 B/row), codes never touched."""
+        m = self.manifest
+        fill = np.zeros(m["k_ivf"], np.int64)
+        for sid in range(m["n_shards"]):
+            a = np.asarray(self.open_shard(sid)["assign"])
+            fill += np.bincount(a, minlength=m["k_ivf"])
+        for d in self.deltas:
+            a = np.asarray(self.open_delta(int(d["id"]))["assign"])
+            fill += np.bincount(a, minlength=m["k_ivf"])
+        return fill
+
+    def append(self, xs, *, encode_chunk: int = 4096,
+               backend: str = "auto") -> np.ndarray:
+        """Encode new vectors into sealed delta shards and publish them
+        atomically in a v2 manifest. Returns the new rows' global ids.
+
+        Each delta holds at most ``shard_size`` rows, so a staged delta
+        never exceeds the pool's worst-case shard budget. Encoding runs
+        through the builder's `encode_rows` — the exact per-shard
+        pipeline a fresh build runs — with spill assignment continuing
+        from the GROSS bucket fill. (Appending after deletes may
+        therefore spill earlier than a fresh build of the survivors
+        would; compaction restores tight packing. In the spill-free
+        regime the delta's bytes equal what a fresh build of the same
+        rows would produce.)"""
+        from repro.index import builder as builder_mod
+        m = self.manifest
+        if not m["complete"]:
+            raise ValueError(f"store {self.dir} is incomplete; only a "
+                             f"finalized store accepts appends")
+        xs = np.ascontiguousarray(np.asarray(xs, np.float32))
+        if xs.ndim != 2:
+            raise ValueError(f"append expects (n, d) vectors, got "
+                             f"shape {xs.shape}")
+        if len(xs) == 0:
+            return np.empty(0, np.int64)
+        g = self.load_global_tree()
+        if xs.shape[1] != np.asarray(g["centroids"]).shape[1]:
+            raise ValueError(
+                f"append dim {xs.shape[1]} != store dim "
+                f"{np.asarray(g['centroids']).shape[1]}")
+        gt = builder_mod.make_pw_decoder(m, g)
+        gt["aq_books"] = jnp.asarray(g["aq_books"])
+        gt["qinco_params"] = jax.tree.map(jnp.asarray, g["qinco_params"])
+        cfg = QincoConfig(**m["cfg"])
+        fill = self.gross_fill()
+        base = self.total_rows()
+        prior = self.deltas
+        shard_size = int(m["shard_size"])
+        records = []
+        for lo in range(0, len(xs), shard_size):
+            chunk = xs[lo:lo + shard_size]
+            packed, assign, aq_norms, pw_norms, fill = builder_mod.encode_rows(
+                chunk, gt, cfg, fill, m["cap"],
+                encode_chunk=encode_chunk, backend=backend)
+            did = len(prior) + len(records)
+            self._publish_array_dir(
+                self.delta_dir(did),
+                self._as_shard_arrays(PackedCodes(packed, m["K"]), assign,
+                                      aq_norms, pw_norms),
+                len(chunk), f"delta {did:05d}")
+            records.append({"id": did, "rows": int(len(chunk))})
+        manifest = dict(m, deltas=prior + records,
+                        format_version=MUTATED_FORMAT_VERSION)
+        manifest.setdefault("generation", 0)
+        manifest.setdefault("tombstone", None)
+        self._write_manifest(manifest)
+        _C_DELTA_SHARDS.inc(len(records))
+        _C_DELTA_ROWS.inc(int(len(xs)))
+        return np.arange(base, base + len(xs), dtype=np.int64)
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids; returns how many were NEWLY deleted.
+
+        The whole bitmap (packed little-endian over the gross id space)
+        is rewritten to a fresh ``tomb_{seq}.bm`` and the manifest —
+        which doubles as the bitmap's integrity sidecar (bytes + crc32)
+        — is swapped atomically. Readers pinned to the old manifest keep
+        reading the old seq file; superseded files are unlinked only by
+        `gc_orphans` (the unlink-after-release rule)."""
+        m = self.manifest
+        n = self.total_rows()
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        if ids.size == 0:
+            return 0
+        if ids[0] < 0 or ids[-1] >= n:
+            raise ValueError(f"delete ids outside [0, {n})")
+        bits = self.tombstone_bits(n_rows=n)
+        newly = int(np.count_nonzero(~bits[ids]))
+        if newly == 0:
+            return 0
+        bits[ids] = True
+        t = m.get("tombstone")
+        seq = int(t["seq"]) + 1 if t is not None else 0
+        packed = np.packbits(bits, bitorder="little")
+        path = self.tombstone_path(seq)
+        path.parent.mkdir(exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            f.write(packed.tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, path)
+        _fsync_path(path.parent)
+        rec = {"seq": seq, "bytes": int(packed.nbytes),
+               "crc32": _crc_array(packed),
+               "n_deleted": int(np.count_nonzero(bits)), "n_rows": int(n)}
+        manifest = dict(m, tombstone=rec,
+                        format_version=MUTATED_FORMAT_VERSION)
+        manifest.setdefault("generation", 0)
+        manifest.setdefault("deltas", [])
+        self._write_manifest(manifest)
+        _C_DELETED.inc(newly)
+        return newly
+
+    def tombstone_bits(self, n_rows: Optional[int] = None) -> np.ndarray:
+        """The delete bitmap as bool over the gross id space, zero-padded
+        to ``n_rows`` (default `total_rows()` — rows appended after the
+        bitmap was written are alive by construction). Verifies the file
+        against the manifest record; a mismatch is a typed
+        `ShardIntegrityError`, like any other corrupt unit."""
+        if n_rows is None:
+            n_rows = self.total_rows()
+        t = self.manifest.get("tombstone")
+        if t is None:
+            return np.zeros(n_rows, bool)
+        ident = f"tombstone {int(t['seq']):08d}"
+        path = self.tombstone_path(int(t["seq"]))
+        try:
+            raw = path.read_bytes()
+        except OSError:
+            raise self._integrity_fail(ident, path.name, "missing") from None
+        packed = np.frombuffer(raw, np.uint8)
+        if packed.nbytes != int(t["bytes"]):
+            raise self._integrity_fail(
+                ident, path.name,
+                f"{packed.nbytes} bytes on disk, manifest records "
+                f"{t['bytes']}")
+        if _crc_array(packed) != int(t["crc32"]):
+            raise self._integrity_fail(ident, path.name,
+                                       "crc32 mismatch on disk")
+        bits = np.unpackbits(packed, bitorder="little")[:int(t["n_rows"])]
+        out = np.zeros(n_rows, bool)
+        k = min(n_rows, bits.size)
+        out[:k] = bits[:k].astype(bool)
+        return out
+
+    def orphan_paths(self) -> List[Path]:
+        """Paths the CURRENT manifest no longer references: delta dirs
+        folded by a compaction, base-shard generations older than the
+        manifest's, superseded tombstone seq files, tmp debris, and a
+        compact cursor whose target generation already published. A
+        partially-written target generation named by a live compact
+        cursor is excluded (it is resume state, not garbage)."""
+        m = self.manifest
+        found: List[Path] = []
+        gen = int(m.get("generation", 0))
+        keep_gen = {gen}
+        cur = self.read_compact_cursor()
+        if cur is not None:
+            if int(cur.get("generation", -1)) > gen:
+                keep_gen.add(int(cur["generation"]))
+            else:
+                found.append(self.compact_cursor_path)  # already published
+        sroot = self.dir / "shards"
+        if sroot.exists():
+            for p in sorted(sroot.iterdir()):
+                if p.name.startswith("gen_"):
+                    if int(p.name[4:]) not in keep_gen:
+                        found.append(p)
+                elif p.name.startswith("shard_"):
+                    if 0 not in keep_gen:
+                        found.append(p)
+                else:                             # .tmp_* debris
+                    found.append(p)
+        droot = self.dir / "deltas"
+        if droot.exists():
+            live = {self.delta_dir(int(d["id"])).name for d in self.deltas}
+            found.extend(p for p in sorted(droot.iterdir())
+                         if p.name not in live)
+        troot = self.dir / "tombstones"
+        if troot.exists():
+            t = m.get("tombstone")
+            live_t = {self.tombstone_path(int(t["seq"])).name} \
+                if t is not None else set()
+            found.extend(p for p in sorted(troot.iterdir())
+                         if p.name not in live_t)
+        return found
+
+    def gc_orphans(self) -> List[Path]:
+        """Unlink every `orphan_paths` entry.
+
+        Safe only once no reader is pinned to an older manifest — the
+        serving view calls this after its last old-state pin releases,
+        and mutators/compactors never unlink. Must not race a live
+        builder or compactor writing into this store. Returns the
+        removed paths."""
+        removed: List[Path] = []
+        for p in self.orphan_paths():
+            try:
+                if p.is_dir():
+                    shutil.rmtree(p)
+                else:
+                    p.unlink()
+            except OSError:
+                continue                          # a concurrent gc won
+            removed.append(p)
+        if removed:
+            _fsync_path(self.dir)
+        return removed
+
     # -- reader side ---------------------------------------------------------
 
-    def open_shard(self, shard_id: int) -> Dict[str, np.ndarray]:
-        """mmap views over one shard's raw files (zero-copy until touched)."""
-        rows = self.shard_rows(shard_id)
-        d = self.shard_dir(shard_id)
+    def _open_array_dir(self, d: Path, rows: int) -> Dict[str, np.ndarray]:
         M = self.manifest["M"]
         out = {}
         for name, (fname, dtype) in _SHARD_FIELDS.items():
@@ -464,6 +824,16 @@ class IndexStore:
             out[name] = np.memmap(d / fname, dtype=dtype, mode="r",
                                   shape=shape)
         return out
+
+    def open_shard(self, shard_id: int) -> Dict[str, np.ndarray]:
+        """mmap views over one shard's raw files (zero-copy until touched)."""
+        return self._open_array_dir(self.shard_dir(shard_id),
+                                    self.shard_rows(shard_id))
+
+    def open_delta(self, delta_id: int) -> Dict[str, np.ndarray]:
+        """`open_shard` for a sealed delta shard."""
+        return self._open_array_dir(self.delta_dir(delta_id),
+                                    self.delta_rows(delta_id))
 
     def done_shards(self) -> int:
         """Number of completed shards, counted as the on-disk prefix."""
@@ -516,6 +886,13 @@ class IndexStore:
             raise ValueError(
                 f"store {self.dir} is incomplete (builder still running or "
                 f"killed); pass allow_partial=True to read anyway")
+        if self.mutated:
+            raise ValueError(
+                f"store {self.dir} carries uncompacted mutation state "
+                f"(delta shards and/or tombstones); `load` materializes "
+                f"base shards only and would silently drop appends or "
+                f"resurrect deletes — serve it through ShardedIndexView, "
+                f"or run `python -m repro.index.compact` first")
         g = self.load_global_tree()
         arrs = self.load_arrays(
             n_shards=None if m["complete"] else self.done_shards())
@@ -599,6 +976,34 @@ class IndexStore:
 # ---------------------------------------------------------------------------
 
 
+class _ViewState:
+    """One immutable snapshot of what a `ShardedIndexView` is serving —
+    the manifest's shard set resolved into scan units ("tokens"), their
+    metadata, and the tombstone mask. `refresh()` builds a NEW state and
+    swaps it in atomically; a search pins the state it started with
+    (`view.pin()` / `view.unpin(st)`) and is therefore immune to any
+    concurrent mutation, including a compaction that changes every path.
+
+    Tokens: a base shard keeps its integer id (>= 0); delta shard j is
+    token ``-(j + 1)``. Negative ints sort, hash, and key the staging
+    pool exactly like shard ids, so nothing downstream special-cases
+    deltas — and on an unmutated store tokens ARE the historical shard
+    ids, byte-for-byte the same pool keys as before.
+
+    Within-bucket ranks are GROSS (tombstoned rows keep their slots):
+    a staged shard's (ext, wbr, aq_norms) is an immutable fact of its
+    bytes, so append/delete never invalidate pool entries — only a
+    compaction (generation change) retires the owner wholesale.
+    ``bucket_fill`` is the ALIVE fill (what a rebuilt survivor store
+    would pad with); the gross fill continues in `fill_gross` so new
+    delta shards can extend the ranks incrementally."""
+
+    __slots__ = ("owner", "generation", "sig", "tokens", "scan_order",
+                 "rows", "lo", "wbr", "hit", "dead", "open_bad",
+                 "fill_gross", "bucket_fill", "n_base", "n_rows", "n_dead",
+                 "delta_lo", "delta_tokens", "refs")
+
+
 class ShardedIndexView:
     """Out-of-core view of a store: shards stay mmap'd on disk and are
     staged to the device through a bounded `staging.StagingPool` LRU, so
@@ -667,6 +1072,18 @@ class ShardedIndexView:
     returned by this class (or cached by the pool) aliases the store
     directory — deleting or rewriting the store invalidates only future
     calls, never arrays already handed out.
+
+    Live mutation: everything per-shard above actually lives on an
+    immutable `_ViewState` snapshot. `refresh()` resolves the store's
+    current manifest (new delta shards from `append`, a new tombstone
+    bitmap from `delete`, a new generation from compaction) into a new
+    snapshot and swaps it in; `search_sharded` pins the snapshot it
+    starts with (`pin`/`unpin`), so admitted queries are never changed
+    mid-flight. Delta shards stage through the same pool under negative
+    tokens; tombstoned rows are masked inside the fused `adc_topk` scan
+    via per-token `dead` bitmaps (see `kernels.ops.TOMBSTONE_PENALTY`).
+    On an unmutated store all of this is inert: one snapshot, tokens ==
+    shard ids, `dead` empty — the historical bit-exact path.
     """
 
     def __init__(self, store, *, max_resident_shards: int = 2,
@@ -674,7 +1091,6 @@ class ShardedIndexView:
                  host_cache_bytes: Optional[int] = None,
                  prefetch: bool = True, verify: bool = True,
                  faults=None):
-        from repro.core import ivf as ivf_mod
         from repro.core import pairwise as pw_mod
         from repro.index.staging import StagingPool
 
@@ -688,14 +1104,6 @@ class ShardedIndexView:
         if max_resident_shards < 1:
             raise ValueError("max_resident_shards must be >= 1")
         self.max_resident_shards = int(max_resident_shards)
-        self.shard_ids = [s for s in range(m["n_shards"])
-                          if self.store.shard_done(s)]
-        if not self.shard_ids:
-            raise ValueError(f"store {self.store.dir} has no completed "
-                             f"shards to search")
-        if self.shard_ids[0] != 0:
-            raise ValueError("shard 0 is required (bucket-table padding "
-                             "ids resolve to row 0)")
         self.cfg = QincoConfig(**m["cfg"])
         self.M = int(m["M"])
         self.K = int(m["K"])
@@ -703,7 +1111,6 @@ class ShardedIndexView:
         self.cap = int(m["cap"])
         self.shard_size = int(m["shard_size"])
         self.n_total = int(m["n_total"])
-        self.n_rows = sum(self.store.shard_rows(s) for s in self.shard_ids)
 
         g = self.store.load_global_tree()
         self.centroids = jnp.asarray(g["centroids"])
@@ -718,36 +1125,17 @@ class ShardedIndexView:
         self.verify = bool(verify)
         self.faults = faults
         self.quarantined: set = set()
-        self._open_bad: set = set()    # quarantined at open: no ranks/bitmap
-        if self.verify:
-            for sid in self.shard_ids:
-                try:
-                    self.store.verify_shard(sid, fields=["assign"])
-                except ShardIntegrityError:
-                    self._quarantine(sid)
-                    self._open_bad.add(sid)
-
-        # one pass over the assign mmaps: within-bucket ranks + fills,
-        # plus each shard's bucket-occupancy bitmap (which buckets have at
-        # least one row here — what probe-aware scheduling skips on)
-        fill = np.zeros(self.k_ivf, np.int64)
-        self._wbr: Dict[int, np.ndarray] = {}
-        self._bucket_hit: Dict[int, np.ndarray] = {}
-        for sid in self.shard_ids:
-            if sid in self._open_bad:
-                continue
-            a = np.asarray(self.store.open_shard(sid)["assign"])
-            self._wbr[sid], new_fill = ivf_mod.within_bucket_ranks(
-                a, self.k_ivf, fill)
-            self._bucket_hit[sid] = new_fill > fill        # (k_ivf,) bool
-            fill = new_fill
-        self.bucket_fill = jnp.asarray(fill.astype(np.int32))  # (k_ivf,)
 
         # ext dtype: keep the packed-byte wire form whenever it can also
         # carry the assignment column (kernels widen in-VMEM either way)
         self._ext_dtype = (np.uint8 if self.K <= 256 and self.k_ivf <= 256
                            else np.int32)
-        worst = max(self.shard_staged_bytes(s) for s in self.shard_ids)
+        # worst-case staged shard = one full shard_size unit — delta
+        # shards are sealed at <= shard_size rows precisely so they fit
+        # the same bound (and on a complete store a full base shard IS
+        # shard_size rows, so this equals the historical per-shard max)
+        worst = self.shard_size * (
+            (self.M + 1) * np.dtype(self._ext_dtype).itemsize + 4 + 4)
         # ``prefetch`` configures the PRIVATE pool only (a shared pool's
         # policy belongs to whoever constructed it)
         self.pool = pool if pool is not None else StagingPool(
@@ -755,8 +1143,236 @@ class ShardedIndexView:
             max_entries=self.max_resident_shards,
             host_cache_bytes=host_cache_bytes, prefetch=prefetch,
             faults=faults)
-        self._owner = self.pool.register()
+        self._lock = threading.Lock()
+        self._refresh_lock = threading.Lock()
+        self._retired: List[_ViewState] = []
+        self._st = self._build_state(None)
+        _G_GENERATION.set(self._st.generation)
         self.skipped_shards_total = 0
+
+    # -- state snapshots: build / pin / refresh ------------------------------
+
+    def _build_state(self, prev: Optional[_ViewState]) -> "_ViewState":
+        """Resolve the store's CURRENT manifest into a `_ViewState`.
+        With ``prev`` of the same generation, the pass is incremental:
+        ranks/bitmaps are computed only for tokens prev hasn't seen
+        (one pass per NEW shard), continuing prev's gross fill — valid
+        because within a generation shards are only ever added (a
+        builder extends the base prefix of an incomplete store; `append`
+        seals new deltas on a complete one; never both)."""
+        from repro.core import ivf as ivf_mod
+        store = self.store
+        m = store.manifest
+        gen = int(m.get("generation", 0))
+        base_ids = [s for s in range(m["n_shards"]) if store.shard_done(s)]
+        deltas = [(int(d["id"]), int(d["rows"]))
+                  for d in (m.get("deltas") or [])]
+        t = m.get("tombstone")
+        sig = (gen, len(base_ids), tuple(d for d, _ in deltas),
+               None if t is None else int(t["seq"]))
+        if prev is not None and prev.sig == sig:
+            return prev
+        if not base_ids:
+            raise ValueError(f"store {store.dir} has no completed "
+                             f"shards to search")
+        if base_ids[0] != 0:
+            raise ValueError("shard 0 is required (bucket-table padding "
+                             "ids resolve to row 0)")
+
+        st = _ViewState()
+        st.generation = gen
+        st.sig = sig
+        st.refs = 0
+        st.n_base = int(m["n_total"])
+        st.scan_order = list(base_ids) + [-(d + 1) for d, _ in deltas]
+        st.tokens = sorted(st.scan_order)
+        st.rows = {s: store.shard_rows(s) for s in base_ids}
+        st.lo = {s: s * self.shard_size for s in base_ids}
+        off = st.n_base
+        st.delta_tokens = []
+        dlo = []
+        for did, r in deltas:
+            tok = -(did + 1)
+            st.rows[tok] = r
+            st.lo[tok] = off
+            st.delta_tokens.append(tok)
+            dlo.append(off)
+            off += r
+        st.delta_lo = np.asarray(dlo, np.int64)
+        st.n_rows = sum(st.rows.values())
+
+        incremental = prev is not None and prev.generation == gen
+        if incremental:
+            st.owner = prev.owner
+            wbr, hit = dict(prev.wbr), dict(prev.hit)
+            fill = prev.fill_gross.copy()
+            open_bad = set(prev.open_bad)
+            done = set(prev.scan_order)
+        else:
+            st.owner = self.pool.register()
+            wbr, hit = {}, {}
+            fill = np.zeros(self.k_ivf, np.int64)
+            open_bad, done = set(), set()
+
+        # one pass over each NEW token's assign mmap: within-bucket ranks
+        # continuing the running GROSS fill, plus the bucket-occupancy
+        # bitmap probe-aware scheduling skips on
+        for tok in st.scan_order:
+            if tok in done:
+                continue
+            if self.verify:
+                try:
+                    if tok < 0:
+                        store.verify_delta(-tok - 1, fields=["assign"])
+                    else:
+                        store.verify_shard(tok, fields=["assign"])
+                except ShardIntegrityError:
+                    self._quarantine(tok)
+                    open_bad.add(tok)
+                    continue
+            a = np.asarray(self._open_token(tok, st)["assign"])
+            wbr[tok], new_fill = ivf_mod.within_bucket_ranks(
+                a, self.k_ivf, fill)
+            hit[tok] = new_fill > fill            # (k_ivf,) bool
+            fill = new_fill
+        st.wbr, st.hit, st.open_bad, st.fill_gross = wbr, hit, open_bad, fill
+
+        # tombstones: slice the global bitmap into per-token dead masks
+        # (None for all-alive tokens keeps the historical bit-exact jit
+        # variant) and subtract dead rows from the padding fill
+        st.dead = {}
+        st.n_dead = 0
+        alive = fill
+        if t is not None:
+            bits = store.tombstone_bits(n_rows=st.n_base + sum(
+                r for _, r in deltas))
+            dead_fill = np.zeros(self.k_ivf, np.int64)
+            for tok in st.scan_order:
+                if tok in open_bad:
+                    continue
+                db = bits[st.lo[tok]:st.lo[tok] + st.rows[tok]]
+                if db.any():
+                    st.dead[tok] = np.ascontiguousarray(db)
+                    st.n_dead += int(np.count_nonzero(db))
+                    a = np.asarray(self._open_token(tok, st)["assign"])
+                    dead_fill += np.bincount(a[db], minlength=self.k_ivf)
+            alive = fill - dead_fill
+        st.bucket_fill = jnp.asarray(alive.astype(np.int32))   # (k_ivf,)
+        return st
+
+    def _open_token(self, token: int, st: "_ViewState") -> dict:
+        """mmap one token's files, addressed entirely through the state
+        snapshot (a retired state keeps reading its own generation's
+        paths even after the manifest moved on)."""
+        if token < 0:
+            d = self.store.delta_dir(-token - 1)
+        else:
+            d = self.store.shard_dir(token, generation=st.generation)
+        return self.store._open_array_dir(d, st.rows[token])
+
+    def pin(self) -> "_ViewState":
+        """Pin the current state for one search call: everything the
+        call touches (tokens, ranks, dead masks, pool keys) comes from
+        this snapshot, so a concurrent `refresh` never changes a search
+        already admitted. Balance with `unpin`."""
+        with self._lock:
+            st = self._st
+            st.refs += 1
+            return st
+
+    def unpin(self, st: "_ViewState") -> None:
+        with self._lock:
+            st.refs -= 1
+        self._maybe_gc()
+
+    def refresh(self) -> bool:
+        """Re-read the manifest and adopt newly published deltas,
+        tombstones, or a compacted generation without reopening the
+        view. Returns True when anything changed. In-flight searches
+        keep their pinned snapshot; after a generation change the old
+        state's staged entries are dropped — and the superseded on-disk
+        files unlinked — only once its last pin releases."""
+        with self._refresh_lock:
+            self.store.reload_manifest()
+            prev = self._st
+            new = self._build_state(prev)
+            if new is prev:
+                return False
+            with self._lock:
+                self._st = new
+                if new.owner != prev.owner:
+                    self._retired.append(prev)
+                    # a new generation rewrote every path: stale verdicts
+                    # (and stale open_bad) do not carry over
+                    self.quarantined = set()
+            _C_REFRESH.inc()
+            _G_GENERATION.set(new.generation)
+        self._maybe_gc()
+        return True
+
+    def _maybe_gc(self) -> None:
+        """Drop retired states whose last pin (and last pool pin) has
+        released; once none remain, unlink the files the current
+        manifest no longer references. This is the unlink-after-release
+        rule compaction relies on: the compactor itself never unlinks."""
+        drop, gc_store = [], False
+        with self._lock:
+            still = []
+            for st in self._retired:
+                if st.refs == 0 and self.pool.owner_pins(st.owner) == 0:
+                    drop.append(st)
+                else:
+                    still.append(st)
+            self._retired = still
+            if drop and not still:
+                cur_gen = self._st.generation
+                gc_store = any(st.generation != cur_gen for st in drop)
+        for st in drop:
+            self.pool.drop_owner(st.owner)
+        if gc_store:
+            try:
+                self.store.gc_orphans()
+            except OSError:
+                pass
+
+    # -- legacy single-state attribute shims ---------------------------------
+
+    @property
+    def shard_ids(self) -> list:
+        return list(self._st.tokens)
+
+    @property
+    def n_rows(self) -> int:
+        """Gross rows served (base + deltas, tombstoned rows included)."""
+        return self._st.n_rows
+
+    @property
+    def n_alive(self) -> int:
+        return self._st.n_rows - self._st.n_dead
+
+    @property
+    def generation(self) -> int:
+        return self._st.generation
+
+    @property
+    def _owner(self) -> int:
+        return self._st.owner
+
+    @property
+    def _wbr(self) -> dict:
+        return self._st.wbr
+
+    @property
+    def _bucket_hit(self) -> dict:
+        return self._st.hit
+
+    @property
+    def _open_bad(self) -> set:
+        return self._st.open_bad
+
+    @property
+    def bucket_fill(self):
+        return self._st.bucket_fill
 
     def _quarantine(self, shard_id: int) -> None:
         if shard_id not in self.quarantined:
@@ -765,9 +1381,10 @@ class ShardedIndexView:
 
     # -- staging through the pool --------------------------------------------
 
-    def shard_staged_bytes(self, shard_id: int) -> int:
-        """Device bytes one staged shard costs (ext + wbr + aq_norms)."""
-        rows = self.store.shard_rows(shard_id)
+    def shard_staged_bytes(self, shard_id: int, st=None) -> int:
+        """Device bytes one staged token costs (ext + wbr + aq_norms)."""
+        st = self._st if st is None else st
+        rows = st.rows[shard_id]
         return rows * ((self.M + 1) * np.dtype(self._ext_dtype).itemsize
                        + 4 + 4)
 
@@ -782,7 +1399,7 @@ class ShardedIndexView:
 
     @property
     def resident_shards(self):
-        return self.pool.resident_keys(self._owner)
+        return self.pool.resident_keys(self._st.owner)
 
     @property
     def resident_bytes(self) -> int:
@@ -792,11 +1409,12 @@ class ShardedIndexView:
     def peak_resident_bytes(self) -> int:
         return self.pool.peak_resident_bytes
 
-    def _host_shard(self, shard_id: int) -> dict:
-        """Assemble one shard's host-side scan arrays (the expensive part
+    def _host_shard(self, shard_id: int, st=None) -> dict:
+        """Assemble one token's host-side scan arrays (the expensive part
         of staging — mmap read + concatenate + astype; the unit the
         pool's host cache holds on to). Returns fresh arrays only, never
-        mmap views (the pool's no-aliasing contract).
+        mmap views (the pool's no-aliasing contract). Base shards and
+        delta shards assemble identically — only the source dir differs.
 
         This is also the integrity choke point: with ``verify`` on, the
         read-back bytes are size- and crc-checked here, i.e. once per
@@ -804,9 +1422,10 @@ class ShardedIndexView:
         steady-state acquires pay nothing. A failure quarantines the
         shard and raises `ShardIntegrityError` — the pool aborts the
         reservation and `search_sharded` decides skip-vs-raise."""
+        st = self._st if st is None else st
         if self.faults is not None:
             self.faults.on_read(shard_id)      # may sleep / raise OSError
-        sh = self.store.open_shard(shard_id)
+        sh = self._open_token(shard_id, st)
         arrays = {"codes": np.asarray(sh["codes"]),
                   "assign": np.asarray(sh["assign"]),
                   "aq_norms": np.asarray(sh["aq_norms"])}
@@ -814,97 +1433,138 @@ class ShardedIndexView:
             arrays = self.faults.corrupt_arrays(shard_id, arrays)
         if self.verify:
             try:
-                self.store.verify_shard(shard_id, arrays=arrays)
+                if shard_id < 0:
+                    self.store._verify_dir(
+                        self.store.delta_dir(-shard_id - 1),
+                        st.rows[shard_id], f"delta {-shard_id - 1:05d}",
+                        arrays=arrays)
+                else:
+                    self.store._verify_dir(
+                        self.store.shard_dir(shard_id,
+                                             generation=st.generation),
+                        st.rows[shard_id], shard_id, arrays=arrays)
             except ShardIntegrityError:
                 self._quarantine(shard_id)
                 raise
         ext = np.concatenate(
             [arrays["codes"].astype(self._ext_dtype, copy=False),
              arrays["assign"].astype(self._ext_dtype)[:, None]], axis=1)
-        return {"ext": ext, "wbr": self._wbr[shard_id],
+        return {"ext": ext, "wbr": st.wbr[shard_id],
                 "aq_norms": arrays["aq_norms"]}
 
-    def acquire(self, shard_id: int) -> dict:
-        """Device-staged arrays for one shard, pinned until `release`."""
+    def acquire(self, shard_id: int, st=None) -> dict:
+        """Device-staged arrays for one token, pinned until `release`."""
         from functools import partial
-        return self.pool.acquire((self._owner, shard_id),
-                                 partial(self._host_shard, shard_id),
-                                 self.shard_staged_bytes(shard_id))
+        st = self._st if st is None else st
+        return self.pool.acquire((st.owner, shard_id),
+                                 partial(self._host_shard, shard_id, st),
+                                 self.shard_staged_bytes(shard_id, st))
 
-    def release(self, shard_id: int) -> None:
-        self.pool.release((self._owner, shard_id))
+    def release(self, shard_id: int, st=None) -> None:
+        st = self._st if st is None else st
+        self.pool.release((st.owner, shard_id))
 
-    def prefetch(self, shard_id: int) -> bool:
-        """Stage a shard in the background (evict-at-issue; see
+    def prefetch(self, shard_id: int, st=None) -> bool:
+        """Stage a token in the background (evict-at-issue; see
         `staging.StagingPool.prefetch`). Safe to call speculatively.
         Quarantined shards are refused — re-reading them can only fail
         the same integrity check again."""
         if shard_id in self.quarantined:
             return False
         from functools import partial
-        return self.pool.prefetch((self._owner, shard_id),
-                                  partial(self._host_shard, shard_id),
-                                  self.shard_staged_bytes(shard_id))
+        st = self._st if st is None else st
+        return self.pool.prefetch((st.owner, shard_id),
+                                  partial(self._host_shard, shard_id, st),
+                                  self.shard_staged_bytes(shard_id, st))
 
-    def staged(self, shard_id: int) -> dict:
-        """Device-staged arrays for one shard, through the LRU
+    def staged(self, shard_id: int, st=None) -> dict:
+        """Device-staged arrays for one token, through the LRU
         (unpinned — the single-threaded convenience form of `acquire`)."""
-        entry = self.acquire(shard_id)
-        self.release(shard_id)
+        entry = self.acquire(shard_id, st)
+        self.release(shard_id, st)
         return entry
 
     # -- probe-aware scan scheduling -----------------------------------------
 
-    def schedule_shards(self, probed_buckets) -> list:
-        """Scan order for one query batch: shards with zero probed
+    def schedule_shards(self, probed_buckets, st=None) -> list:
+        """Scan order for one query batch: tokens with zero probed
         buckets are dropped (their rows could only contribute non-probed
         `-inf` entries, which the rank-keyed merge never selects —
         padding always supplies enough better-ranked slots), and the
-        remainder is ordered resident-shards-first to minimize evictions
+        remainder is ordered resident-tokens-first to minimize evictions
         under a tight budget. The merge is keyed by resident-candidate
-        rank, so any order is bit-identical."""
+        rank, so any order is bit-identical. Occupancy bitmaps are GROSS:
+        a token whose probed rows are all tombstoned still folds (its
+        dead rows score below every finite candidate), trading a little
+        scan waste for never having to rebuild bitmaps on delete."""
+        st = self._st if st is None else st
         probed = np.unique(np.asarray(probed_buckets).reshape(-1))
-        hit = [s for s in self.shard_ids if s not in self._open_bad
-               and bool(self._bucket_hit[s][probed].any())]
-        skipped = len(self.shard_ids) - len(self._open_bad) - len(hit)
+        hit = [s for s in st.scan_order if s not in st.open_bad
+               and bool(st.hit[s][probed].any())]
+        skipped = len(st.scan_order) - len(st.open_bad) - len(hit)
         self.skipped_shards_total += skipped      # legacy per-view attr
         if skipped:
             _C_SKIPPED.inc(skipped)
-        resident = set(self.resident_shards)
-        # shards quarantined at open have no occupancy bitmap, so they
+        resident = set(self.pool.resident_keys(st.owner))
+        # tokens quarantined at open have no occupancy bitmap, so they
         # cannot be probe-skipped: schedule them last — the search loop
         # raises or skips per its error policy, and coverage accounting
         # needs to see them as scheduled-but-unusable
         return ([s for s in hit if s in resident]
                 + [s for s in hit if s not in resident]
-                + sorted(self._open_bad))
+                + sorted(st.open_bad))
 
     # -- shortlist row gather (steps 3-4 of the cascade) ---------------------
 
-    def gather_rows(self, gids):
+    def gather_rows(self, gids, st=None):
         """Host gather of shortlist rows straight off the shard mmaps:
         only the requested rows' bytes are touched (the out-of-core
         re-rank reads O(Q * shortlist), not O(N)).
 
+        Base ids resolve by division (manifest addressing, id gaps where
+        shards are missing); ids >= the base row count resolve into delta
+        shards through the state's start offsets. All paths are addressed
+        through the pinned state, so a gather keeps working mid-compaction.
+
         gids: int array of GLOBAL ids, any shape -> (codes uint8
         (..., M), assign int32 (...,), pw_norms float32 (...,)).
         """
+        st = self._st if st is None else st
         gids = np.asarray(gids)
         flat = gids.reshape(-1).astype(np.int64)
         codes = np.empty((flat.size, self.M), np.uint8)
         assign = np.empty(flat.size, np.int32)
         pw_norms = np.empty(flat.size, np.float32)
-        sid_of = flat // self.shard_size
-        loc = flat - sid_of * self.shard_size
-        for sid in np.unique(sid_of):
-            if not self.store.shard_done(int(sid)):
+        base_sel = flat < st.n_base
+        sid_of = np.where(base_sel, flat // self.shard_size, np.int64(-1))
+        for sid in np.unique(sid_of[base_sel]):
+            sid = int(sid)
+            if sid not in st.rows:
                 raise ValueError(f"row gather hit missing shard {sid} "
                                  f"(id outside the searched set?)")
             sel = sid_of == sid
-            sh = self.store.open_shard(int(sid))
-            codes[sel] = sh["codes"][loc[sel]]
-            assign[sel] = sh["assign"][loc[sel]]
-            pw_norms[sel] = sh["pw_norms"][loc[sel]]
+            sh = self._open_token(sid, st)
+            loc = flat[sel] - sid * self.shard_size
+            codes[sel] = sh["codes"][loc]
+            assign[sel] = sh["assign"][loc]
+            pw_norms[sel] = sh["pw_norms"][loc]
+        if not base_sel.all():
+            rest = np.nonzero(~base_sel)[0]
+            if st.delta_lo.size == 0 or \
+                    flat[rest].max() >= st.n_base + \
+                    sum(st.rows[t] for t in st.delta_tokens):
+                raise ValueError(f"row gather hit id beyond the served "
+                                 f"rows (id outside the searched set?)")
+            which = np.searchsorted(st.delta_lo, flat[rest],
+                                    side="right") - 1
+            for w in np.unique(which):
+                tok = st.delta_tokens[int(w)]
+                sel = rest[which == w]
+                sh = self._open_token(tok, st)
+                loc = flat[sel] - st.lo[tok]
+                codes[sel] = sh["codes"][loc]
+                assign[sel] = sh["assign"][loc]
+                pw_norms[sel] = sh["pw_norms"][loc]
         return (codes.reshape(gids.shape + (self.M,)),
                 assign.reshape(gids.shape),
                 pw_norms.reshape(gids.shape))

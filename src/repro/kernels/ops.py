@@ -396,8 +396,20 @@ def _adc_topk_impl(codes, lut, k, *, norms, backend, tile_q, tile_n,
                           tile_n=tile_n, interpret=interpret)
 
 
-def adc_topk(codes, lut, k: int, *, norms=None, backend: str = "auto",
-             tile_q: int = None, tile_n: int = None,
+# Tombstone masking penalty (docs/INDEX_FORMAT.md "Mutation"): a deleted
+# row's norms are inflated by this finite constant, so its score
+# 2*ip - (norms + penalty) lands around -2e30 — below every live
+# candidate AND below the -1e30 non-probed LUT entries — without ever
+# introducing an inf/NaN into the one-hot matmul (the same reason the
+# probe mask uses -1e30 instead of -inf). The caller post-masks the few
+# surviving tombstoned entries to exact -inf by id, so the penalty only
+# needs to keep dead rows out of the per-shard shortlist, not to be
+# numerically exact.
+TOMBSTONE_PENALTY = np.float32(2e30)
+
+
+def adc_topk(codes, lut, k: int, *, norms=None, dead=None,
+             backend: str = "auto", tile_q: int = None, tile_n: int = None,
              interpret: bool | None = None):
     """Fused shared-codes ADC scan + local top-k shortlist.
 
@@ -407,7 +419,17 @@ def adc_topk(codes, lut, k: int, *, norms=None, backend: str = "auto",
     merged into a running per-query top-k inside VMEM. Tie-breaking is
     lowest-index-first on both backends (the `lax.top_k` contract).
     With ``norms`` the merged values are ``2 * ip - norms``.
+
+    ``dead`` ((N,) bool, optional) tombstone-masks rows inside the fused
+    scan: `TOMBSTONE_PENALTY` is folded into the norms the kernel already
+    subtracts, so dead rows score ~-2e30 and lose to every live (and even
+    every non-probed) candidate on both backends — no kernel change, no
+    extra scan pass. ``dead=None`` (the default) adds nothing, keeping
+    unmutated stores bit-exactly on their historical path.
     """
+    if dead is not None:
+        penalty = jnp.where(dead, TOMBSTONE_PENALTY, np.float32(0.0))
+        norms = penalty if norms is None else norms + penalty
     return _adc_topk_impl(codes, lut, k, norms=norms, backend=backend,
                           tile_q=tuning.tile("adc_topk", "tile_q", tile_q),
                           tile_n=tuning.tile("adc_topk", "tile_n", tile_n),

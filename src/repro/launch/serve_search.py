@@ -19,6 +19,14 @@ With ``--out-of-core`` the store is served through a `ShardedIndexView`
 residency is bounded by the shard LRU (``--max-resident-shards``), and
 results are bit-identical to resident serving — database size becomes
 independent of device memory.
+
+With ``--port`` the in-process server goes behind the socket front door
+(framed TCP, continuous batching, shedding, graceful drain — see
+docs/SERVING.md); adding ``--refresh-ms N`` makes the serving loop poll
+the store every N ms and adopt published mutations (delta shards,
+tombstones, compacted generations) without a restart. A refresh swaps
+an immutable snapshot: already-admitted batches answer from the state
+they were dispatched against, never a mixed generation.
 """
 from __future__ import annotations
 
@@ -889,6 +897,11 @@ class SearchFrontDoor:
                               else 0.8 * self._ewma_batch_s + 0.2 * service)
         cov = t.server.last_coverage
         t_done = time.perf_counter()
+        # same no-read-your-own-answer rule as _count_answered below:
+        # once a client holds its reply, the batch must already be in
+        # the counters
+        self.n_batches += 1
+        _C_FD_BATCHES.inc()
         off = 0
         for r in batch:
             body = (np.ascontiguousarray(ids[off:off + r.n], "<i4").tobytes()
@@ -913,8 +926,6 @@ class SearchFrontDoor:
             if self._lat_fallback is not None:
                 self._lat_fallback.append(lat)
             off += r.n
-        self.n_batches += 1
-        _C_FD_BATCHES.inc()
         occ = rows / t.server.micro_batch
         self._occ.append(occ)
         _G_FD_OCC.set(occ)
@@ -975,10 +986,26 @@ def _serve_socket(args, server: SearchServer, index) -> FrontDoorStats:
         for sig in (signal.SIGTERM, signal.SIGINT):
             signal.signal(sig, lambda *_: stop.set())
     # serve until told to stop; a harness embedding main() on a side
-    # thread calls last_front_door.shutdown() instead of signaling
+    # thread calls last_front_door.shutdown() instead of signaling.
+    # --refresh-ms: poll the store for published mutations (delta
+    # shards, tombstones, a compacted generation) between waits; the
+    # swap is atomic and pinned in-flight batches keep their snapshot,
+    # so answers mid-refresh are never mixed-generation
+    refresh_s = (args.refresh_ms / 1e3) if args.refresh_ms else None
+    next_refresh = (time.monotonic() + refresh_s) if refresh_s else None
     while not stop.is_set():
         if front._dispatcher is not None and not front._dispatcher.is_alive():
             break                              # drained via shutdown()
+        if next_refresh is not None and time.monotonic() >= next_refresh:
+            try:
+                if index.refresh():
+                    print(f"[serve_search] refreshed: "
+                          f"generation={index.generation} "
+                          f"rows={index.n_alive} alive", flush=True)
+            except Exception as e:             # keep serving the old state
+                print(f"[serve_search] refresh failed ({e}); retrying",
+                      flush=True)
+            next_refresh = time.monotonic() + refresh_s
         stop.wait(timeout=0.2)
     print("[serve_search] draining...", flush=True)
     clean = front.shutdown()
@@ -1082,6 +1109,11 @@ def main(argv: Optional[list] = None):
     ap.add_argument("--shed-watermark", type=float, default=0.75,
                     help="fraction of --max-queue past which requests "
                          "are shed RESOURCE_EXHAUSTED")
+    ap.add_argument("--refresh-ms", type=float, default=None,
+                    help="poll the store every N ms and pick up published "
+                         "delta shards / tombstones / compacted "
+                         "generations without restarting (socket mode, "
+                         "out-of-core only)")
     ap.add_argument("--quota", type=int, default=None,
                     help="per-tenant queued-row quota (default: the "
                          "whole queue)")
@@ -1094,13 +1126,17 @@ def main(argv: Optional[list] = None):
             ("--chaos", args.chaos is not None),
             ("--deadline-ms", args.deadline_ms is not None),
             ("--on-shard-error skip", args.on_shard_error == "skip"),
-            ("--no-verify", args.no_verify)) if on]
+            ("--no-verify", args.no_verify),
+            ("--refresh-ms", args.refresh_ms is not None)) if on]
         if bad:
             ap.error(f"{', '.join(bad)} require(s) --out-of-core: these "
                      f"knobs act on the sharded read path (fault "
                      f"injection, shard deadline ejection, skip-on-error, "
                      f"checksum verification) and would silently do "
                      f"nothing on a resident index")
+    if args.refresh_ms is not None and args.port is None:
+        ap.error("--refresh-ms requires --port: the stream mode drains a "
+                 "fixed synthetic batch and never revisits the store")
 
     global last_metrics_server
     if args.metrics_port is not None:

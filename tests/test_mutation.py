@@ -1,0 +1,402 @@
+"""Live index mutation: delta shards, tombstoned deletes, compaction.
+
+The contract under test (docs/INDEX_FORMAT.md "Mutation"):
+
+- `IndexStore.append` seals delta shards through the builder's encode
+  path and assigns contiguous global ids; a live `ShardedIndexView`
+  picks them up with `refresh()` (no reopen) and serves them;
+- `IndexStore.delete` writes a durable tombstone bitmap; deleted ids
+  never surface in search results after a refresh, with coverage intact
+  (masking happens inside the fused scan, not by dropping shards);
+- a mutated view's search is bit-identical (scores, and ids through the
+  survivor mapping) to a view over the compacted store, on both
+  backends;
+- compaction is byte-identical to `IndexStore.save`'s writer path over
+  the survivor arrays, fsck-clean, resumable after a kill, and never
+  unlinks — gc runs after the last pinned reader releases;
+- concurrent append/delete/query threads never observe a deleted id
+  once the delete published before their refresh (snapshot isolation).
+"""
+import json
+import shutil
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qinco2 import tiny
+from repro.core import search, training
+from repro.index import Compactor, IndexStore, ShardedIndexView
+from repro.index.codes import PackedCodes
+from repro.index.fsck import fsck_store
+
+from conftest import clustered
+
+
+SEARCH_KW = dict(n_probe=4, n_short_aq=16, n_short_pw=8, topk=3)
+SHARD_FILES = ("codes.u8", "assign.i32", "aq_norms.f32", "pw_norms.f32",
+               "checksums.json")
+# survivors of _mutate: avoid row 0 (bucket-table padding ids resolve to
+# row 0, so deleting it would surface id 0 through starved shortlists)
+DELETED = [5, 10, 600, 1100, 1200]
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    """Clustered database -> saved store (4 shards) + appendable rows."""
+    rng = np.random.default_rng(21)
+    xb = clustered(rng, 1100, 16, k=16)
+    cfg = tiny(epochs=1)
+    params = training.init_qinco2(jax.random.key(1), xb[:400], cfg)
+    idx = search.build_index(jax.random.key(2), jnp.asarray(xb), params, cfg,
+                             k_ivf=8, m_tilde=2, n_pair_books=4,
+                             encode_chunk=512)
+    store_dir = tmp_path_factory.mktemp("store") / "idx"
+    IndexStore.save(store_dir, idx, shard_size=300)
+    xa = clustered(np.random.default_rng(7), 150, 16, k=16)
+    q = jnp.asarray(xb[:13] + 0.02)
+    return xb, xa, cfg, store_dir, q
+
+
+def _copy(world, tmp_path, name="m"):
+    _, _, _, store_dir, _ = world
+    dst = tmp_path / name
+    shutil.copytree(store_dir, dst)
+    return dst
+
+
+def _mutate(world, tmp_path):
+    """Fresh copy of the base store with 150 appends + 5 deletes."""
+    _, xa, _, _, _ = world
+    d = _copy(world, tmp_path)
+    store = IndexStore(d)
+    gids = store.append(xa)
+    np.testing.assert_array_equal(gids, np.arange(1100, 1250))
+    assert store.delete(DELETED) == len(DELETED)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# append / delete / refresh on a live view
+# ---------------------------------------------------------------------------
+
+
+def test_append_is_searchable_after_refresh(world, tmp_path):
+    xb, xa, cfg, _, q = world
+    d = _copy(world, tmp_path)
+    view = ShardedIndexView(d, max_resident_shards=2)
+    base_ids = list(view.shard_ids)
+    i0, s0 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+
+    store = IndexStore(d)
+    gids = store.append(xa)
+    assert store.mutated and store.total_rows() == 1250
+    assert view.n_rows == 1100                   # not visible until refresh
+    assert view.refresh() is True
+    assert view.refresh() is False               # idempotent
+    assert view.n_rows == 1250
+    assert view.shard_ids == sorted(base_ids + [-1])   # delta token
+
+    # a query aimed at an appended vector finds its new global id
+    qn = jnp.asarray(xa[3:4] + 0.01)
+    ia, _ = search.search_sharded(view, qn, cfg=cfg, **SEARCH_KW)
+    assert int(gids[3]) in np.asarray(ia)[0]
+    # untouched queries: appended rows may only ADD candidates, and the
+    # base rows' scores are unchanged — the old top-1 keeps its score
+    i1, s1 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    keep = np.asarray(i1)[:, 0] == np.asarray(i0)[:, 0]
+    np.testing.assert_array_equal(np.asarray(s1)[keep, 0],
+                                  np.asarray(s0)[keep, 0])
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_deleted_ids_never_returned(world, tmp_path, backend):
+    _, _, cfg, _, q = world
+    store = _mutate(world, tmp_path)
+    view = ShardedIndexView(store.dir, max_resident_shards=2)
+    assert view.n_alive == 1245
+    ids, _, cov = search.search_sharded(
+        view, q, cfg=cfg, backend=backend, return_coverage=True,
+        n_probe=8, n_short_aq=64, n_short_pw=16, topk=10)
+    assert not np.isin(np.asarray(ids), DELETED).any()
+    np.testing.assert_array_equal(np.asarray(cov), 1.0)  # masked, not skipped
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_mutated_search_matches_compacted(world, tmp_path, backend):
+    """Masked gross-rank scan over deltas+tombstones == the scan over the
+    compacted store: scores bit-equal, ids equal through the survivor
+    mapping. Compaction itself is byte-identical to a fresh write of the
+    survivors (test below), so this transitively pins the mutated path
+    to 'what a rebuilt store would answer'."""
+    _, _, cfg, _, q = world
+    store = _mutate(world, tmp_path)
+    survivors = np.flatnonzero(~store.tombstone_bits())
+    live = ShardedIndexView(store.dir, max_resident_shards=2)
+
+    cdir = tmp_path / "compacted"
+    shutil.copytree(store.dir, cdir)
+    rep = Compactor(cdir).run()
+    assert rep["compacted"] and rep["generation"] == 1
+    cview = ShardedIndexView(cdir, max_resident_shards=2)
+
+    kw = dict(cfg=cfg, backend=backend, **SEARCH_KW)
+    i1, s1 = search.search_sharded(live, q, **kw)
+    i2, s2 = search.search_sharded(cview, q, **kw)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    finite = np.asarray(s2) > -np.inf
+    np.testing.assert_array_equal(np.asarray(i1)[finite],
+                                  survivors[np.asarray(i2)[finite]])
+
+
+def test_gather_rows_spans_deltas(world, tmp_path):
+    store = _mutate(world, tmp_path)
+    view = ShardedIndexView(store.dir)
+    codes, assign, pw = view.gather_rows(np.array([[0, 1099, 1100, 1249]]))
+    delta = store.open_delta(0)
+    np.testing.assert_array_equal(codes[0, 2], delta["codes"][0])
+    np.testing.assert_array_equal(codes[0, 3], delta["codes"][149])
+    with pytest.raises(ValueError, match="beyond the served rows"):
+        view.gather_rows(np.array([[1250]]))
+
+
+# ---------------------------------------------------------------------------
+# compaction: byte identity, kill/resume, gc
+# ---------------------------------------------------------------------------
+
+
+def test_compaction_byte_identical_to_fresh_write(world, tmp_path):
+    _, _, cfg, _, _ = world
+    store = _mutate(world, tmp_path)
+    bits = store.tombstone_bits()
+    surv = Compactor(store)._gather_survivors(bits)
+    m0 = dict(store.manifest)
+    rep = Compactor(store).run()
+    assert rep == {"compacted": True, "generation": 1, "n_alive": 1245,
+                   "rows_dropped": 5, "shards_written": 5, "shards_total": 5}
+
+    # reference: the same writer path IndexStore.save uses, over the
+    # survivor arrays
+    ref = IndexStore(tmp_path / "ref")
+    ref.initialize(cfg=cfg, global_tree=store.load_global_tree(),
+                   n_total=len(surv["assign"]), shard_size=m0["shard_size"],
+                   k_ivf=m0["k_ivf"], cap=m0["cap"],
+                   pw_pairs=m0["pw_pairs"])
+    for sid in range(ref.manifest["n_shards"]):
+        lo = sid * m0["shard_size"]
+        hi = lo + ref.shard_rows(sid)
+        ref.write_shard(sid, codes=PackedCodes(surv["codes"][lo:hi],
+                                               m0["K"]),
+                        assign=surv["assign"][lo:hi],
+                        aq_norms=surv["aq_norms"][lo:hi],
+                        pw_norms=surv["pw_norms"][lo:hi])
+    ref.finalize()
+    gen = store.dir / "shards" / "gen_001"
+    for sid in range(rep["shards_total"]):
+        for f in SHARD_FILES:
+            assert (gen / f"shard_{sid:05d}" / f).read_bytes() == \
+                (ref.dir / "shards" / f"shard_{sid:05d}" / f).read_bytes(), \
+                f"shard {sid} {f} diverged from the fresh-write reference"
+
+    assert fsck_store(store.dir, log=lambda *a: None)["ok"]
+    assert store.orphan_paths()                  # compactor never unlinks
+    store.gc_orphans()
+    assert store.orphan_paths() == []
+    assert not store.mutated
+    assert store.load().codes.shape[0] == 1245   # clean store loads again
+
+
+def test_compaction_kill_resume(world, tmp_path):
+    _, _, cfg, _, q = world
+    store = _mutate(world, tmp_path)
+    r1 = Compactor(store).run(max_shards=2)
+    assert r1["partial"] and r1["shards_written"] == 2
+    # mid-compaction: fsck clean (cursor warning only), still serveable
+    rep = fsck_store(store.dir, log=lambda *a: None)
+    assert rep["ok"] and any("in progress" in w for w in rep["warnings"])
+    view = ShardedIndexView(store.dir, max_resident_shards=2)
+    ids, _ = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    assert not np.isin(np.asarray(ids), DELETED).any()
+
+    survivors = np.flatnonzero(~store.tombstone_bits())
+    r2 = Compactor(store).run()                  # resume publishes the rest
+    assert r2["compacted"] and r2["shards_written"] == 3
+    assert store.read_compact_cursor() is None
+    assert fsck_store(store.dir, log=lambda *a: None)["ok"]
+    assert view.refresh() and view.generation == 1
+    # compaction renumbers ids to survivor positions: map back before
+    # asserting the deleted rows stayed gone
+    ids2, s2 = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    finite = np.asarray(s2) > -np.inf
+    orig = survivors[np.asarray(ids2)[finite]]
+    assert not np.isin(orig, DELETED).any()
+
+
+def test_stale_cursor_restarts_cleanly(world, tmp_path):
+    """More mutations landing between a partial run and its resume fold a
+    different row set: the signature mismatch wipes the partial target
+    generation instead of committing a mix."""
+    _, xa, _, _, _ = world
+    store = _mutate(world, tmp_path)
+    Compactor(store).run(max_shards=1)
+    store.delete([20])                           # mutation set moved on
+    rep = Compactor(store).run()
+    assert rep["compacted"] and rep["n_alive"] == 1244
+    assert rep["shards_written"] == rep["shards_total"]  # nothing reused
+    assert fsck_store(store.dir, log=lambda *a: None)["ok"]
+
+
+def test_refresh_pins_snapshot_until_released(world, tmp_path):
+    """A pinned pre-compaction state keeps reading its own generation's
+    files; gc of the superseded generation waits for the unpin."""
+    _, _, cfg, _, _ = world
+    store = _mutate(world, tmp_path)
+    view = ShardedIndexView(store.dir, max_resident_shards=2)
+    owner0 = view._owner
+    vst = view.pin()
+    gids = np.array([[1, 700, 1149]])
+    before = view.gather_rows(gids, vst)
+
+    Compactor(store).run()
+    assert view.refresh() and view.generation == 1
+    assert view._owner != owner0                 # new pool namespace
+    # the pinned snapshot still answers from the old generation's files
+    after = [np.asarray(a) for a in view.gather_rows(gids, vst)]
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), b)
+    assert any(p.name.startswith("shard_")
+               for p in store.orphan_paths())    # gc deferred while pinned
+    view.unpin(vst)
+    assert store.orphan_paths() == []            # unlink-after-release
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+
+
+def test_load_refuses_mutated_store(world, tmp_path):
+    store = _mutate(world, tmp_path)
+    with pytest.raises(ValueError, match="uncompacted mutation state"):
+        store.load()
+
+
+def test_append_delete_validation(world, tmp_path):
+    _, xa, _, _, _ = world
+    d = _copy(world, tmp_path)
+    store = IndexStore(d)
+    with pytest.raises(ValueError, match="dim"):
+        store.append(np.zeros((3, 5), np.float32))
+    assert store.append(np.zeros((0, 16), np.float32)).size == 0
+    with pytest.raises(ValueError, match="outside"):
+        store.delete([1100])                     # no deltas yet: n=1100
+    with pytest.raises(ValueError, match="outside"):
+        store.delete([-1])
+    # incomplete stores refuse mutation (builder still owns them)
+    m = json.loads(store.manifest_path.read_text())
+    store.manifest_path.write_text(json.dumps(dict(m, complete=False)))
+    store.reload_manifest()
+    with pytest.raises(ValueError, match="incomplete"):
+        store.append(xa)
+
+
+def test_fsck_flags_corrupt_delta_and_tombstone(world, tmp_path):
+    store = _mutate(world, tmp_path)
+    p = store.delta_dir(0) / "aq_norms.f32"
+    b = bytearray(p.read_bytes())
+    b[7] ^= 0xFF
+    p.write_bytes(bytes(b))
+    rep = fsck_store(store.dir, log=lambda *a: None)
+    assert not rep["ok"] and rep["deltas_corrupt"] == [0]
+    b[7] ^= 0xFF
+    p.write_bytes(bytes(b))
+
+    t = store.tombstone_path(0)
+    raw = bytearray(t.read_bytes())
+    raw[0] ^= 0xFF
+    t.write_bytes(bytes(raw))
+    rep = fsck_store(store.dir, log=lambda *a: None)
+    assert not rep["ok"] and any("tombstone" in e for e in rep["errors"])
+
+
+# ---------------------------------------------------------------------------
+# concurrency: snapshot isolation under churn
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_mutation_never_resurrects_deletes(world, tmp_path):
+    """Mutator thread appends + deletes while query threads refresh and
+    search: an id whose delete published BEFORE a thread's refresh never
+    appears in that thread's results. (Queries pinned to an older
+    snapshot may legitimately still see fresher deletes' rows — that is
+    snapshot isolation, not a bug.)"""
+    _, xa, cfg, _, q = world
+    d = _copy(world, tmp_path)
+    view = ShardedIndexView(d, max_resident_shards=2)
+    search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)  # warm the jit
+
+    published = set()
+    lock = threading.Lock()
+    failures = []
+    done = threading.Event()
+
+    def mutator():
+        store = IndexStore(d)
+        rng = np.random.default_rng(3)
+        base = 1100
+        try:
+            for step in range(4):
+                store.append(xa[step * 30:(step + 1) * 30])
+                base += 30
+                victims = rng.integers(1, base, size=3).tolist()
+                newly = store.delete(victims)
+                assert newly >= 0
+                with lock:                       # durable before visible
+                    published.update(victims)
+        except Exception as e:                   # surface in the main thread
+            failures.append(f"mutator: {e!r}")
+        finally:
+            done.set()
+
+    def querier(seed):
+        try:
+            final_pass = False
+            while True:
+                if done.is_set():
+                    final_pass = True            # one sweep past the last
+                with lock:                       # delete, then stop
+                    must_miss = set(published)
+                view.refresh()
+                ids, _ = search.search_sharded(view, q, cfg=cfg,
+                                               **SEARCH_KW)
+                hit = set(np.asarray(ids).ravel().tolist()) & must_miss
+                if hit:
+                    failures.append(f"querier {seed}: deleted ids {hit} "
+                                    f"returned")
+                    return
+                if final_pass:
+                    return
+        except Exception as e:
+            failures.append(f"querier {seed}: {e!r}")
+
+    threads = [threading.Thread(target=mutator)] + \
+        [threading.Thread(target=querier, args=(s,)) for s in (11, 12)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert failures == []
+
+    # quiesce: compact + refresh; deletes stay gone (ids renumber to
+    # survivor positions, so map back before checking)
+    store = IndexStore(d)
+    survivors = np.flatnonzero(~store.tombstone_bits())
+    Compactor(store).run()
+    assert view.refresh() and view.generation == 1
+    ids, s = search.search_sharded(view, q, cfg=cfg, **SEARCH_KW)
+    finite = np.asarray(s) > -np.inf
+    orig = set(survivors[np.asarray(ids)[finite]].tolist())
+    assert not (orig & published)
+    assert fsck_store(d, log=lambda *a: None)["ok"]
